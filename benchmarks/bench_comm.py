@@ -1,0 +1,75 @@
+"""Table III — average communication overhead (MB, smaller is better).
+
+The ledger (repro.core.comm_model) reproduces the paper's accounting:
+model params down+up for selected clients, loss polling, one-time
+histograms.  FedLECC's advantage appears when it reaches a target
+accuracy with a smaller participation budget — we report both the
+per-round MB at the paper's m and the MB-to-target-accuracy from the
+shared simulation runs.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.fl_common import FAST_METHODS, METHODS, ensure_runs
+from repro.federated.simulation import rounds_to_accuracy
+
+
+def main(full: bool = False, rounds: int | None = None, target: float = 0.5) -> list[tuple]:
+    methods = list(METHODS) if full else FAST_METHODS
+    seeds = [0, 1] if full else [0]
+    rounds = rounds or (100 if full else 60)
+    runs = ensure_runs(methods, seeds, rounds)
+    rows = []
+    for method in methods:
+        cells = [r for r in runs if r["method"] == method]
+        per_round = np.mean(
+            [r["history"]["comm_mb"][-1] / rounds for r in cells]
+        )
+        # MB spent until the target accuracy was first reached
+        mbs = []
+        for r in cells:
+            h = r["history"]
+            rt = rounds_to_accuracy(h, target)
+            if rt is None:
+                mbs.append(float("nan"))
+            else:
+                i = h["round"].index(rt)
+                mbs.append(h["comm_mb"][i])
+        mb_to_target = float(np.nanmean(mbs)) if not all(np.isnan(mbs)) else float("nan")
+        rows.append(
+            (
+                f"table3_comm/{method}",
+                0.0,
+                f"mb_per_round={per_round:.2f};mb_to_acc{target}={mb_to_target:.1f}",
+            )
+        )
+
+    # The paper's Table III headline (−50% overhead) comes from FedLECC
+    # operating at a REDUCED participation budget: m=4 vs the baselines'
+    # m=10 — fewer but better-chosen clients.
+    small = ensure_runs(["fedlecc"], seeds, rounds, m=4)
+    if small:
+        per_round = np.mean([r["history"]["comm_mb"][-1] / rounds for r in small])
+        accs = [r["history"]["test_acc"][-1] for r in small]
+        mbs = []
+        for r in small:
+            h = r["history"]
+            rt = rounds_to_accuracy(h, target)
+            mbs.append(h["comm_mb"][h["round"].index(rt)] if rt is not None else float("nan"))
+        mb_t = float(np.nanmean(mbs)) if not all(np.isnan(mbs)) else float("nan")
+        rows.append(
+            (
+                "table3_comm/fedlecc_m4",
+                0.0,
+                f"mb_per_round={per_round:.2f};mb_to_acc{target}={mb_t:.1f};"
+                f"final_acc={np.mean(accs):.3f}",
+            )
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(str(x) for x in r))

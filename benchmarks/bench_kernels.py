@@ -1,0 +1,59 @@
+"""Kernel-substrate micro-benchmarks (CPU reference timings of the jit'd
+pure-JAX twins; the Pallas kernels themselves are TPU-target and are
+validated, not timed, on this container)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hellinger import hellinger_matrix
+from repro.federated.aggregation import fedavg
+from repro.models.attention import flash_attention
+
+
+def _time(fn, reps=10):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main(full: bool = False) -> list[tuple]:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    h = jnp.asarray(rng.dirichlet(np.ones(10) * 0.1, size=256))
+    f = jax.jit(hellinger_matrix)
+    rows.append(("kernel/hellinger_jnp_256x10",
+                 round(_time(lambda: jax.block_until_ready(f(h))), 1),
+                 "256x256 HD matrix"))
+
+    b, s, hh, d = 1, 1024, 4, 64
+    q = jnp.asarray(rng.normal(0, 1, (b, s, hh, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (b, s, hh, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (b, s, hh, d)), jnp.float32)
+    fa = jax.jit(lambda q, k, v: flash_attention(q, k, v, chunk_q=256, chunk_k=256))
+    flops = 4 * b * hh * s * s * d
+    us = _time(lambda: jax.block_until_ready(fa(q, k, v)), reps=5)
+    rows.append(("kernel/flash_attention_1k",
+                 round(us, 1), f"gflops={flops / us / 1e3:.2f}"))
+
+    stacked = {"w": jnp.asarray(rng.normal(0, 1, (10, 200, 1000)), jnp.float32)}
+    w = jnp.asarray(rng.uniform(0, 1, 10), jnp.float32)
+    w = w / w.sum()
+    ag = jax.jit(fedavg)
+    us = _time(lambda: jax.block_until_ready(ag(stacked, w)["w"]))
+    mb = 10 * 200 * 1000 * 4 / 1e6
+    rows.append(("kernel/fedavg_reduce_2M",
+                 round(us, 1), f"gbps={mb / us * 1e3 / 1e3:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,52 @@
+"""Fig 3 — learning curves / rounds-to-accuracy (the −22%-rounds claim).
+
+Reports, per method, the first round at which each target accuracy is
+reached, and FedLECC's saving relative to FedAvg.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.fl_common import FAST_METHODS, METHODS, ensure_runs
+from repro.federated.simulation import rounds_to_accuracy
+
+
+def main(full: bool = False, rounds: int | None = None,
+         targets=(0.4, 0.5, 0.6)) -> list[tuple]:
+    methods = list(METHODS) if full else FAST_METHODS
+    seeds = [0, 1] if full else [0]
+    rounds = rounds or (100 if full else 60)
+    runs = ensure_runs(methods, seeds, rounds)
+    per_method: dict[str, list[float]] = {}
+    rows = []
+    for method in methods:
+        cells = [r for r in runs if r["method"] == method]
+        reached = []
+        for t in targets:
+            rts = [rounds_to_accuracy(r["history"], t) for r in cells]
+            rts = [r_ for r_ in rts if r_ is not None]
+            reached.append(float(np.mean(rts)) if rts else float("nan"))
+        per_method[method] = reached
+        detail = ";".join(
+            f"r@{t}={v:.0f}" if np.isfinite(v) else f"r@{t}=never"
+            for t, v in zip(targets, reached)
+        )
+        rows.append((f"fig3_rounds/{method}", 0.0, detail))
+    if "fedavg" in per_method and "fedlecc" in per_method:
+        savings = [
+            1 - l / f
+            for l, f in zip(per_method["fedlecc"], per_method["fedavg"])
+            if np.isfinite(l) and np.isfinite(f) and f > 0
+        ]
+        if savings:
+            rows.append(
+                ("fig3_rounds/fedlecc_vs_fedavg_saving", 0.0,
+                 f"mean_round_saving={np.mean(savings):.1%}")
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(str(x) for x in r))

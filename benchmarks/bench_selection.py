@@ -1,0 +1,67 @@
+"""Selection-stage cost — the paper's "lightweight" claim.
+
+Times each server-side stage (HD matrix, OPTICS, Algorithm 1, baselines)
+at the paper's scales K ∈ {100, 250}.  All stages are O(K²) or better
+and sit in the microsecond-to-millisecond band — vanishingly small next
+to a training round.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.clustering import extract_clusters, optics
+from repro.core.hellinger import hellinger_matrix
+from repro.core.selection import fedlecc_select, fedlecc_select_jax
+
+
+def _time(fn, reps=20):
+    fn()  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def main(full: bool = False) -> list[tuple]:
+    rows = []
+    for K in (100, 250):
+        rng = np.random.default_rng(K)
+        hists = rng.dirichlet(np.ones(10) * 0.1, size=K)
+        h_j = jnp.asarray(hists)
+
+        t_hd = _time(lambda: jax.block_until_ready(hellinger_matrix(h_j)))
+        d = hellinger_matrix(h_j)
+        t_optics = _time(lambda: jax.block_until_ready(optics(d).reachability))
+        res = optics(d)
+        t_extract = _time(lambda: extract_clusters(res))
+        labels = extract_clusters(res)
+        losses = rng.uniform(0.5, 3.0, K).astype(np.float32)
+        t_select = _time(lambda: fedlecc_select(labels, losses, m=10, J=5))
+        nclu = int(labels.max()) + 1
+        lab_j, los_j = jnp.asarray(labels), jnp.asarray(losses)
+        t_select_jax = _time(
+            lambda: jax.block_until_ready(
+                fedlecc_select_jax(lab_j, los_j, m=10, J=min(5, nclu), n_clusters=nclu)
+            )
+        )
+        total = t_hd + t_optics + t_extract + t_select
+        rows += [
+            (f"selection/hellinger_K{K}", round(t_hd, 1), f"K={K};C=10"),
+            (f"selection/optics_K{K}", round(t_optics, 1), f"clusters={nclu}"),
+            (f"selection/extract_K{K}", round(t_extract, 1), ""),
+            (f"selection/algorithm1_K{K}", round(t_select, 1), "numpy"),
+            (f"selection/algorithm1_jax_K{K}", round(t_select_jax, 1), "jit"),
+            (f"selection/total_stage_K{K}", round(total, 1),
+             "one-time clustering amortized over rounds"),
+        ]
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,142 @@
+"""Roofline analysis (EXPERIMENTS.md §Roofline) from results/dryrun.jsonl.
+
+Per (arch × shape) on the single-pod mesh (256 chips):
+
+  compute term    = HLO_FLOPs / (chips × 197e12 FLOP/s bf16)
+  memory term     = HLO_bytes / (chips × 819e9 B/s HBM)
+  collective term = collective_bytes × ring_factor / (chips × 50e9 B/s link)
+
+HLO_FLOPs / HLO_bytes / collective_bytes are the loop-corrected totals
+from the probe lowers (dryrun.probe_costs; XLA cost_analysis counts scan
+bodies once, so the production scan lowering under-reports — see the
+methodology note in EXPERIMENTS.md §Dry-run).  cost_analysis numbers are
+per-device executables, so terms are per-chip directly (no ÷chips).
+
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE), D = tokens processed.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+PEAK_FLOPS = 197e12          # bf16 per chip (TPU v5e)
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link
+RING = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+        "all-to-all": 1.0, "collective-permute": 1.0}
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun.jsonl")
+
+# active params (N) per arch; tokens per shape computed from the shape
+N_PARAMS = {
+    "deepseek-v3-671b": 37e9,   # active (671B total, top-8+shared of 256)
+    "glm4-9b": 9e9,
+    "hymba-1.5b": 1.5e9,
+    "stablelm-3b": 3e9,
+    "musicgen-large": 1.5e9,
+    "internvl2-1b": 0.8e9,
+    "dbrx-132b": 36e9,          # active (132B total, top-4 of 16)
+    "xlstm-125m": 0.125e9,
+    "qwen3-14b": 14e9,
+    "gemma3-27b": 27e9,
+}
+TOKENS = {"train_4k": 256 * 4096, "prefill_32k": 32 * 32768,
+          "decode_32k": 128, "long_500k": 1}
+
+
+def load(path: str = RESULTS) -> list[dict]:
+    rows = []
+    if not os.path.exists(path):
+        return rows
+    with open(path) as f:
+        for line in f:
+            try:
+                rows.append(json.loads(line))
+            except json.JSONDecodeError:
+                pass
+    return rows
+
+
+def analyze(rec: dict) -> dict | None:
+    if rec.get("error") or rec.get("mesh") != "single":
+        return None
+    probes = rec.get("probes") or {}
+    total = probes.get("total") if isinstance(probes, dict) else None
+    if not total:  # fall back to raw (under-reported) numbers, flagged
+        total = {"flops": rec["flops"], "bytes": rec["bytes_accessed"],
+                 "coll": rec["collective_bytes"]}
+        corrected = False
+    else:
+        corrected = True
+    t_comp = total["flops"] / PEAK_FLOPS
+    t_mem = total["bytes"] / HBM_BW
+    coll_line = sum(RING.get(k, 1.0) * v for k, v in total["coll"].items())
+    t_coll = coll_line / ICI_BW
+    dom = max(("compute", t_comp), ("memory", t_mem), ("collective", t_coll),
+              key=lambda kv: kv[1])[0]
+    n_dev = rec.get("n_devices", 256)
+    # 6·N·D for training (fwd 2ND + bwd 4ND); 2·N·D inference-only
+    mult = 6.0 if rec["kind"] == "train" else 2.0
+    model_flops = mult * N_PARAMS[rec["arch"]] * TOKENS[rec["shape"]] / n_dev
+    ratio = model_flops / total["flops"] if total["flops"] else float("nan")
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "kind": rec["kind"],
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dom,
+        "model_flops_per_dev": model_flops,
+        "hlo_flops_per_dev": total["flops"],
+        "useful_ratio": ratio,
+        "corrected": corrected,
+        "mem_temp_gb": rec["memory"]["temp_size"] / 2**30,
+        "mem_args_gb": rec["memory"]["argument_size"] / 2**30,
+    }
+
+
+def table(rows: list[dict]) -> str:
+    hdr = (f"| {'arch':22s} | {'shape':11s} | {'compute s':>10s} | "
+           f"{'memory s':>10s} | {'collect s':>10s} | {'bound':>10s} | "
+           f"{'useful':>7s} | {'args GB':>8s} |")
+    sep = "|" + "-" * (len(hdr) - 2) + "|"
+    out = [hdr, sep]
+    for r in rows:
+        out.append(
+            f"| {r['arch']:22s} | {r['shape']:11s} | {r['t_compute_s']:10.3e} | "
+            f"{r['t_memory_s']:10.3e} | {r['t_collective_s']:10.3e} | "
+            f"{r['dominant']:>10s} | {r['useful_ratio']:7.2f} | "
+            f"{r['mem_args_gb']:8.2f} |"
+        )
+    return "\n".join(out)
+
+
+def main(full: bool = False) -> list[tuple]:
+    recs = load()
+    rows = [a for a in (analyze(r) for r in recs) if a]
+    # de-dup (keep last per arch×shape)
+    seen = {}
+    for r in rows:
+        seen[(r["arch"], r["shape"])] = r
+    rows = sorted(seen.values(), key=lambda r: (r["shape"], r["arch"]))
+    out = []
+    for r in rows:
+        t_dom = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        out.append(
+            (
+                f"roofline/{r['arch']}/{r['shape']}",
+                round(t_dom * 1e6, 1),     # dominant-term us per step
+                f"bound={r['dominant']};useful={r['useful_ratio']:.2f};"
+                f"comp={r['t_compute_s']:.2e};mem={r['t_memory_s']:.2e};"
+                f"coll={r['t_collective_s']:.2e}",
+            )
+        )
+    os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
+    with open(os.path.join(os.path.dirname(RESULTS), "roofline.md"), "w") as f:
+        f.write(table(rows) + "\n")
+    return out
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(str(x) for x in r))

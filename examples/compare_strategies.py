@@ -1,0 +1,47 @@
+"""Mini Table II/III: FedLECC vs baselines under severe label skew.
+
+Runs {FedAvg(random), POC, FedLECC} on the same partition/seed and prints
+final accuracy, rounds-to-50%, and communication — the paper's three
+claims in one table.  (~5 min on CPU; add methods to METHODS for more.)
+
+    PYTHONPATH=src python examples/compare_strategies.py
+"""
+
+import numpy as np
+
+from repro.data import make_classification
+from repro.federated import FLConfig, FederatedSimulation
+from repro.federated.simulation import rounds_to_accuracy
+
+METHODS = {
+    "fedavg": dict(strategy="random"),
+    "poc": dict(strategy="poc"),
+    "fedlecc": dict(strategy="fedlecc", strategy_kwargs={"J": 5}),
+}
+
+
+def main(rounds: int = 60):
+    train = make_classification(15_000, seed=0)
+    test = make_classification(2_000, seed=1)
+    rows = []
+    for name, kw in METHODS.items():
+        cfg = FLConfig(n_clients=60, m=8, rounds=rounds, eval_every=5,
+                       target_hd=0.9, seed=0, **kw)
+        sim = FederatedSimulation(cfg, train, test, n_classes=10)
+        h = sim.run()
+        rows.append((name, h["test_acc"][-1], rounds_to_accuracy(h, 0.5),
+                     h["comm_mb"][-1]))
+        print(f"{name:8s} done: acc={rows[-1][1]:.4f}")
+
+    print(f"\n{'method':8s} {'final_acc':>9s} {'rounds@0.5':>10s} {'comm_MB':>8s}")
+    for name, acc, r50, mb in rows:
+        print(f"{name:8s} {acc:9.4f} {str(r50 or 'never'):>10s} {mb:8.1f}")
+    base = rows[0]
+    ours = rows[-1]
+    if base[2] and ours[2]:
+        print(f"\nFedLECC reaches 50% in {1 - ours[2]/base[2]:.0%} fewer rounds "
+              f"than FedAvg (paper claims ~22%)")
+
+
+if __name__ == "__main__":
+    main()

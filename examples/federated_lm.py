@@ -1,0 +1,88 @@
+"""Federated language-model training: FedLECC selecting over LM clients.
+
+The scale-out story of DESIGN.md §3 in miniature: K clients each hold a
+token stream with *topic skew* (distinct Markov transition tables play
+the role of label skew); per round FedLECC clusters clients by their
+token-histogram Hellinger distances and selects the highest-loss
+clusters; selected clients run local steps on a reduced xlstm-125m; the
+server aggregates with the Pallas-validated masked weighted reduce.
+
+    PYTHONPATH=src python examples/federated_lm.py [--rounds 8]
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.strategies import get_strategy
+from repro.data.synthetic import make_token_stream
+from repro.federated.aggregation import fedavg
+from repro.models.transformer import init_transformer, loss_fn
+
+
+def main(rounds: int = 8, K: int = 12, m: int = 4, local_steps: int = 4):
+    cfg = get_config("xlstm-125m", reduced=True)
+    params = init_transformer(jax.random.PRNGKey(0), cfg)
+
+    # K clients, 3 "topics": clients of one topic share a Markov table
+    topics = np.random.default_rng(0).integers(0, 3, K)
+    data = [
+        make_token_stream(64, 128, cfg.vocab, seed=100 + int(t))
+        for t in topics
+    ]
+    # token histograms ≈ label distributions for clustering
+    hists = np.stack([
+        np.bincount(d.x.ravel() % 64, minlength=64) for d in data
+    ]).astype(np.float64)
+
+    strat = get_strategy("fedlecc", m=m, J=3)
+    strat.setup(hists, np.full(K, 64 * 128), seed=0)
+    print(f"clusters found: {strat.n_clusters} (3 topics planted)")
+
+    @jax.jit
+    def local_train(p, x, y):
+        def step(p, _):
+            def loss(q):
+                return loss_fn(q, cfg, {"tokens": x, "labels": y})[0]
+            l, g = jax.value_and_grad(loss)(p)
+            p = jax.tree.map(lambda w, gw: (w - 0.05 * gw).astype(w.dtype), p, g)
+            return p, l
+        p, losses = jax.lax.scan(step, p, None, length=local_steps)
+        return p, losses.mean()
+
+    @jax.jit
+    def eval_loss(p, x, y):
+        return loss_fn(p, cfg, {"tokens": x, "labels": y})[0]
+
+    rng = np.random.default_rng(0)
+    for rnd in range(rounds):
+        losses = np.array([
+            float(eval_loss(params, jnp.asarray(d.x[:8]), jnp.asarray(d.y[:8])))
+            for d in data
+        ])
+        sel = strat.select(rnd, losses, rng)
+        locals_, locloss = [], []
+        for i in sel:
+            d = data[int(i)]
+            b = rng.integers(0, 56)
+            p_i, l_i = local_train(params, jnp.asarray(d.x[b:b+8]), jnp.asarray(d.y[b:b+8]))
+            locals_.append(p_i)
+            locloss.append(float(l_i))
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *locals_)
+        w = jnp.full((len(sel),), 1.0 / len(sel))
+        params = fedavg(stacked, w)
+        print(f"round {rnd}: selected {sel.tolist()} "
+              f"(topics {[int(topics[i]) for i in sel]}) "
+              f"mean_local_loss={np.mean(locloss):.3f} "
+              f"global_loss={losses.mean():.3f}")
+    print("done — global loss should be trending down across rounds")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=8)
+    args = ap.parse_args()
+    main(rounds=args.rounds)

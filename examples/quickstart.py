@@ -1,0 +1,46 @@
+"""Quickstart: FedLECC on synthetic label-skewed data in ~2 minutes (CPU).
+
+Builds the paper's setting end-to-end: 40 clients, Dirichlet label skew
+calibrated to HD≈0.85, MLP, SGD — then runs 30 federated rounds with
+FedLECC selection and prints the learning curve + communication ledger.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.data import make_classification
+from repro.federated import FLConfig, FederatedSimulation
+
+
+def main():
+    train = make_classification(10_000, seed=0)
+    test = make_classification(2_000, seed=1)
+
+    cfg = FLConfig(
+        n_clients=40,
+        m=6,                      # participants per round
+        rounds=30,
+        strategy="fedlecc",
+        strategy_kwargs={"J": 4},  # clusters per round
+        target_hd=0.85,           # severe label skew
+        eval_every=5,
+        seed=0,
+    )
+    sim = FederatedSimulation(cfg, train, test, n_classes=10)
+    kind = "shards/client" if cfg.partition == "shards" else "Dirichlet alpha"
+    print(f"partition: {kind}={sim.alpha:g}  "
+          f"OPTICS found J_max={sim.strategy.n_clusters} clusters")
+
+    hist = sim.run(log_every=5)
+
+    print("\nround  test_acc  comm_MB")
+    for r, a, c in zip(hist["round"], hist["test_acc"], hist["comm_mb"]):
+        print(f"{r:5d}  {a:8.4f}  {c:7.1f}")
+    print(f"\nfinal accuracy: {hist['test_acc'][-1]:.4f}")
+    print(f"total communication: {hist['comm_mb'][-1]:.1f} MB "
+          f"(vs {sim.comm.total_mb(30, 40, False, False):.1f} MB full participation)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""repro — a JAX federated-learning framework built around FedLECC.
+
+FedLECC (Jimenez-Gutierrez et al., 2026) is a cluster- and loss-guided
+client-selection strategy for cross-device FL under label skew.  This
+package implements it as a first-class feature of a multi-pod JAX
+training/serving framework:
+
+- ``repro.core``       — the paper's contribution (HD, OPTICS, Algorithm 1,
+                         baseline selection strategies, comm accounting)
+- ``repro.federated``  — FL runtime (vmapped simulation + mesh scale-out)
+- ``repro.models``     — composable model zoo (dense/MoE/SSM/hybrid/audio/vlm)
+- ``repro.data``       — synthetic datasets + Dirichlet label-skew partitioner
+- ``repro.optim``      — SGD/AdamW + FedProx/FedDyn/FedNova
+- ``repro.kernels``    — Pallas TPU kernels (hellinger, flash attention,
+                         masked aggregation) with pure-jnp oracles
+- ``repro.configs``    — assigned architecture configs + paper configs
+- ``repro.launch``     — mesh / dry-run / train / serve entry points
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,5 @@
+"""Checkpointing substrate (msgpack + raw ndarray bytes, no orbax offline)."""
+
+from repro.checkpoint.serializer import save_checkpoint, load_checkpoint
+
+__all__ = ["save_checkpoint", "load_checkpoint"]

@@ -1,0 +1,70 @@
+"""Pytree checkpointing: msgpack envelope + raw little-endian array bytes.
+
+Format (msgpack map):
+  {"version": 1,
+   "treedef": <str repr used only for mismatch diagnostics>,
+   "leaves": [{"dtype": str, "shape": [..], "data": bytes}, ...],
+   "meta": {...user metadata...}}
+
+Leaves are stored in ``jax.tree.flatten`` order; ``load_checkpoint``
+restores into the structure of a caller-supplied ``like`` pytree (the
+usual "init the model, then restore" pattern), verifying dtype/shape.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import msgpack
+import numpy as np
+
+__all__ = ["save_checkpoint", "load_checkpoint"]
+
+
+def save_checkpoint(path: str, pytree: Any, meta: dict | None = None) -> None:
+    leaves, treedef = jax.tree.flatten(pytree)
+    payload = {
+        "version": 1,
+        "treedef": str(treedef),
+        "leaves": [
+            {
+                "dtype": str(np.asarray(leaf).dtype),
+                "shape": list(np.asarray(leaf).shape),
+                "data": np.ascontiguousarray(np.asarray(leaf)).tobytes(),
+            }
+            for leaf in leaves
+        ],
+        "meta": meta or {},
+    }
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)  # atomic on POSIX
+
+
+def load_checkpoint(path: str, like: Any) -> tuple[Any, dict]:
+    """Restore a checkpoint into the structure of ``like``; returns (pytree, meta)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    if payload["version"] != 1:
+        raise ValueError(f"unsupported checkpoint version {payload['version']}")
+    like_leaves, treedef = jax.tree.flatten(like)
+    stored = payload["leaves"]
+    if len(stored) != len(like_leaves):
+        raise ValueError(
+            f"leaf count mismatch: checkpoint has {len(stored)}, "
+            f"target structure has {len(like_leaves)} "
+            f"(checkpoint treedef: {payload['treedef']})"
+        )
+    out = []
+    for ref, item in zip(like_leaves, stored):
+        arr = np.frombuffer(item["data"], dtype=np.dtype(item["dtype"])).reshape(
+            item["shape"]
+        )
+        ref_arr = np.asarray(ref)
+        if tuple(arr.shape) != tuple(ref_arr.shape):
+            raise ValueError(f"shape mismatch: {arr.shape} vs {ref_arr.shape}")
+        out.append(arr.copy())
+    return jax.tree.unflatten(treedef, out), payload["meta"]

@@ -1,0 +1,30 @@
+"""Architecture configs.
+
+``get_config(name)`` returns the full assigned configuration;
+``get_config(name, reduced=True)`` returns the smoke-test variant
+(2 layers, d_model ≤ 512, ≤ 4 experts) of the same family.
+
+Every config cites its source in the module docstring.
+"""
+
+from repro.configs.base import (
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    get_config,
+    list_configs,
+    register_config,
+    INPUT_SHAPES,
+    InputShape,
+)
+
+__all__ = [
+    "ModelConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "get_config",
+    "list_configs",
+    "register_config",
+    "INPUT_SHAPES",
+    "InputShape",
+]

@@ -1,0 +1,111 @@
+"""Input construction: ShapeDtypeStruct specs (dry-run) + dummy batches
+(smoke tests) for every (arch × input shape) combination.
+
+Audio/VLM carve-out (the one permitted stub): the modality frontend is
+replaced by precomputed frame/patch embeddings of the right shape —
+``input_specs`` emits them directly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+
+__all__ = ["input_specs", "dummy_batch", "decode_specs", "dummy_decode_batch", "long_context_variant"]
+
+
+def _f(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape | str):
+    """ShapeDtypeStruct stand-ins for a *full-sequence* batch
+    (train/prefill).  For decode shapes use ``decode_specs``."""
+    if isinstance(shape, str):
+        shape = INPUT_SHAPES[shape]
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.input_mode == "tokens":
+        batch = {"tokens": _f((b, s), jnp.int32)}
+    elif cfg.input_mode == "frames":
+        batch = {"frames": _f((b, s, cfg.d_model), jnp.bfloat16)}
+    else:  # vlm: patches prefix + text tokens
+        p = cfg.n_patches
+        batch = {
+            "patches": _f((b, p, cfg.d_model), jnp.bfloat16),
+            "tokens": _f((b, s - p), jnp.int32),
+        }
+    if shape.kind == "train":
+        batch["labels"] = _f((b, s), jnp.int32)
+    return batch
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape | str):
+    """Specs for the one-token decode step (cache specs come from
+    ``repro.models.transformer.init_cache`` via eval_shape)."""
+    if isinstance(shape, str):
+        shape = INPUT_SHAPES[shape]
+    b = shape.global_batch
+    if cfg.input_mode == "frames":
+        return {"frame": _f((b, 1, cfg.d_model), jnp.bfloat16)}
+    return {"token": _f((b, 1), jnp.int32)}
+
+
+def dummy_batch(cfg: ModelConfig, batch_size: int, seq_len: int, seed: int = 0):
+    """Concrete random batch (smoke tests / examples)."""
+    rng = np.random.default_rng(seed)
+    if cfg.input_mode == "tokens":
+        batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (batch_size, seq_len)), jnp.int32)}
+    elif cfg.input_mode == "frames":
+        batch = {
+            "frames": jnp.asarray(
+                rng.normal(0, 1, (batch_size, seq_len, cfg.d_model)), jnp.dtype(cfg.dtype)
+            )
+        }
+    else:
+        p = cfg.n_patches
+        batch = {
+            "patches": jnp.asarray(
+                rng.normal(0, 1, (batch_size, p, cfg.d_model)), jnp.dtype(cfg.dtype)
+            ),
+            "tokens": jnp.asarray(
+                rng.integers(0, cfg.vocab, (batch_size, seq_len - p)), jnp.int32
+            ),
+        }
+    batch["labels"] = jnp.asarray(rng.integers(0, cfg.vocab, (batch_size, seq_len)), jnp.int32)
+    return batch
+
+
+def dummy_decode_batch(cfg: ModelConfig, batch_size: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    if cfg.input_mode == "frames":
+        return {
+            "frame": jnp.asarray(
+                rng.normal(0, 1, (batch_size, 1, cfg.d_model)), jnp.dtype(cfg.dtype)
+            )
+        }
+    return {"token": jnp.asarray(rng.integers(0, cfg.vocab, (batch_size, 1)), jnp.int32)}
+
+
+def long_context_variant(cfg: ModelConfig) -> ModelConfig:
+    """The documented sliding-window variant used for ``long_500k`` on
+    architectures whose citation is pure full attention (DESIGN.md §5).
+
+    SSM/hybrid archs and gemma3 (native SWA pattern) are returned
+    unchanged; everything else gets window=4096 on all layers.
+    """
+    from dataclasses import replace
+
+    native_subquadratic = (
+        cfg.block_type in ("xlstm", "hymba") or (cfg.sliding_window and "L" in cfg.layer_pattern)
+    )
+    if native_subquadratic:
+        return cfg
+    return replace(
+        cfg,
+        name=cfg.name + "+swa4k",
+        sliding_window=4096,
+        layer_pattern="L",
+    )

@@ -1,0 +1,27 @@
+"""internvl2-1b [vlm] — InternViT + InternLM2; LM backbone implemented.
+
+24L d_model=896 14H (kv=2) d_ff=4864 vocab=151655  [arXiv:2404.16821]
+The InternViT vision tower + MLP projector are a STUB: ``input_specs``
+provides 256 precomputed patch embeddings at d_model prepended to the
+text tokens; loss is masked to text positions (DESIGN.md §5).
+"""
+
+from repro.configs.base import ModelConfig, register_config
+
+register_config(
+    ModelConfig(
+        name="internvl2-1b",
+        family="vlm",
+        n_layers=24,
+        d_model=896,
+        n_heads=14,
+        n_kv_heads=2,
+        d_ff=4864,
+        vocab=151655,
+        head_dim=64,
+        input_mode="vlm",
+        n_patches=256,
+        mlp_activation="swiglu",
+        source="arXiv:2404.16821",
+    )
+)

@@ -1,0 +1,26 @@
+"""musicgen-large [audio] — decoder-only over EnCodec tokens.
+
+48L d_model=2048 32H (kv=32) d_ff=8192 vocab=2048  [arXiv:2306.05284]
+The EnCodec conv codec frontend is a STUB: ``input_specs`` provides
+precomputed frame embeddings at d_model (DESIGN.md §5); the decoder
+predicts EnCodec codes (vocab 2048).
+"""
+
+from repro.configs.base import ModelConfig, register_config
+
+register_config(
+    ModelConfig(
+        name="musicgen-large",
+        family="audio",
+        n_layers=48,
+        d_model=2048,
+        n_heads=32,
+        n_kv_heads=32,
+        d_ff=8192,
+        vocab=2048,
+        norm="layernorm",
+        mlp_activation="gelu",
+        input_mode="frames",
+        source="arXiv:2306.05284",
+    )
+)

@@ -1,0 +1,29 @@
+"""FedLECC core: the paper's primary contribution.
+
+- ``hellinger``   — pairwise Hellinger-distance matrix over label histograms
+- ``clustering``  — OPTICS density ordering + reachability-threshold
+                    cluster extraction (pure JAX/numpy, no sklearn)
+- ``selection``   — Algorithm 1: cluster- and loss-guided client selection
+- ``strategies``  — selection strategies behind one interface: fedlecc,
+                    random (FedAvg), POC, HACCS, FedCLS, FedCor
+- ``comm_model``  — per-round communication accounting (Table III)
+"""
+
+from repro.core.hellinger import hellinger_matrix, hellinger_distance
+from repro.core.clustering import optics, extract_clusters, cluster_label_histograms
+from repro.core.selection import fedlecc_select, selection_weights
+from repro.core.strategies import get_strategy, STRATEGIES
+from repro.core.comm_model import CommModel
+
+__all__ = [
+    "hellinger_matrix",
+    "hellinger_distance",
+    "optics",
+    "extract_clusters",
+    "cluster_label_histograms",
+    "fedlecc_select",
+    "selection_weights",
+    "get_strategy",
+    "STRATEGIES",
+    "CommModel",
+]

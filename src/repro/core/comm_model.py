@@ -1,0 +1,71 @@
+"""Communication accounting (paper §V-C, Table III).
+
+The paper measures "total communication exchanged between the server and
+clients over training, including model parameters, cluster information,
+and loss values".  This module is the exact bytes ledger used both by the
+simulation (``repro.federated.simulation``) and by the Table III
+benchmark:
+
+  per round:  m * P * bytes_per_param   (model download to selected)
+            + m * P * bytes_per_param   (update upload from selected)
+            + K * 4                     (loss scalars, if the strategy polls)
+  one-time:   K * C * 4                 (label histograms, if used)
+            + K * 4                     (cluster assignments pushed back)
+
+FedLECC's saving in the paper comes from a small, well-chosen ``m`` —
+the protocol overhead (histograms once + K loss floats/round) is
+negligible next to model traffic, which is what Table III shows.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+__all__ = ["CommModel", "count_params"]
+
+_MB = 1024.0 * 1024.0
+
+
+def count_params(params) -> int:
+    """Total parameter count of a pytree."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))
+
+
+@dataclass
+class CommModel:
+    n_params: int
+    K: int
+    n_classes: int
+    bytes_per_param: int = 4
+
+    def model_mb(self) -> float:
+        return self.n_params * self.bytes_per_param / _MB
+
+    def one_time_mb(self, needs_histograms: bool) -> float:
+        if not needs_histograms:
+            return 0.0
+        hist = self.K * self.n_classes * 4
+        assignments = self.K * 4
+        return (hist + assignments) / _MB
+
+    def round_mb(self, m_selected: int, needs_losses: bool) -> float:
+        model_traffic = 2 * m_selected * self.n_params * self.bytes_per_param
+        loss_poll = self.K * 4 if needs_losses else 0
+        return (model_traffic + loss_poll) / _MB
+
+    def total_mb(
+        self, rounds: int, m_selected: int, needs_losses: bool, needs_histograms: bool
+    ) -> float:
+        return self.one_time_mb(needs_histograms) + rounds * self.round_mb(
+            m_selected, needs_losses
+        )
+
+    def average_round_mb(
+        self, rounds: int, m_selected: int, needs_losses: bool, needs_histograms: bool
+    ) -> float:
+        """Table III's "average communication overhead" (MB per round,
+        one-time costs amortized)."""
+        return self.total_mb(rounds, m_selected, needs_losses, needs_histograms) / rounds

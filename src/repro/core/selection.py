@@ -1,0 +1,167 @@
+"""Algorithm 1 — cluster- and loss-guided client selection (FedLECC §IV-C).
+
+Inputs per round: cluster labels (fixed after the one-time clustering),
+per-client local empirical losses reported after local training, targets
+``J`` (clusters) and ``m`` (clients).
+
+Steps (verbatim from the paper):
+  1. z = ceil(m / J)
+  2. mean loss per cluster; rank clusters by mean loss (descending)
+  3. take top-J clusters; inside each, take the z highest-loss clients
+  4. if |S| < m, fill remaining slots with the highest-loss clients from
+     the *following* clusters, in descending cluster-mean-loss order
+
+Two implementations:
+- ``fedlecc_select``      — numpy, exact, used by the simulation server
+                            (selection state is host-side; K scalars/round).
+- ``fedlecc_select_jax``  — jit-compatible (static J, m, K, max clusters),
+                            used when selection must live inside a compiled
+                            scale-out round (the participation mask is a
+                            traced value).  Verified equivalent in tests.
+- ``selection_weights``   — selected set -> aggregation weight vector
+                            (w_i = p_i / sum_S p, zero outside S): the mask
+                            that gates the client-axis all-reduce in the
+                            scale-out regime (DESIGN.md §3b).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["fedlecc_select", "fedlecc_select_jax", "selection_weights"]
+
+
+def fedlecc_select(
+    cluster_labels: np.ndarray,
+    losses: np.ndarray,
+    m: int,
+    J: int,
+) -> np.ndarray:
+    """Algorithm 1.  Returns sorted int array of selected client indices, |S| = m."""
+    cluster_labels = np.asarray(cluster_labels)
+    losses = np.asarray(losses, np.float64)
+    k = cluster_labels.shape[0]
+    m = min(int(m), k)
+    clusters = np.unique(cluster_labels)
+    J = max(1, min(int(J), clusters.size))
+    z = math.ceil(m / J)
+
+    # Mean loss per cluster, clusters ranked descending.
+    mean_loss = np.array([losses[cluster_labels == c].mean() for c in clusters])
+    ranked = clusters[np.argsort(-mean_loss, kind="stable")]
+
+    selected: list[int] = []
+    # Top-J clusters: top-z clients by loss within each.
+    for c in ranked[:J]:
+        members = np.where(cluster_labels == c)[0]
+        take = members[np.argsort(-losses[members], kind="stable")][:z]
+        selected.extend(int(i) for i in take)
+        if len(selected) >= m:
+            break
+    selected = selected[:m]
+
+    # Backfill (Algorithm 1 line 13): highest-loss clients from the
+    # *following* clusters in descending mean-loss order; if the whole
+    # tail is exhausted, fall back to leftover members of the top-J.
+    if len(selected) < m:
+        chosen = set(selected)
+        for c in list(ranked[J:]) + list(ranked[:J]):
+            members = np.where(cluster_labels == c)[0]
+            for i in members[np.argsort(-losses[members], kind="stable")]:
+                if int(i) not in chosen:
+                    selected.append(int(i))
+                    chosen.add(int(i))
+                    if len(selected) >= m:
+                        break
+            if len(selected) >= m:
+                break
+
+    return np.sort(np.array(selected[:m], dtype=np.int64))
+
+
+@partial(jax.jit, static_argnames=("m", "J", "n_clusters"))
+def fedlecc_select_jax(
+    cluster_labels: jax.Array,
+    losses: jax.Array,
+    m: int,
+    J: int,
+    n_clusters: int,
+) -> jax.Array:
+    """Jit-compatible Algorithm 1 returning a (K,) boolean participation mask.
+
+    Strategy: build a lexicographic sort key so that one ``argsort`` orders
+    clients exactly as Algorithm 1 visits them, then take the first ``m``.
+
+    Key (descending priority):
+      1. clusters ranked by mean loss — rank r(c) of the client's cluster
+      2. *within-cluster* loss rank q: the first z members of each top-J
+         cluster come before every backfill slot
+      3. loss itself for backfill ordering
+
+    Phases: 0 = top-J cluster, within-cluster loss-rank < z (the main
+    selection); 1 = members of the *following* clusters (backfill, line
+    13); 2 = leftover members of top-J clusters (last resort when the
+    tail is exhausted).  Sort by (phase, r, q), take first m.  Verified
+    equivalent to ``fedlecc_select`` by property test.
+    """
+    losses = jnp.asarray(losses, jnp.float32)
+    labels = jnp.asarray(cluster_labels, jnp.int32)
+    k = losses.shape[0]
+    z = -(-m // J)  # ceil
+
+    onehot = jax.nn.one_hot(labels, n_clusters, dtype=jnp.float32)   # (K, C)
+    counts = jnp.maximum(onehot.sum(0), 1e-9)                        # (C,)
+    mean_loss = (onehot * losses[:, None]).sum(0) / counts           # (C,)
+    # Empty clusters must rank last.
+    present = onehot.sum(0) > 0
+    mean_loss = jnp.where(present, mean_loss, -jnp.inf)
+    # rank r(c): 0 = highest mean loss.  argsort of argsort gives ranks.
+    order = jnp.argsort(-mean_loss, stable=True)
+    rank_of_cluster = jnp.argsort(order, stable=True)                # (C,)
+    r = rank_of_cluster[labels]                                      # (K,)
+
+    # Within-cluster loss rank q (0 = highest loss in own cluster).
+    # Sort clients by (cluster, -loss): two stable argsorts compose into a
+    # lexicographic sort without precision-losing composite float keys.
+    p1 = jnp.argsort(-losses, stable=True)
+    p2 = jnp.argsort(r[p1], stable=True)
+    perm = p1[p2]
+    # position within the cluster = index among same-cluster predecessors
+    sorted_r = r[perm]
+    idx = jnp.arange(k)
+    # q[perm[t]] = t - first position of its cluster block
+    first_pos = jnp.full((n_clusters,), k, jnp.int32).at[sorted_r].min(
+        idx.astype(jnp.int32), indices_are_sorted=False
+    )
+    q_sorted = idx.astype(jnp.int32) - first_pos[sorted_r]
+    q = jnp.zeros((k,), jnp.int32).at[perm].set(q_sorted)
+
+    top = r < J
+    phase = jnp.where(top & (q < z), 0, jnp.where(~top, 1, 2)).astype(jnp.int32)
+    # Lexicographic (phase, r, q) — all bounded by K so base-(K+1) encoding.
+    base = k + 1
+    final_key = (phase * base + r) * base + q
+    take = jnp.argsort(final_key, stable=True)[:m]
+    mask = jnp.zeros((k,), jnp.bool_).at[take].set(True)
+    return mask
+
+
+def selection_weights(
+    selected_mask: jax.Array, client_sizes: jax.Array
+) -> jax.Array:
+    """FedAvg aggregation weights gated by the participation mask.
+
+    w_i = N_i / sum_{j in S} N_j  for i in S, else 0.  This vector is the
+    only thing the compiled scale-out round needs from the selection
+    stage: aggregation is then ``psum(w_i * theta_i)`` over the client
+    mesh axis (DESIGN.md §3b).
+    """
+    sizes = jnp.asarray(client_sizes, jnp.float32)
+    mask = jnp.asarray(selected_mask)
+    gated = jnp.where(mask, sizes, 0.0)
+    return gated / jnp.maximum(gated.sum(), 1e-12)

@@ -1,0 +1,318 @@
+"""Client-selection strategies behind one interface.
+
+The paper compares FedLECC against selection-based baselines (HACCS,
+FedCLS, FedCor, POC) and regularization-based ones (FedProx, FedNova,
+FedDyn — those use *random* selection plus a modified local objective /
+aggregation rule, implemented in ``repro.optim`` / ``repro.federated``).
+
+Every strategy implements:
+
+    setup(hists, client_sizes, seed)  — one-time server-side state
+                                        (clustering etc.)
+    select(rnd, losses, rng) -> (m,) int indices of selected clients
+    extra_upload_bytes_per_round()    — selection-protocol overhead used
+                                        by ``CommModel`` (Table III)
+
+All are host-side numpy: K scalars/vectors per round (DESIGN.md §8.5).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.clustering import cluster_label_histograms
+from repro.core.hellinger import hellinger_matrix
+from repro.core.selection import fedlecc_select
+
+__all__ = ["SelectionStrategy", "get_strategy", "STRATEGIES"]
+
+_FLOAT_BYTES = 4
+
+
+@dataclass
+class SelectionStrategy:
+    """Base: uniform random sampling (what FedAvg/FedProx/... use)."""
+
+    m: int
+    name: str = "random"
+    needs_losses: bool = False          # does the server poll all clients for loss?
+    needs_histograms: bool = False      # one-time label-histogram upload?
+    K: int = field(default=0, init=False)
+    client_sizes: np.ndarray | None = field(default=None, init=False)
+
+    def setup(self, hists: np.ndarray, client_sizes: np.ndarray, seed: int = 0) -> None:
+        self.K = len(client_sizes)
+        self.client_sizes = np.asarray(client_sizes)
+
+    def select(self, rnd: int, losses: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+        return np.sort(rng.choice(self.K, size=min(self.m, self.K), replace=False))
+
+    def extra_upload_bytes_per_round(self) -> float:
+        # Loss scalars polled from all clients each round, if used.
+        return float(self.K * _FLOAT_BYTES) if self.needs_losses else 0.0
+
+
+@dataclass
+class FedLECC(SelectionStrategy):
+    """The paper's strategy: OPTICS clusters + Algorithm 1.
+
+    ``cluster="auto"`` adds the beyond-paper robustness layer: when the
+    OPTICS silhouette is poor (no density structure in the HD geometry),
+    fall back to a k-medoids sweep (the paper evaluated k-medoids too)."""
+
+    J: int = 3
+    min_samples: int = 3
+    eps: float | str = "auto"
+    cluster: str = "optics"      # optics | auto
+    name: str = "fedlecc"
+    needs_losses: bool = True
+    needs_histograms: bool = True
+    labels: np.ndarray | None = field(default=None, init=False)
+    n_clusters: int = field(default=0, init=False)
+    cluster_method: str = field(default="optics", init=False)
+
+    def setup(self, hists, client_sizes, seed: int = 0) -> None:
+        super().setup(hists, client_sizes, seed)
+        if self.cluster == "auto":
+            from repro.core.clustering import best_clustering
+            from repro.core.hellinger import hellinger_matrix
+
+            d = np.asarray(hellinger_matrix(np.asarray(hists)))
+            self.labels, self.cluster_method = best_clustering(
+                d, min_samples=self.min_samples, seed=seed
+            )
+        else:
+            self.labels, _ = cluster_label_histograms(
+                hists, min_samples=self.min_samples, eps=self.eps
+            )
+        self.n_clusters = int(self.labels.max()) + 1  # J_max from OPTICS
+
+    def select(self, rnd, losses, rng) -> np.ndarray:
+        J = min(self.J, self.n_clusters)
+        return fedlecc_select(self.labels, losses, m=self.m, J=J)
+
+
+@dataclass
+class PowerOfChoice(SelectionStrategy):
+    """POC (Cho et al., 2022): sample d candidates ~ p_i, keep top-m by loss."""
+
+    d: int = 0  # candidate-set size; 0 -> max(2m, K//5)
+    name: str = "poc"
+    needs_losses: bool = True
+
+    def select(self, rnd, losses, rng) -> np.ndarray:
+        d = self.d or max(2 * self.m, self.K // 5)
+        d = min(max(d, self.m), self.K)
+        p = self.client_sizes / self.client_sizes.sum()
+        cand = rng.choice(self.K, size=d, replace=False, p=p)
+        top = cand[np.argsort(-losses[cand], kind="stable")][: self.m]
+        return np.sort(top)
+
+
+@dataclass
+class HACCS(SelectionStrategy):
+    """HACCS (Wolfrath et al., 2022): histogram clusters; latency-efficient
+    pick per cluster.  Device latency is a simulated static attribute."""
+
+    min_samples: int = 3
+    name: str = "haccs"
+    needs_histograms: bool = True
+    labels: np.ndarray | None = field(default=None, init=False)
+    latency: np.ndarray | None = field(default=None, init=False)
+    n_clusters: int = field(default=0, init=False)
+
+    def setup(self, hists, client_sizes, seed: int = 0) -> None:
+        super().setup(hists, client_sizes, seed)
+        self.labels, _ = cluster_label_histograms(hists, min_samples=self.min_samples)
+        self.n_clusters = int(self.labels.max()) + 1
+        # Simulated heterogeneous device latency (lognormal, fixed per client).
+        self.latency = np.random.default_rng(seed).lognormal(0.0, 0.5, size=self.K)
+
+    def select(self, rnd, losses, rng) -> np.ndarray:
+        # Proportional slots per cluster (>=1 for the largest), fastest
+        # devices first within each cluster.
+        counts = np.bincount(self.labels, minlength=self.n_clusters)
+        slots = np.maximum(np.round(self.m * counts / counts.sum()).astype(int), 0)
+        selected: list[int] = []
+        order = np.argsort(-counts)
+        for c in order:
+            members = np.where(self.labels == c)[0]
+            fast = members[np.argsort(self.latency[members])]
+            selected.extend(int(i) for i in fast[: slots[c]])
+        # Trim / fill to exactly m with globally fastest unchosen.
+        selected = selected[: self.m]
+        if len(selected) < self.m:
+            chosen = set(selected)
+            for i in np.argsort(self.latency):
+                if int(i) not in chosen:
+                    selected.append(int(i))
+                if len(selected) >= self.m:
+                    break
+        return np.sort(np.array(selected, dtype=np.int64))
+
+
+@dataclass
+class FedCLS(SelectionStrategy):
+    """FedCLS (Li & Wu, 2022): Hamming distance over binarized label
+    presence; greedy selection maximizing label coverage."""
+
+    presence_threshold: float = 0.05
+    name: str = "fedcls"
+    needs_histograms: bool = True
+    presence: np.ndarray | None = field(default=None, init=False)
+
+    def setup(self, hists, client_sizes, seed: int = 0) -> None:
+        super().setup(hists, client_sizes, seed)
+        h = np.asarray(hists, np.float64)
+        h = h / np.maximum(h.sum(1, keepdims=True), 1e-12)
+        self.presence = (h >= self.presence_threshold).astype(np.int64)  # (K, C)
+
+    def select(self, rnd, losses, rng) -> np.ndarray:
+        # Greedy max-coverage with random tie-break (Hamming gain).
+        covered = np.zeros(self.presence.shape[1], dtype=np.int64)
+        remaining = list(range(self.K))
+        selected: list[int] = []
+        for _ in range(min(self.m, self.K)):
+            gains = np.array(
+                [np.sum(self.presence[i] & (1 - covered)) for i in remaining]
+            )
+            best = np.flatnonzero(gains == gains.max())
+            pick = remaining[int(rng.choice(best))]
+            selected.append(pick)
+            covered = np.minimum(covered + self.presence[pick], 1)
+            remaining.remove(pick)
+            if covered.all():
+                covered[:] = 0  # restart coverage passes
+        return np.sort(np.array(selected, dtype=np.int64))
+
+
+@dataclass
+class FedCor(SelectionStrategy):
+    """FedCor (Tang et al., 2022), lightweight variant: GP posterior over
+    client losses with an RBF kernel on label-histogram HD; greedy
+    max-variance-reduction selection (documented deviation, DESIGN.md §9)."""
+
+    length_scale: float = 0.3
+    noise: float = 1e-2
+    name: str = "fedcor"
+    needs_losses: bool = True
+    needs_histograms: bool = True
+    Kmat: np.ndarray | None = field(default=None, init=False)
+
+    def setup(self, hists, client_sizes, seed: int = 0) -> None:
+        super().setup(hists, client_sizes, seed)
+        d = np.asarray(hellinger_matrix(np.asarray(hists)))
+        self.Kmat = np.exp(-(d**2) / (2 * self.length_scale**2))
+
+    def select(self, rnd, losses, rng) -> np.ndarray:
+        # Greedy D-optimal style: repeatedly pick the client with the
+        # largest posterior variance, conditioning the GP on each pick.
+        # Loss magnitudes weight the prior variance (informativeness).
+        prior = self.Kmat * np.outer(losses, losses) / max(losses.max() ** 2, 1e-12)
+        var = np.diag(prior).copy()
+        cov = prior.copy()
+        selected: list[int] = []
+        for _ in range(min(self.m, self.K)):
+            cand = np.argsort(-var, kind="stable")
+            pick = next(int(i) for i in cand if int(i) not in selected)
+            selected.append(pick)
+            denom = cov[pick, pick] + self.noise
+            cov = cov - np.outer(cov[:, pick], cov[pick, :]) / denom
+            var = np.clip(np.diag(cov).copy(), 0.0, None)
+        return np.sort(np.array(selected, dtype=np.int64))
+
+
+@dataclass
+class LossOnly(SelectionStrategy):
+    """Ablation (RQ2): FedLECC without clustering — global top-m by loss.
+    Isolates the informativeness term; the paper predicts over-
+    specialization on the hardest data mode."""
+
+    name: str = "lossonly"
+    needs_losses: bool = True
+
+    def select(self, rnd, losses, rng) -> np.ndarray:
+        return np.sort(np.argsort(-losses, kind="stable")[: self.m])
+
+
+@dataclass
+class ClusterRandom(FedLECC):
+    """Ablation (RQ2): FedLECC without loss guidance — same OPTICS
+    clusters, but clusters and clients drawn uniformly.  Isolates the
+    diversity term."""
+
+    name: str = "clusterrandom"
+    needs_losses: bool = False
+
+    def select(self, rnd, losses, rng) -> np.ndarray:
+        del losses
+        clusters = np.unique(self.labels)
+        J = min(self.J, clusters.size)
+        z = -(-self.m // J)
+        chosen = rng.choice(clusters, size=J, replace=False)
+        sel: list[int] = []
+        for c in chosen:
+            members = np.where(self.labels == c)[0]
+            take = rng.choice(members, size=min(z, len(members)), replace=False)
+            sel.extend(int(i) for i in take)
+        sel = sel[: self.m]
+        pool = [i for i in range(self.K) if i not in set(sel)]
+        while len(sel) < self.m:
+            pick = int(rng.choice(pool))
+            sel.append(pick)
+            pool.remove(pick)
+        return np.sort(np.array(sel, dtype=np.int64))
+
+
+@dataclass
+class FedLECCAdaptive(FedLECC):
+    """Beyond-paper: adaptive J (the paper's stated future work, §VII).
+
+    Per round, J is chosen from the dispersion of cluster mean losses:
+    when a few clusters clearly dominate the loss mass, concentrate
+    (small J → deeper per-cluster sampling); when losses are flat,
+    spread out (large J → maximal diversity).  Concretely J = number of
+    clusters whose mean loss ≥ (min + 0.5·(max−min)), clipped to
+    [2, min(m, J_max)] — no new hyperparameter beyond the threshold.
+    """
+
+    name: str = "fedlecc_adaptive"
+
+    def select(self, rnd, losses, rng) -> np.ndarray:
+        clusters = np.unique(self.labels)
+        means = np.array([losses[self.labels == c].mean() for c in clusters])
+        if means.size <= 1:
+            J = 1
+        else:
+            thr = means.min() + 0.5 * (means.max() - means.min())
+            J = int((means >= thr).sum())
+            J = max(2, min(J, self.m, self.n_clusters))
+        return fedlecc_select(self.labels, losses, m=self.m, J=J)
+
+
+def _make(name: str, m: int, **kw) -> SelectionStrategy:
+    cls = STRATEGIES[name]
+    return cls(m=m, **kw)
+
+
+STRATEGIES: dict[str, type] = {
+    "random": SelectionStrategy,
+    "fedlecc": FedLECC,
+    "fedlecc_adaptive": FedLECCAdaptive,
+    "lossonly": LossOnly,
+    "clusterrandom": ClusterRandom,
+    "poc": PowerOfChoice,
+    "haccs": HACCS,
+    "fedcls": FedCLS,
+    "fedcor": FedCor,
+}
+
+
+def get_strategy(name: str, m: int, **kwargs) -> SelectionStrategy:
+    """Build a selection strategy by name (see ``STRATEGIES``)."""
+    if name not in STRATEGIES:
+        raise KeyError(f"unknown strategy {name!r}; available: {sorted(STRATEGIES)}")
+    return _make(name, m, **kwargs)

@@ -1,0 +1,21 @@
+"""Data substrate: synthetic datasets + non-IID partitioning + batching.
+
+MNIST/FMNIST are not available offline (DESIGN.md §6); ``synthetic``
+provides class-conditional Gaussian-mixture images at MNIST scale and
+token streams for the LM architectures.  ``partition`` implements the
+FedArtML-style Dirichlet label-skew split the paper uses, with
+Hellinger-distance calibration to hit the paper's HD≈0.9 regime.
+"""
+
+from repro.data.synthetic import make_classification, make_token_stream
+from repro.data.partition import dirichlet_partition, calibrate_alpha, pack_clients
+from repro.data.pipeline import batch_iterator
+
+__all__ = [
+    "make_classification",
+    "make_token_stream",
+    "dirichlet_partition",
+    "calibrate_alpha",
+    "pack_clients",
+    "batch_iterator",
+]

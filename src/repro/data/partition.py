@@ -1,0 +1,214 @@
+"""Dirichlet label-skew partitioning (FedArtML-style) + HD calibration.
+
+The paper partitions MNIST/FMNIST across K clients with a
+Dirichlet(alpha) label split and reports the regime by its average
+Hellinger distance (HD ≈ 0.9 = severe skew, HD ≈ 0.86 for the larger-K
+settings).  ``dirichlet_partition`` reproduces the split;
+``calibrate_alpha`` binary-searches alpha to hit a target HD, because
+the alpha↔HD mapping depends on K and the class count.
+
+``pack_clients`` turns ragged per-client index lists into the fixed-size
+(K, N_max) arrays + validity masks the vmapped simulation consumes.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.hellinger import average_hd
+
+__all__ = [
+    "dirichlet_partition", "shard_partition", "calibrate_alpha",
+    "calibrate_shards", "pack_clients", "label_histograms",
+]
+
+
+def dirichlet_partition(
+    labels: np.ndarray,
+    n_clients: int,
+    alpha: float,
+    seed: int = 0,
+    min_samples_per_client: int = 8,
+) -> list[np.ndarray]:
+    """Split sample indices across clients with per-class Dirichlet proportions.
+
+    For each class c: draw proportions ~ Dir(alpha * 1_K) and multinomially
+    assign that class's samples.  Small alpha → each class concentrates on
+    few clients (severe label skew).  Clients below
+    ``min_samples_per_client`` are topped up from the largest client so
+    every client can form at least one batch.
+    """
+    rng = np.random.default_rng(seed)
+    labels = np.asarray(labels)
+    client_idx: list[list[int]] = [[] for _ in range(n_clients)]
+    for c in np.unique(labels):
+        idx = np.flatnonzero(labels == c)
+        rng.shuffle(idx)
+        props = rng.dirichlet(np.full(n_clients, alpha))
+        counts = np.floor(props * len(idx)).astype(int)
+        # distribute the remainder to the largest shares
+        rem = len(idx) - counts.sum()
+        if rem > 0:
+            counts[np.argsort(-props)[:rem]] += 1
+        splits = np.split(idx, np.cumsum(counts)[:-1])
+        for k in range(n_clients):
+            client_idx[k].extend(splits[k].tolist())
+
+    out = [np.array(sorted(ix), dtype=np.int64) for ix in client_idx]
+    # Top up starved clients (the paper's tooling guarantees non-empty
+    # clients).  Donors rotate and each starved client draws a *random*
+    # slice of a different donor, so top-up clients do not end up with
+    # mutually identical single-class histograms (which would artificially
+    # deflate the average HD at extreme skew).
+    starved = [k for k in range(n_clients) if len(out[k]) < min_samples_per_client]
+    for j, k in enumerate(starved):
+        while len(out[k]) < min_samples_per_client:
+            donors = np.argsort([-len(o) for o in out])
+            donor = int(donors[j % max(1, min(len(donors), n_clients // 4))])
+            if len(out[donor]) <= min_samples_per_client:
+                donor = int(donors[0])
+            pick = rng.integers(0, len(out[donor]))
+            take = out[donor][pick]
+            out[donor] = np.delete(out[donor], pick)
+            out[k] = np.append(out[k], take)
+    return out
+
+
+def shard_partition(
+    labels: np.ndarray,
+    n_clients: int,
+    shards_per_client: int = 1,
+    seed: int = 0,
+) -> list[np.ndarray]:
+    """McMahan-style shard split: sort by label, cut into
+    K·shards_per_client equal shards, deal ``shards_per_client`` to each
+    client.  Produces BALANCED client sizes with ≤ shards_per_client
+    distinct classes each — the severe-label-skew regime the paper's
+    HD≈0.9 row corresponds to (K=100, 10 classes, 1 shard/client gives
+    avg HD ≈ 0.909 analytically).
+
+    The plain Dirichlet split at comparable HD concentrates whole classes
+    on 1–2 clients and leaves the rest as tiny top-up stubs, which is a
+    *different* (and pathological) regime — see EXPERIMENTS.md §Claims.
+    """
+    rng = np.random.default_rng(seed)
+    labels = np.asarray(labels)
+    order = np.argsort(labels, kind="stable")
+    # shuffle within each class so shards are random samples of the class
+    out_order = []
+    for c in np.unique(labels):
+        block = order[labels[order] == c]
+        rng.shuffle(block)
+        out_order.append(block)
+    order = np.concatenate(out_order)
+    n_shards = n_clients * shards_per_client
+    shards = np.array_split(order, n_shards)
+    perm = rng.permutation(n_shards)
+    return [
+        np.concatenate([shards[perm[i * shards_per_client + j]]
+                        for j in range(shards_per_client)])
+        for i in range(n_clients)
+    ]
+
+
+def calibrate_shards(
+    labels: np.ndarray,
+    n_clients: int,
+    target_hd: float,
+    n_classes: int,
+    seed: int = 0,
+) -> int:
+    """Pick shards_per_client whose partition HD is closest to target."""
+    best, best_err = 1, float("inf")
+    for s in (1, 2, 3, 4, 6, 8):
+        parts = shard_partition(labels, n_clients, s, seed=seed)
+        hd = float(average_hd(label_histograms(labels, parts, n_classes)))
+        if abs(hd - target_hd) < best_err:
+            best, best_err = s, abs(hd - target_hd)
+    return best
+
+
+def label_histograms(
+    labels: np.ndarray, client_idx: list[np.ndarray], n_classes: int
+) -> np.ndarray:
+    """(K, C) normalized label histograms — what clients ship the server."""
+    h = np.stack(
+        [np.bincount(labels[ix], minlength=n_classes).astype(np.float64) for ix in client_idx]
+    )
+    return h / np.maximum(h.sum(1, keepdims=True), 1e-12)
+
+
+def calibrate_alpha(
+    labels: np.ndarray,
+    n_clients: int,
+    target_hd: float,
+    n_classes: int,
+    seed: int = 0,
+    tol: float = 0.02,
+    iters: int = 6,
+) -> float:
+    """Find Dirichlet alpha so the partition's average HD hits the target.
+
+    HD decreases with alpha in the practical range but is mildly
+    non-monotone at extreme skew (top-up artifacts), so: coarse log-grid
+    scan first, then local bisection between the best neighbours.
+    """
+
+    def hd_at(alpha: float) -> float:
+        part = dirichlet_partition(labels, n_clients, alpha, seed=seed)
+        return float(average_hd(label_histograms(labels, part, n_classes)))
+
+    grid = np.geomspace(0.002, 50.0, 12)
+    hds = np.array([hd_at(a) for a in grid])
+    # HD saturates at extreme skew: several alphas can hit the target.
+    # Prefer the SMALLEST qualifying alpha — the paper's severe-label-skew
+    # regime is the *structured* one (clients dominated by few classes),
+    # which is what label-distribution clustering (FedLECC/HACCS) sees;
+    # large-alpha mixtures can reach the same average HD with no cluster
+    # structure at all.
+    ok = np.flatnonzero(np.abs(hds - target_hd) < tol)
+    if ok.size:
+        return float(grid[ok[0]])
+    best = int(np.argmin(np.abs(hds - target_hd)))
+    # local bisection between best and the neighbour bracketing the target
+    lo_i = max(best - 1, 0)
+    hi_i = min(best + 1, len(grid) - 1)
+    lo, hi = grid[lo_i], grid[hi_i]
+    best_a, best_err = float(grid[best]), abs(hds[best] - target_hd)
+    for _ in range(iters):
+        mid = (lo * hi) ** 0.5
+        hd = hd_at(mid)
+        err = abs(hd - target_hd)
+        if err < best_err:
+            best_a, best_err = float(mid), err
+        if err < tol:
+            return float(mid)
+        if hd > target_hd:
+            lo = mid
+        else:
+            hi = mid
+    return best_a
+
+
+def pack_clients(
+    x: np.ndarray, y: np.ndarray, client_idx: list[np.ndarray]
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Ragged per-client indices → stacked (K, N_max, ...) arrays + mask.
+
+    Padding rows repeat each client's first sample and are masked out, so
+    vmapped code never sees garbage values.
+    """
+    n_max = max(len(ix) for ix in client_idx)
+    k = len(client_idx)
+    xs = np.zeros((k, n_max) + x.shape[1:], dtype=x.dtype)
+    ys = np.zeros((k, n_max) + y.shape[1:], dtype=y.dtype)
+    mask = np.zeros((k, n_max), dtype=np.float32)
+    for i, ix in enumerate(client_idx):
+        n = len(ix)
+        xs[i, :n] = x[ix]
+        ys[i, :n] = y[ix]
+        mask[i, :n] = 1.0
+        if n < n_max and n > 0:
+            xs[i, n:] = x[ix[0]]
+            ys[i, n:] = y[ix[0]]
+    return xs, ys, mask

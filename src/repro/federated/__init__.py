@@ -1,0 +1,15 @@
+"""Federated runtime.
+
+- ``aggregation`` — FedAvg / FedNova / FedDyn server rules over pytrees
+- ``client``      — jit/vmap-able local training (SGD minibatch loop with
+                    FedProx/FedDyn gradient modifiers)
+- ``simulation``  — the paper-faithful K-client simulation (selection
+                    strategies from ``repro.core`` plugged in per round)
+- ``scaleout``    — mesh-collective federated round for the large
+                    architectures (selection mask gates the client-axis
+                    all-reduce; see DESIGN.md §3b)
+"""
+
+from repro.federated.simulation import FLConfig, FederatedSimulation
+
+__all__ = ["FLConfig", "FederatedSimulation"]

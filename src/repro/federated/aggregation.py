@@ -1,0 +1,84 @@
+"""Server-side aggregation rules over parameter pytrees.
+
+All rules consume a *stacked* pytree of client results (leading axis =
+participating clients) plus normalized weights, so the same code path
+serves the vmapped simulation and — via psum instead of a stacked sum —
+the scale-out mesh round.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["fedavg", "fednova", "feddyn_server", "weighted_delta"]
+
+
+def _wsum(stacked, weights):
+    """Σ_i w_i · leaf_i along the leading (client) axis."""
+    w = jnp.asarray(weights, jnp.float32)
+
+    def one(leaf):
+        wexp = w.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return jnp.sum(leaf.astype(jnp.float32) * wexp, axis=0).astype(leaf.dtype)
+
+    return jax.tree.map(one, stacked)
+
+
+def fedavg(stacked_params, weights):
+    """θ ← Σ_i w_i θ_i  (weights normalized ∝ N_i over the selected set)."""
+    return _wsum(stacked_params, weights)
+
+
+def weighted_delta(stacked_params, global_params, weights):
+    """Σ_i w_i (θ_i − θ_g) — the update FedAvg applies, exposed separately
+    because the scale-out round all-reduces deltas, not params."""
+    deltas = jax.tree.map(
+        lambda s, g: s - g[None].astype(s.dtype), stacked_params, global_params
+    )
+    return _wsum(deltas, weights)
+
+
+def fednova(stacked_params, global_params, weights, taus):
+    """FedNova (Wang et al., 2021): normalize each client's delta by its
+    local step count τ_i, then scale by τ_eff = Σ w_i τ_i."""
+    w = jnp.asarray(weights, jnp.float32)
+    taus = jnp.asarray(taus, jnp.float32)
+    tau_eff = jnp.sum(w * taus)
+
+    def one(s, g):
+        delta = s.astype(jnp.float32) - g[None].astype(jnp.float32)
+        t = taus.reshape((-1,) + (1,) * (delta.ndim - 1))
+        wexp = w.reshape((-1,) + (1,) * (delta.ndim - 1))
+        d = jnp.sum(wexp * delta / jnp.maximum(t, 1.0), axis=0)
+        return (g.astype(jnp.float32) + tau_eff * d).astype(g.dtype)
+
+    return jax.tree.map(one, stacked_params, global_params)
+
+
+def feddyn_server(stacked_params, weights, h_server, alpha: float, frac_participating: float):
+    """FedDyn server rule (Acar et al., 2021):
+
+        h ← h − α · (participation fraction) · (mean_S θ_i − θ_g)   [folded
+            into the h passed in by the caller via client deltas]
+        θ ← mean_S θ_i − h / α
+
+    We use the common simplification: h accumulates −α·Δ̄ each round where
+    Δ̄ is the weighted mean client delta w.r.t. the previous global params.
+    """
+    mean_params = _wsum(stacked_params, weights)
+    theta = jax.tree.map(
+        lambda mp, h: (mp.astype(jnp.float32) - h / alpha).astype(mp.dtype),
+        mean_params,
+        h_server,
+    )
+    return theta, mean_params
+
+
+def feddyn_update_h(h_server, mean_params, global_params, alpha: float, frac: float):
+    return jax.tree.map(
+        lambda h, mp, g: h - alpha * frac * (mp.astype(jnp.float32) - g.astype(jnp.float32)),
+        h_server,
+        mean_params,
+        global_params,
+    )

@@ -1,0 +1,89 @@
+"""Client-side local training — jit/vmap-able.
+
+``local_train`` runs ``max_steps`` minibatch-SGD steps on one client's
+(masked, padded) data, sampling batch indices from the valid region with
+replacement inside the scan (statistically equivalent to shuffled epochs
+for the paper's regime; lets every client share one static step count).
+Clients whose true step budget τ_i < max_steps freeze after τ_i steps
+(``jnp.where`` gating), which is what makes FedNova's τ-normalization
+meaningful under heterogeneous dataset sizes.
+
+FedProx / FedDyn gradient modifiers plug in via ``mode``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.fedmods import fedprox_grads, feddyn_grads
+
+__all__ = ["local_train", "client_loss"]
+
+
+def _sample_batch(key, mask, batch_size):
+    """Indices of a with-replacement minibatch drawn from valid rows."""
+    p = mask / jnp.maximum(mask.sum(), 1e-9)
+    return jax.random.choice(key, mask.shape[0], shape=(batch_size,), p=p)
+
+
+def client_loss(apply_fn: Callable, loss_fn: Callable, params, x, y, mask) -> jax.Array:
+    """Local empirical loss over the client's full (masked) dataset —
+    what each client reports to the server (Algorithm 1 line 3)."""
+    logits = apply_fn(params, x)
+    return loss_fn(logits, y, mask)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("apply_fn", "loss_fn", "max_steps", "batch_size", "mode"),
+)
+def local_train(
+    apply_fn: Callable,
+    loss_fn: Callable,
+    global_params: Any,
+    x: jax.Array,          # (N_max, ...) padded features
+    y: jax.Array,          # (N_max, ...) padded labels
+    mask: jax.Array,       # (N_max,) validity
+    tau: jax.Array,        # () true local step budget of this client
+    key: jax.Array,
+    lr: float | jax.Array,
+    max_steps: int,
+    batch_size: int,
+    mode: str = "plain",            # plain | fedprox | feddyn
+    mu: float = 0.0,                # fedprox proximal / feddyn alpha
+    h_state: Any = None,            # feddyn per-client correction
+):
+    """Returns (params_end, mean_train_loss_over_executed_steps)."""
+
+    def loss_on_batch(params, bx, by):
+        return loss_fn(apply_fn(params, bx), by, None)
+
+    grad_fn = jax.value_and_grad(loss_on_batch)
+
+    def step(carry, inp):
+        params, losses_sum = carry
+        t, k = inp
+        bidx = _sample_batch(k, mask, batch_size)
+        bx, by = jnp.take(x, bidx, axis=0), jnp.take(y, bidx, axis=0)
+        loss, grads = grad_fn(params, bx, by)
+        if mode == "fedprox":
+            grads = fedprox_grads(grads, params, global_params, mu)
+        elif mode == "feddyn":
+            grads = feddyn_grads(grads, params, global_params, h_state, mu)
+        live = (t < tau).astype(jnp.float32)
+        new_params = jax.tree.map(
+            lambda p, g: p - lr * live * g.astype(p.dtype), params, grads
+        )
+        return (new_params, losses_sum + live * loss), None
+
+    keys = jax.random.split(key, max_steps)
+    ts = jnp.arange(max_steps)
+    (params_end, loss_sum), _ = jax.lax.scan(
+        step, (global_params, jnp.zeros((), jnp.float32)), (ts, keys)
+    )
+    mean_loss = loss_sum / jnp.maximum(jnp.minimum(tau, max_steps).astype(jnp.float32), 1.0)
+    return params_end, mean_loss

@@ -1,0 +1,29 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel ships as a subpackage with three files:
+  kernel.py — ``pl.pallas_call`` + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (padding, layout, dtype handling)
+  ref.py    — pure-jnp oracle the kernel is tested against
+
+Kernels (DESIGN.md §4):
+  hellinger       — K×K pairwise Hellinger distance over label histograms
+                    (the paper's only dense compute: sqrt-histogram matmul
+                    on the MXU + elementwise epilogue)
+  flash_attention — online-softmax attention (local-training hot loop)
+  aggregate       — masked weighted parameter aggregation (the FedAvg
+                    reduce that FedLECC's selection mask gates)
+
+On this CPU container kernels are validated with ``interpret=True``;
+the pjit scale-out path uses the pure-JAX equivalents (Pallas does not
+lower to the XLA CPU backend used by the dry-run).
+"""
+
+from repro.kernels.hellinger.ops import hellinger_matrix_pallas
+from repro.kernels.flash_attention.ops import flash_attention_pallas
+from repro.kernels.aggregate.ops import masked_weighted_sum_pallas
+
+__all__ = [
+    "hellinger_matrix_pallas",
+    "flash_attention_pallas",
+    "masked_weighted_sum_pallas",
+]

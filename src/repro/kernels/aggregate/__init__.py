@@ -1,0 +1,3 @@
+from repro.kernels.aggregate.ops import masked_weighted_sum_pallas
+
+__all__ = ["masked_weighted_sum_pallas"]

@@ -1,0 +1,46 @@
+"""Masked weighted parameter aggregation kernel — the FedAvg reduce.
+
+θ_new[n] = Σ_m w_m · θ_m[n] over M stacked client replicas, where w
+carries FedLECC's selection mask (w_m = 0 for unselected clients).  This
+is bandwidth-bound: one pass over M×N parameter bytes producing N.
+
+Tiling: grid over parameter columns; each program streams an (M, BN)
+panel into VMEM, scales rows by w (SMEM-resident scalars broadcast from
+a (M,1) block), reduces over M, writes a (BN,) tile.  BN = 512 fp32
+keeps the panel (M·BN·4 B; M ≤ ~64 clients per aggregation wave) well
+under VMEM while giving the VPU full 8×128 lanes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BN = 512
+
+
+def _agg_body(w_ref, x_ref, o_ref):
+    x = x_ref[...]                           # (M, BN)
+    w = w_ref[...]                           # (M, 1)
+    o_ref[...] = jnp.sum(x.astype(jnp.float32) * w, axis=0, keepdims=True)
+
+
+def aggregate_kernel(
+    stacked: jax.Array,    # (M, N) fp32/bf16, N % BN == 0 (ops.py pads)
+    weights: jax.Array,    # (M, 1) fp32
+    interpret: bool = False,
+) -> jax.Array:
+    m, n = stacked.shape
+    grid = (n // BN,)
+    return pl.pallas_call(
+        _agg_body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, 1), lambda i: (0, 0)),
+            pl.BlockSpec((m, BN), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, BN), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
+        interpret=interpret,
+    )(weights, stacked)

@@ -1,0 +1,37 @@
+"""Public wrapper: pytree flattening + padding for the FedAvg reduce."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.aggregate.kernel import BN, aggregate_kernel
+
+__all__ = ["masked_weighted_sum_pallas", "aggregate_pytree_pallas"]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def masked_weighted_sum_pallas(stacked, weights, interpret: bool = False):
+    """(M, N) stacked replicas × (M,) weights → (N,)."""
+    m, n = stacked.shape
+    pad = (-n) % BN
+    if pad:
+        stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
+    out = aggregate_kernel(
+        stacked, jnp.asarray(weights, jnp.float32).reshape(m, 1), interpret=interpret
+    )
+    return out[0, :n]
+
+
+def aggregate_pytree_pallas(stacked_params, weights, interpret: bool = False):
+    """FedAvg over a stacked parameter pytree (leading client axis) using
+    the Pallas reduce per leaf."""
+    def one(leaf):
+        m = leaf.shape[0]
+        flat = leaf.reshape(m, -1)
+        out = masked_weighted_sum_pallas(flat, weights, interpret=interpret)
+        return out.reshape(leaf.shape[1:]).astype(leaf.dtype)
+
+    return jax.tree.map(one, stacked_params)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the aggregation kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["masked_weighted_sum_ref"]
+
+
+def masked_weighted_sum_ref(stacked, weights):
+    """stacked (M, N), weights (M,) → (N,) = Σ_m w_m · x_m."""
+    return jnp.sum(
+        stacked.astype(jnp.float32) * weights.astype(jnp.float32)[:, None], axis=0
+    )

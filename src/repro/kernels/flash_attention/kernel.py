@@ -1,0 +1,104 @@
+"""Flash attention (online softmax) Pallas kernel.
+
+Grid: (batch, heads, num_q_blocks, num_kv_blocks) with the kv axis
+innermost; the running max / denominator / accumulator live in VMEM
+scratch and persist across the kv iterations of one q block (the
+canonical TPU flash pattern).  Causal + optional sliding-window masking
+is computed from iota arithmetic — no mask tensors.
+
+Block shapes (BQ×D, BK×D, BQ×BK) are 128-aligned for the MXU; D is the
+head dim (≤ 256 for every assigned arch ⇒ a (BQ+2·BK)·D working set of
+~0.4 MB fp32 sits comfortably in the ~16 MB VMEM per core).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+_NEG = -1e30
+
+
+def _flash_body(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, scale,
+                window, is_global, bq, bk, nk):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                                   # (BQ, D)
+    k = k_ref[0, 0]                                   # (BK, D)
+    v = v_ref[0, 0]                                   # (BK, D)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                         # (BQ, BK)
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = kpos <= qpos
+    if window > 0:
+        ok = ok if is_global > 0 else (ok & (qpos - kpos < window))
+    s = jnp.where(ok, s, _NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(
+    q: jax.Array,          # (B, H, S, D)
+    k: jax.Array,          # (B, H, S, D)  (kv heads pre-expanded by ops.py)
+    v: jax.Array,
+    window: int = 0,
+    is_global: float = 1.0,
+    bq: int = DEFAULT_BQ,
+    bk: int = DEFAULT_BK,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, s, d = q.shape
+    bq = min(bq, s)
+    bk = min(bk, s)
+    nq, nk = s // bq, s // bk
+    assert nq * bq == s and nk * bk == s, (s, bq, bk)
+    scale = 1.0 / (d ** 0.5)
+    body = functools.partial(
+        _flash_body, scale=scale, window=window, is_global=float(is_global),
+        bq=bq, bk=bk, nk=nk,
+    )
+    return pl.pallas_call(
+        body,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, iq, ik: (b_, h_, ik, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, iq, ik: (b_, h_, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max
+            pltpu.VMEM((bq, 1), jnp.float32),   # running denominator
+            pltpu.VMEM((bq, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,45 @@
+"""Public wrapper: GQA expansion, layout transposition, padding."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+__all__ = ["flash_attention_pallas"]
+
+
+@partial(jax.jit, static_argnames=("window", "is_global", "bq", "bk", "interpret"))
+def flash_attention_pallas(
+    q: jax.Array,          # (B, S, H, D)  — model layout
+    k: jax.Array,          # (B, S, KV, D)
+    v: jax.Array,
+    window: int = 0,
+    is_global: float = 1.0,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Drop-in for ``repro.models.attention.flash_attention`` on TPU.
+
+    KV heads are expanded to H (GQA handled by repeat — the kernel sees
+    MHA layout; the repeat is free on TPU as a broadcast-in-VMEM view at
+    lowering time for contiguous groups).
+    """
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    qt = jnp.transpose(q, (0, 2, 1, 3))
+    kt = jnp.transpose(k, (0, 2, 1, 3))
+    vt = jnp.transpose(v, (0, 2, 1, 3))
+    o = flash_attention_kernel(
+        qt, kt, vt, window=window, is_global=is_global, bq=bq, bk=bk,
+        interpret=interpret,
+    )
+    return jnp.transpose(o, (0, 2, 1, 3))

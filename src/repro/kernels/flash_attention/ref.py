@@ -1,0 +1,24 @@
+"""Pure-jnp oracle: materialized-softmax attention in (B,H,S,D) layout."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(q, k, v, window: int = 0, is_global: float = 1.0) -> jax.Array:
+    """q/k/v (B,H,S,D); causal (+ optional sliding window)."""
+    b, h, s, d = q.shape
+    scores = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) / jnp.sqrt(d)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    ok = kpos <= qpos
+    if window > 0 and not is_global > 0:
+        ok = ok & (qpos - kpos < window)
+    scores = jnp.where(ok, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32)).astype(q.dtype)

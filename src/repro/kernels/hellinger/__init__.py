@@ -1,0 +1,3 @@
+from repro.kernels.hellinger.ops import hellinger_matrix_pallas
+
+__all__ = ["hellinger_matrix_pallas"]

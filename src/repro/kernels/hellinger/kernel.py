@@ -1,0 +1,47 @@
+"""Pairwise Hellinger-distance kernel.
+
+HD(i,j) = sqrt(1 − Σ_c sqrt(p_ic) sqrt(p_jc)): with R = sqrt(P) the
+Bhattacharyya matrix is R Rᵀ — one MXU matmul per (128×128) output tile
+plus an elementwise epilogue.  Inputs arrive pre-normalized and
+pre-sqrt'd from ops.py (the cheap elementwise prologue does not deserve
+VMEM residency next to the matmul).
+
+Tiling: grid (K/BK, K/BK); each program loads two (BK, C) row panels
+into VMEM and writes one (BK, BK) tile.  BK = 128 matches the MXU;
+C is padded to a multiple of 128 by ops.py (zero columns contribute
+nothing to the inner product).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BK = 128
+
+
+def _hellinger_tile(r_i_ref, r_j_ref, out_ref):
+    ri = r_i_ref[...]                       # (BK, C) fp32
+    rj = r_j_ref[...]                       # (BK, C)
+    bc = jax.lax.dot_general(
+        ri, rj, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                        # (BK, BK) Bhattacharyya
+    out_ref[...] = jnp.sqrt(jnp.clip(1.0 - bc, 0.0, 1.0))
+
+
+def hellinger_kernel(r: jax.Array, interpret: bool = False) -> jax.Array:
+    """r: (K, C) sqrt-histograms, K % BK == 0, C % 128 == 0 (ops.py pads)."""
+    k, c = r.shape
+    grid = (k // BK, k // BK)
+    return pl.pallas_call(
+        _hellinger_tile,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BK, c), lambda i, j: (i, 0)),
+            pl.BlockSpec((BK, c), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((BK, BK), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((k, k), jnp.float32),
+        interpret=interpret,
+    )(r, r)

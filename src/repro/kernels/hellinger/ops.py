@@ -1,0 +1,38 @@
+"""Public wrapper: normalization, sqrt prologue, padding, diagonal fix."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hellinger.kernel import BK, hellinger_kernel
+
+__all__ = ["hellinger_matrix_pallas"]
+
+
+def _pad_to(x: jax.Array, m: int, axis: int) -> jax.Array:
+    r = x.shape[axis] % m
+    if r == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, m - r)
+    return jnp.pad(x, pad)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def hellinger_matrix_pallas(hists: jax.Array, interpret: bool = False) -> jax.Array:
+    """(K, C) histograms → (K, K) Hellinger matrix via the Pallas kernel.
+
+    Rows are normalized and sqrt'd here; K is padded to the 128 tile
+    (padded rows are all-zero ⇒ BC=0 ⇒ HD=1, sliced away); C padded with
+    zero classes (no effect on the inner product).
+    """
+    h = jnp.asarray(hists, jnp.float32)
+    k = h.shape[0]
+    h = h / jnp.maximum(h.sum(-1, keepdims=True), 1e-12)
+    r = jnp.sqrt(h)
+    r = _pad_to(_pad_to(r, BK, 0), 128, 1)
+    d = hellinger_kernel(r, interpret=interpret)[:k, :k]
+    return d * (1.0 - jnp.eye(k, dtype=d.dtype))

@@ -1,0 +1,5 @@
+"""Pure-jnp oracle for the Hellinger kernel (shared with repro.core)."""
+
+from repro.core.hellinger import hellinger_matrix as hellinger_matrix_ref
+
+__all__ = ["hellinger_matrix_ref"]

@@ -1,0 +1,102 @@
+"""Selective-scan (Mamba S6) Pallas kernel.
+
+The XLA path materializes the (S, D, N) discretized coefficients and the
+scan states in HBM (§Perf hillclimb 2: even after chunk-fusing the C
+contraction, traffic is ~O(S·D·N)).  GPU Mamba solves this with a fused
+CUDA kernel; the TPU-native equivalent keeps the running state h (D_blk,
+N) in VMEM scratch across sequential time blocks and streams only the
+O(S·D) inputs/outputs through HBM — an ~N× traffic reduction
+(N = 16 for the assigned hymba config).
+
+Grid: (batch, D blocks, time blocks), time innermost — scratch h
+persists across the time iterations of one (b, d-block) program.
+Per time block the kernel:
+  1. discretizes: a = exp(dt·A), drive = dt·(x·Bt)      (VPU elementwise)
+  2. runs the T-step recurrence with a fori_loop over rows in VMEM
+  3. contracts with C on the fly: y[t] = h_t · C_t + D·x[t]
+
+Block shapes: (BT, BD) with BD a lane multiple (128) and N ≤ 16 keeps
+the h scratch (BD × N fp32 = 8 KB) and the (BT, BD, N) temporaries
+within VMEM for BT = 128.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BT = 128
+DEFAULT_BD = 128
+
+
+def _scan_body(x_ref, dt_ref, bmat_ref, cmat_ref, a_log_ref, dskip_ref,
+               y_ref, h_ref, *, bt, bd, n, nt):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)           # (BT, BD)
+    dt = dt_ref[0].astype(jnp.float32)         # (BT, BD)
+    bmat = bmat_ref[0].astype(jnp.float32)     # (BT, N)
+    cmat = cmat_ref[0].astype(jnp.float32)     # (BT, N)
+    a_cont = -jnp.exp(a_log_ref[...])          # (BD, N)
+
+    def step(t, carry):
+        h, y = carry
+        dt_t = jax.lax.dynamic_slice_in_dim(dt, t, 1, 0)[0]      # (BD,)
+        x_t = jax.lax.dynamic_slice_in_dim(x, t, 1, 0)[0]
+        b_t = jax.lax.dynamic_slice_in_dim(bmat, t, 1, 0)[0]     # (N,)
+        c_t = jax.lax.dynamic_slice_in_dim(cmat, t, 1, 0)[0]
+        a_t = jnp.exp(dt_t[:, None] * a_cont)                    # (BD, N)
+        h = a_t * h + (dt_t * x_t)[:, None] * b_t[None, :]
+        y_t = jnp.sum(h * c_t[None, :], axis=1)                  # (BD,)
+        y = jax.lax.dynamic_update_slice_in_dim(y, y_t[None], t, 0)
+        return h, y
+
+    h0 = h_ref[...]
+    y0 = jnp.zeros((bt, bd), jnp.float32)
+    h_fin, y = jax.lax.fori_loop(0, bt, step, (h0, y0))
+    h_ref[...] = h_fin
+    y_ref[0] = (y + x * dskip_ref[...][None, :]).astype(y_ref.dtype)
+
+
+def mamba_scan_kernel(
+    x: jax.Array,        # (B, S, D) post-conv, post-silu inputs
+    dt: jax.Array,       # (B, S, D) softplus'd step sizes
+    bmat: jax.Array,     # (B, S, N)
+    cmat: jax.Array,     # (B, S, N)
+    a_log: jax.Array,    # (D, N)
+    d_skip: jax.Array,   # (D,)
+    bt: int = DEFAULT_BT,
+    bd: int = DEFAULT_BD,
+    interpret: bool = False,
+) -> jax.Array:
+    b, s, d = x.shape
+    n = bmat.shape[-1]
+    bt = min(bt, s)
+    bd = min(bd, d)
+    nt, nd = s // bt, d // bd
+    assert nt * bt == s and nd * bd == d, (s, d, bt, bd)
+    body = functools.partial(_scan_body, bt=bt, bd=bd, n=n, nt=nt)
+    return pl.pallas_call(
+        body,
+        grid=(b, nd, nt),
+        in_specs=[
+            pl.BlockSpec((1, bt, bd), lambda b_, j, it: (b_, it, j)),
+            pl.BlockSpec((1, bt, bd), lambda b_, j, it: (b_, it, j)),
+            pl.BlockSpec((1, bt, n), lambda b_, j, it: (b_, it, 0)),
+            pl.BlockSpec((1, bt, n), lambda b_, j, it: (b_, it, 0)),
+            pl.BlockSpec((bd, n), lambda b_, j, it: (j, 0)),
+            pl.BlockSpec((bd,), lambda b_, j, it: (j,)),
+        ],
+        out_specs=pl.BlockSpec((1, bt, bd), lambda b_, j, it: (b_, it, j)),
+        out_shape=jax.ShapeDtypeStruct((b, s, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bd, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, bmat, cmat, a_log, d_skip)

@@ -1,0 +1,38 @@
+"""Public wrapper: padding + dtype handling for the selective-scan kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mamba_scan.kernel import mamba_scan_kernel
+
+__all__ = ["mamba_scan_pallas"]
+
+
+@partial(jax.jit, static_argnames=("bt", "bd", "interpret"))
+def mamba_scan_pallas(x, dt, bmat, cmat, a_log, d_skip,
+                      bt: int = 128, bd: int = 128, interpret: bool = False):
+    """Fused selective scan: y[t] = C_t·h_t + D·x[t], h_t = Ā_t h_{t−1} + ΔB_t x_t.
+
+    Pads S to the time block and D to the lane block; padded time steps
+    have dt=0 ⇒ a=1, drive=0 (state passes through unchanged), padded
+    channels are sliced away.
+    """
+    b, s, d = x.shape
+    bt_ = min(bt, s)
+    pad_s = (-s) % bt_
+    pad_d = (-d) % min(bd, d)
+    if pad_s or pad_d:
+        pads3 = ((0, 0), (0, pad_s), (0, pad_d))
+        x = jnp.pad(x, pads3)
+        dt = jnp.pad(dt, pads3)
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad_s), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad_s), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, pad_d), (0, 0)))
+        d_skip = jnp.pad(d_skip, ((0, pad_d),))
+    y = mamba_scan_kernel(x, dt, bmat, cmat, a_log, d_skip,
+                          bt=bt, bd=bd, interpret=interpret)
+    return y[:, :s, :d]

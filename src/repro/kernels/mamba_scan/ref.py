@@ -1,0 +1,33 @@
+"""Pure-jnp oracle: the naive recurrence over discretized coefficients."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["mamba_scan_ref"]
+
+
+def mamba_scan_ref(x, dt, bmat, cmat, a_log, d_skip):
+    """x/dt (B,S,D), bmat/cmat (B,S,N), a_log (D,N), d_skip (D,) → y (B,S,D)."""
+    a_cont = -jnp.exp(a_log.astype(jnp.float32))
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        a_t = jnp.exp(dt_t[..., None] * a_cont)                  # (B,D,N)
+        h = a_t * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y_t = jnp.sum(h * c_t[:, None, :], axis=-1)
+        return h, y_t
+
+    b, s, d = x.shape
+    n = bmat.shape[-1]
+    h0 = jnp.zeros((b, d, n), jnp.float32)
+    xs = (
+        jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(bmat.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(cmat.astype(jnp.float32), 1, 0),
+    )
+    _, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + x.astype(jnp.float32) * d_skip
+    return y.astype(x.dtype)

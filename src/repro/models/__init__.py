@@ -1,0 +1,10 @@
+"""Model zoo: the paper's MLP + a composable transformer stack covering
+all 10 assigned architectures (dense / MoE / SSM / hybrid / audio / VLM).
+
+Models are plain pytrees + pure functions (init/apply), so they compose
+freely with vmap (federated simulation), pjit (scale-out), and grad.
+"""
+
+from repro.models.mlp import init_mlp, mlp_apply, cross_entropy_loss
+
+__all__ = ["init_mlp", "mlp_apply", "cross_entropy_loss"]

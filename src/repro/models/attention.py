@@ -1,0 +1,338 @@
+"""Attention: GQA (+qk-norm, partial RoPE, sliding window) and MLA.
+
+Three compute paths:
+
+- ``naive_attention``  — materializes S×S scores; oracle for tests.
+- ``flash_attention``  — double-scan online-softmax (query chunks ×
+    kv chunks), O(S·chunk) memory: this is what lets prefill_32k lower
+    without S² temporaries.  Pure JAX (the Pallas twin lives in
+    ``repro.kernels.flash_attention`` and is TPU-only).
+- ``decode_attention`` — one query position against a (possibly
+    window-masked) KV cache.
+
+Sliding-window blending: layer heterogeneity (gemma3's 5:1 local:global
+pattern) enters through the *scalar* ``is_global`` flag in the mask
+arithmetic — one scan over stacked layers, no S×S masks materialized
+(DESIGN.md §8.1).
+
+MLA (deepseek-v3): low-rank Q/KV projections with a decoupled shared
+RoPE key.  Prefill materializes per-head K/V; decode uses the absorbed
+formulation so the cache holds only (kv_lora_rank + rope_dim) per token
+— the 9.6× KV-cache compression that makes long_500k cheap for a 671B
+model.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, he_init, lecun_init, rms_norm
+
+__all__ = [
+    "init_gqa", "gqa_specs", "gqa_attention", "gqa_decode",
+    "init_mla", "mla_specs", "mla_attention", "mla_decode",
+    "naive_attention", "flash_attention", "decode_attention",
+]
+
+_NEG = -1e30
+
+
+def _mask_val(qpos, kpos, window, is_global):
+    """Additive mask: causal ∧ (global ∨ within window).  ``is_global`` is
+    a traced scalar (0/1) so heterogeneous layer patterns blend into one
+    formula."""
+    causal = kpos <= qpos
+    if window and window > 0:
+        in_window = (qpos - kpos) < window
+        ok = causal & (in_window | (is_global > 0))
+    else:
+        ok = causal
+    return jnp.where(ok, 0.0, _NEG)
+
+
+# ---------------------------------------------------------------------------
+# Core attention maths (GQA layout: q (B,S,KV,G,D), k/v (B,S,KV,D))
+# ---------------------------------------------------------------------------
+
+
+def naive_attention(q, k, v, window: int = 0, is_global=1.0) -> jax.Array:
+    """Oracle: full S×S scores.  q (B,Sq,H,Dk), k (B,Sk,KV,Dk),
+    v (B,Sk,KV,Dv) — Dv may differ from Dk (MLA)."""
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    dv = v.shape[-1]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, d)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(d).astype(jnp.float32)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    scores = scores + _mask_val(qpos, kpos, window, is_global)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, dv).astype(q.dtype)
+
+
+def flash_attention(
+    q, k, v, window: int = 0, is_global=1.0, chunk_q: int = 512, chunk_k: int = 512
+) -> jax.Array:
+    """Online-softmax attention, O(Sq·chunk_k) memory.  Causal.
+
+    q (B,Sq,H,Dk) with H = KV·G; k (B,Sk,KV,Dk); v (B,Sk,KV,Dv) — Dv may
+    differ from Dk (MLA uses 128-dim values under 192-dim keys).  Sq/Sk
+    must divide by the chunk sizes (configs guarantee this).
+    """
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = h // kv
+    cq, ck = min(chunk_q, sq), min(chunk_k, sk)
+    nq, nk = sq // cq, sk // ck
+    assert nq * cq == sq and nk * ck == sk, (sq, sk, cq, ck)
+
+    qg = q.reshape(b, nq, cq, kv, g, d)
+    kg = k.reshape(b, nk, ck, kv, d)
+    vg = v.reshape(b, nk, ck, kv, dv)
+    scale = 1.0 / jnp.sqrt(d)
+
+    def q_block(qi, q_blk):
+        # online softmax state over kv chunks
+        m0 = jnp.full((b, kv, g, cq), _NEG, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, kv, g, cq, dv), jnp.float32)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            k_blk, v_blk = kg[:, ki], vg[:, ki]
+            s = jnp.einsum(
+                "bqkgd,bskd->bkgqs", q_blk.astype(jnp.float32), k_blk.astype(jnp.float32)
+            ) * scale
+            qpos = qi * cq + jnp.arange(cq)[:, None]
+            kpos = ki * ck + jnp.arange(ck)[None, :]
+            s = s + _mask_val(qpos, kpos, window, is_global)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p, v_blk.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        # (b,kv,g,cq,d) -> (b,cq,kv,g,d)
+        return jnp.transpose(out, (0, 3, 1, 2, 4)).astype(q.dtype)
+
+    blocks = jax.lax.map(lambda qi: q_block(qi, qg[:, qi]), jnp.arange(nq))
+    # (nq, b, cq, kv, g, dv) -> (b, sq, h, dv)
+    out = jnp.transpose(blocks, (1, 0, 2, 3, 4, 5)).reshape(b, sq, h, dv)
+    return out
+
+
+def decode_attention(q, k_cache, v_cache, pos, window: int = 0, is_global=1.0):
+    """One-token attention: q (B,1,H,D) vs cache (B,S,KV,D); ``pos`` is the
+    current position (cache entries > pos are invalid)."""
+    b, _, h, d = q.shape
+    s, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    qg = q.reshape(b, kv, g, d)
+    scores = jnp.einsum(
+        "bkgd,bskd->bkgs", qg.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) / jnp.sqrt(d)
+    kpos = jnp.arange(s)[None, None, None, :]
+    scores = scores + _mask_val(pos, kpos, window, is_global)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA module (params + apply)
+# ---------------------------------------------------------------------------
+
+
+def init_gqa(key, cfg) -> dict:
+    d, h, kv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": lecun_init(ks[0], (d, h * hd), dt),
+        "wk": lecun_init(ks[1], (d, kv * hd), dt),
+        "wv": lecun_init(ks[2], (d, kv * hd), dt),
+        "wo": lecun_init(ks[3], (h * hd, d), dt, fan_in=h * hd),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), jnp.float32)
+        p["k_norm"] = jnp.zeros((hd,), jnp.float32)
+    return p
+
+
+def gqa_specs(cfg) -> dict:
+    s = {
+        "wq": ("embed", "heads"),
+        "wk": ("embed", "heads"),
+        "wv": ("embed", "heads"),
+        "wo": ("heads", "embed"),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = (None,)
+        s["k_norm"] = (None,)
+    return s
+
+
+def _project_qkv(p, cfg, x, sin, cos):
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (x @ p["wk"]).reshape(b, s, kv, hd)
+    v = (x @ p["wv"]).reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, sin, cos, cfg.rope_fraction)
+    k = apply_rope(k, sin, cos, cfg.rope_fraction)
+    return q, k, v
+
+
+def gqa_attention(p, cfg, x, sin, cos, is_global=1.0):
+    """Full-sequence (train/prefill).  Returns (out, (k, v)) — the k/v pair
+    becomes the layer's decode cache."""
+    q, k, v = _project_qkv(p, cfg, x, sin, cos)
+    w = cfg.sliding_window
+    if cfg.attn_impl == "naive":
+        o = naive_attention(q, k, v, w, is_global)
+    else:
+        o = flash_attention(q, k, v, w, is_global, cfg.attn_chunk, cfg.attn_chunk)
+    b, s = x.shape[:2]
+    out = o.reshape(b, s, -1) @ p["wo"]
+    return out, (k, v)
+
+
+def gqa_decode(p, cfg, x, sin_pos, cos_pos, cache, pos, is_global=1.0):
+    """One-token decode.  ``cache`` = (k_cache, v_cache) (B,Smax,KV,hd);
+    ``sin_pos/cos_pos`` are 1-row RoPE tables for the current position."""
+    k_cache, v_cache = cache
+    q, k_new, v_new = _project_qkv(p, cfg, x, sin_pos, cos_pos)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), pos, axis=1)
+    o = decode_attention(q, k_cache, v_cache, pos, cfg.sliding_window, is_global)
+    out = o.reshape(x.shape[0], 1, -1) @ p["wo"]
+    return out, (k_cache, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v3)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    rq, rkv = cfg.q_lora_rank, cfg.kv_lora_rank
+    nope, rope, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    return {
+        "wq_a": lecun_init(ks[0], (d, rq), dt),
+        "q_norm": jnp.zeros((rq,), jnp.float32),
+        "wq_b": lecun_init(ks[1], (rq, h * (nope + rope)), dt),
+        "wkv_a": lecun_init(ks[2], (d, rkv + rope), dt),
+        "kv_norm": jnp.zeros((rkv,), jnp.float32),
+        "wkv_b": lecun_init(ks[3], (rkv, h * (nope + vd)), dt),
+        "wo": lecun_init(ks[4], (h * vd, d), dt, fan_in=h * vd),
+    }
+
+
+def mla_specs(cfg) -> dict:
+    return {
+        "wq_a": ("embed", "q_lora"),
+        "q_norm": (None,),
+        "wq_b": ("q_lora", "heads"),
+        "wkv_a": ("embed", None),
+        "kv_norm": (None,),
+        "wkv_b": ("kv_lora", "heads"),
+        "wo": ("heads", "embed"),
+    }
+
+
+def _mla_qkv_latent(p, cfg, x, sin, cos):
+    """Shared front: q heads (nope+rope) + normalized latent + rotated shared k_rope."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    nope, rope = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q = rms_norm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps) @ p["wq_b"]
+    q = q.reshape(b, s, h, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, sin, cos)
+    kv_a = x @ p["wkv_a"]
+    latent = rms_norm(kv_a[..., : cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(kv_a[..., cfg.kv_lora_rank :][:, :, None, :], sin, cos)[:, :, 0]
+    return q_nope, q_rope, latent, k_rope
+
+
+def mla_attention(p, cfg, x, sin, cos, is_global=1.0):
+    """Prefill/train: materialize per-head K/V from the latent; returns
+    (out, (latent, k_rope)) — the compressed decode cache."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    nope, rope, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope, latent, k_rope = _mla_qkv_latent(p, cfg, x, sin, cos)
+    kvb = (latent @ p["wkv_b"]).reshape(b, s, h, nope + vd)
+    k_nope, v = kvb[..., :nope], kvb[..., nope:]
+    # Assemble MHA-layout q/k (KV = H) with the shared rope-key broadcast.
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, rope))], axis=-1
+    )
+    # §Perf (deepseek iteration): values stay at their native head dim —
+    # the old path zero-padded v from 128 to 192 dims, inflating the PV
+    # matmul and accumulator by 1.5×.
+    if cfg.attn_impl == "naive":
+        o = naive_attention(q_full, k_full, v, cfg.sliding_window, is_global)
+    else:
+        o = flash_attention(
+            q_full, k_full, v, cfg.sliding_window, is_global,
+            cfg.attn_chunk, cfg.attn_chunk,
+        )
+    out = o.reshape(b, s, h * vd) @ p["wo"]
+    return out, (latent, k_rope)
+
+
+def mla_decode(p, cfg, x, sin_pos, cos_pos, cache, pos, is_global=1.0):
+    """Absorbed-matmul decode: scores against the latent cache directly.
+
+    cache = (latent (B,Smax,rkv), k_rope (B,Smax,rope)).
+    """
+    b = x.shape[0]
+    h = cfg.n_heads
+    nope, rope, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    rkv = cfg.kv_lora_rank
+    latent_c, krope_c = cache
+    q_nope, q_rope, latent_new, krope_new = _mla_qkv_latent(p, cfg, x, sin_pos, cos_pos)
+    latent_c = jax.lax.dynamic_update_slice_in_dim(
+        latent_c, latent_new.astype(latent_c.dtype), pos, axis=1
+    )
+    krope_c = jax.lax.dynamic_update_slice_in_dim(
+        krope_c, krope_new.astype(krope_c.dtype), pos, axis=1
+    )
+    # Absorb W^{KV_b,K} into q: q_lat (B,H,rkv)
+    wkv_b = p["wkv_b"].reshape(rkv, h, nope + vd)
+    wk = wkv_b[..., :nope]          # (rkv, H, nope)
+    wv = wkv_b[..., nope:]          # (rkv, H, vd)
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0].astype(jnp.float32), wk.astype(jnp.float32))
+    s_lat = jnp.einsum("bhr,bsr->bhs", q_lat, latent_c.astype(jnp.float32))
+    s_rope = jnp.einsum(
+        "bhr,bsr->bhs", q_rope[:, 0].astype(jnp.float32), krope_c.astype(jnp.float32)
+    )
+    scores = (s_lat + s_rope) / jnp.sqrt(nope + rope)
+    kpos = jnp.arange(latent_c.shape[1])[None, None, :]
+    scores = scores + _mask_val(pos, kpos, cfg.sliding_window, is_global)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx_lat = jnp.einsum("bhs,bsr->bhr", probs, latent_c.astype(jnp.float32))
+    o = jnp.einsum("bhr,rhv->bhv", ctx_lat, wv.astype(jnp.float32))  # (B,H,vd)
+    out = o.reshape(b, 1, h * vd).astype(x.dtype) @ p["wo"]
+    return out, (latent_c, krope_c)

@@ -1,0 +1,104 @@
+"""Shared model building blocks: norms, activations, RoPE, initializers.
+
+Parameter convention: plain nested-dict pytrees of jnp arrays.  Every
+module provides ``init(key, ...) -> params`` and a parallel
+``specs(...) -> same-structure tree of logical-axis tuples`` consumed by
+``repro.sharding`` (structure equality is asserted by tests for all
+configs).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rms_norm",
+    "layer_norm",
+    "activation",
+    "rope_table",
+    "apply_rope",
+    "he_init",
+    "lecun_init",
+]
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm with fp32 accumulation (bf16-safe)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32) + bias.astype(
+        jnp.float32
+    )
+    return out.astype(x.dtype)
+
+
+def activation(name: str, x: jax.Array, gate: jax.Array | None = None) -> jax.Array:
+    """Gated / plain activations.  ``gate`` present → gated variants."""
+    if name == "swiglu":
+        assert gate is not None
+        return jax.nn.silu(gate) * x
+    if name == "geglu":
+        assert gate is not None
+        return jax.nn.gelu(gate) * x
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def rope_table(seq_len: int, dim: int, theta: float, dtype=jnp.float32):
+    """(seq_len, dim/2) sin/cos tables."""
+    assert dim % 2 == 0
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    t = jnp.arange(seq_len, dtype=jnp.float32)
+    ang = jnp.outer(t, freqs)
+    return jnp.sin(ang).astype(dtype), jnp.cos(ang).astype(dtype)
+
+
+def apply_rope(
+    x: jax.Array,             # (..., S, H, D)
+    sin: jax.Array,           # (S, rot/2)
+    cos: jax.Array,
+    rope_fraction: float = 1.0,
+) -> jax.Array:
+    """Rotary embedding on the leading ``rope_fraction`` of head dims.
+
+    Interleaved-pair convention: (x0, x1) -> (x0 c - x1 s, x0 s + x1 c).
+    ``sin``/``cos`` tables may be precomputed for absolute positions (the
+    decode path passes 1-row tables for the current position).
+    """
+    d = x.shape[-1]
+    rot = int(d * rope_fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    xf = xr.astype(jnp.float32).reshape(*xr.shape[:-1], rot // 2, 2)
+    x0, x1 = xf[..., 0], xf[..., 1]
+    # broadcast tables over batch and heads: (S, rot/2) -> (..., S, 1, rot/2)
+    s = sin[: x.shape[-3], None, :].astype(jnp.float32)
+    c = cos[: x.shape[-3], None, :].astype(jnp.float32)
+    y0 = x0 * c - x1 * s
+    y1 = x0 * s + x1 * c
+    y = jnp.stack([y0, y1], axis=-1).reshape(xr.shape).astype(x.dtype)
+    return jnp.concatenate([y, xp], axis=-1)
+
+
+def he_init(key, shape, dtype=jnp.bfloat16):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    return (jax.random.normal(key, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)).astype(dtype)
+
+
+def lecun_init(key, shape, dtype=jnp.bfloat16, fan_in: int | None = None):
+    fan_in = fan_in or (shape[-2] if len(shape) >= 2 else shape[-1])
+    return (jax.random.normal(key, shape, jnp.float32) * jnp.sqrt(1.0 / fan_in)).astype(dtype)

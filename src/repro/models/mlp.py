@@ -1,0 +1,45 @@
+"""The paper's model: MLP with two hidden layers of 200 neurons (§V-A)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_mlp", "mlp_apply", "cross_entropy_loss", "accuracy"]
+
+
+def init_mlp(key: jax.Array, sizes: tuple[int, ...] = (784, 200, 200, 10)):
+    """He-initialized MLP params: [{'w': (in, out), 'b': (out,)}...]."""
+    params = []
+    keys = jax.random.split(key, len(sizes) - 1)
+    for k, (fan_in, fan_out) in zip(keys, zip(sizes[:-1], sizes[1:])):
+        w = jax.random.normal(k, (fan_in, fan_out), jnp.float32) * jnp.sqrt(
+            2.0 / fan_in
+        )
+        params.append({"w": w, "b": jnp.zeros((fan_out,), jnp.float32)})
+    return params
+
+
+def mlp_apply(params, x: jax.Array) -> jax.Array:
+    """Forward pass; ReLU hidden activations, raw logits out."""
+    h = x
+    for layer in params[:-1]:
+        h = jax.nn.relu(h @ layer["w"] + layer["b"])
+    last = params[-1]
+    return h @ last["w"] + last["b"]
+
+
+def cross_entropy_loss(
+    logits: jax.Array, labels: jax.Array, weights: jax.Array | None = None
+) -> jax.Array:
+    """Mean CE over (optionally sample-weighted) batch."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    if weights is None:
+        return jnp.mean(nll)
+    w = weights.astype(jnp.float32)
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1e-9)
+
+
+def accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))

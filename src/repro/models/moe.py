@@ -1,0 +1,209 @@
+"""Mixture-of-Experts: shared + routed top-k experts.
+
+Two compute paths sharing one parameter layout:
+
+- ``moe_dense``     — every expert runs on every token, outputs combined
+    with router weights.  Exact (no token dropping).  Used by smoke tests
+    and as the oracle for the capacity path (with capacity ≥ tokens·k the
+    two agree exactly).
+- ``moe_capacity``  — production path: sort-based token dispatch with a
+    per-expert capacity, batched per-expert matmuls (MXU-friendly
+    (E, C, d) × (E, d, ff)), scatter-add combine.  Designed to run inside
+    ``shard_map`` (see ``moe_capacity_sharded``): experts sharded over the
+    ``model`` mesh axis, tokens local to the ``data`` shard, partial
+    outputs combined with ``psum`` over ``model`` — the TPU-native
+    替代 of the GPU all-to-all dispatch (DESIGN.md §4): every token meets
+    every expert because activations are replicated over ``model`` in the
+    Megatron layout, so no token redistribution collective is needed; the
+    psum doubles as the combine.
+
+Router: fp32 softmax over expert logits, top-k, weights renormalized over
+the selected k (deepseek-v3 convention).  Aux load-balance loss returned
+alongside (Σ_e f_e · p_e · E, the switch-transformer form).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import activation, lecun_init
+
+__all__ = [
+    "init_moe", "moe_specs", "moe_dense", "moe_capacity", "moe_capacity_sharded",
+]
+
+
+def init_moe(key, cfg) -> dict:
+    d = cfg.d_model
+    mc = cfg.moe
+    e, fe = mc.n_experts, mc.d_expert
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": lecun_init(ks[0], (d, e), jnp.float32),
+        "w_gate": lecun_init(ks[1], (e, d, fe), dt),
+        "w_up": lecun_init(ks[2], (e, d, fe), dt),
+        "w_down": lecun_init(ks[3], (e, fe, d), dt, fan_in=fe),
+    }
+    if mc.n_shared:
+        fs = mc.d_expert * mc.n_shared
+        p["shared_gate"] = lecun_init(ks[4], (d, fs), dt)
+        p["shared_up"] = lecun_init(ks[5], (d, fs), dt)
+        p["shared_down"] = lecun_init(ks[6], (fs, d), dt, fan_in=fs)
+    return p
+
+
+def moe_specs(cfg) -> dict:
+    s = {
+        "router": ("embed", None),
+        "w_gate": ("experts", "embed", "expert_ff"),
+        "w_up": ("experts", "embed", "expert_ff"),
+        "w_down": ("experts", "expert_ff", "embed"),
+    }
+    if cfg.moe.n_shared:
+        s["shared_gate"] = ("embed", "ffn")
+        s["shared_up"] = ("embed", "ffn")
+        s["shared_down"] = ("ffn", "embed")
+    return s
+
+
+def _router(p, cfg, x2d):
+    """x2d (T, d) -> top-k (ids (T,k), weights fp32 (T,k), aux loss)."""
+    mc = cfg.moe
+    logits = x2d.astype(jnp.float32) @ p["router"]          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = jax.lax.top_k(probs, mc.top_k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)     # renormalize over k
+    # Switch-style load-balance aux: E · Σ_e f_e p̄_e
+    e = mc.n_experts
+    f = jnp.zeros((e,), jnp.float32).at[ids.reshape(-1)].add(1.0) / (
+        x2d.shape[0] * mc.top_k
+    )
+    aux = e * jnp.sum(f * probs.mean(0))
+    return ids, w, aux
+
+
+def _shared_expert(p, cfg, x2d):
+    h = activation(cfg.mlp_activation, x2d @ p["shared_up"], x2d @ p["shared_gate"])
+    return h @ p["shared_down"]
+
+
+def _expert_ffn_all(p, cfg, xe):
+    """Batched per-expert FFN: xe (E, C, d) -> (E, C, d)."""
+    h = activation(
+        cfg.mlp_activation,
+        jnp.einsum("ecd,edf->ecf", xe, p["w_up"]),
+        jnp.einsum("ecd,edf->ecf", xe, p["w_gate"]),
+    )
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+
+
+def moe_dense(p, cfg, x) -> tuple[jax.Array, jax.Array]:
+    """Oracle path: all experts on all tokens.  x (B,S,d) -> (out, aux)."""
+    b, s, d = x.shape
+    x2d = x.reshape(-1, d)
+    ids, w, aux = _router(p, cfg, x2d)
+    e = cfg.moe.n_experts
+    # (E, T, d): every expert sees every token
+    ye = _expert_ffn_all(p, cfg, jnp.broadcast_to(x2d[None], (e, x2d.shape[0], d)))
+    # combine: for each token sum over its k experts
+    onehot = jax.nn.one_hot(ids, e, dtype=jnp.float32)       # (T, k, E)
+    w_full = jnp.einsum("tke,tk->te", onehot, w)             # (T, E)
+    out = jnp.einsum("te,etd->td", w_full.astype(x.dtype), ye)
+    if cfg.moe.n_shared:
+        out = out + _shared_expert(p, cfg, x2d)
+    return out.reshape(b, s, d), aux
+
+
+def moe_capacity(
+    p,
+    cfg,
+    x2d,
+    expert_offset: int = 0,
+    n_local_experts: int | None = None,
+    include_shared: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Capacity-based dispatch over the local expert range.
+
+    x2d (T, d); experts [offset, offset+E_loc) are computed here.  Router
+    runs on the full expert set (weights replicated).  Returns the
+    *partial* output (T, d) — caller psums over the expert-sharding axis —
+    plus the aux loss (identical on every shard).
+    """
+    mc = cfg.moe
+    t, d = x2d.shape
+    e_loc = n_local_experts or mc.n_experts
+    ids, w, aux = _router(p, cfg, x2d)                       # global ids
+    cap = int(max(1, round(t * mc.top_k * mc.capacity_factor / mc.n_experts)))
+
+    # Flatten (token, slot) assignments, keep only my experts.
+    flat_ids = ids.reshape(-1)                               # (T*k,)
+    flat_w = w.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t), mc.top_k)
+    local = flat_ids - expert_offset
+    mine = (local >= 0) & (local < e_loc)
+    local = jnp.where(mine, local, e_loc)                    # sentinel bucket
+    # Sort by (local expert, -weight): drops lowest-weight tokens on overflow.
+    # stop_gradient: the routing *order* is a discrete decision — gradients
+    # flow through the gathered weights/activations, not the sort key (also
+    # avoids sort-JVP, which this jaxlib build cannot lower).
+    key = jax.lax.stop_gradient(local.astype(jnp.float32) + (1.0 - flat_w))
+    order = jnp.argsort(key)
+    s_local = local[order]
+    s_tok = flat_tok[order]
+    s_w = jnp.where(mine, flat_w, 0.0)[order]
+    # Segment starts via scatter-min over sorted positions.
+    npos = s_local.shape[0]
+    first = jnp.full((e_loc + 1,), npos, jnp.int32).at[s_local].min(
+        jnp.arange(npos, dtype=jnp.int32)
+    )
+    pos_in_seg = jnp.arange(npos, dtype=jnp.int32) - first[s_local]
+    valid = (pos_in_seg < cap) & (s_local < e_loc)
+    # Dispatch index (E_loc, cap): entry -> position in sorted stream.
+    slot = jnp.where(valid, s_local * cap + pos_in_seg, e_loc * cap)
+    stream_of_slot = jnp.full((e_loc * cap + 1,), npos, jnp.int32).at[slot].min(
+        jnp.arange(npos, dtype=jnp.int32)
+    )[:-1]
+    slot_valid = stream_of_slot < npos
+    stream_idx = jnp.minimum(stream_of_slot, npos - 1)
+    tok_of_slot = jnp.where(slot_valid, s_tok[stream_idx], 0)
+    w_of_slot = jnp.where(slot_valid, s_w[stream_idx], 0.0)
+
+    xe = jnp.take(x2d, tok_of_slot, axis=0).reshape(e_loc, cap, d)
+    ye = _expert_ffn_all(
+        {"w_gate": p["w_gate"], "w_up": p["w_up"], "w_down": p["w_down"]}, cfg, xe
+    )
+    contrib = ye.reshape(-1, d) * w_of_slot[:, None].astype(ye.dtype)
+    out = jnp.zeros((t, d), ye.dtype).at[tok_of_slot].add(contrib)
+    if include_shared and cfg.moe.n_shared:
+        out = out + _shared_expert(p, cfg, x2d)
+    return out, aux
+
+
+def moe_capacity_sharded(p, cfg, x, mesh_axis: str = "model"):
+    """``shard_map``-ready capacity MoE: call inside a shard_map whose
+    in_specs give this block the *local* expert slice on ``mesh_axis`` and
+    the data-shard-local tokens; output is psum'd over ``mesh_axis``.
+
+    x (B_loc, S, d) with p["w_*"] already sliced to local experts; the
+    router and shared-expert weights arrive replicated.  The routed
+    partial outputs are psum'd over ``mesh_axis`` (each token's k experts
+    live on different shards); the shared expert is added once after the
+    psum — activations are replicated over ``mesh_axis`` so every shard
+    computes the identical shared contribution.
+    """
+    b, s, d = x.shape
+    e_loc = p["w_gate"].shape[0]
+    idx = jax.lax.axis_index(mesh_axis)
+    x2d = x.reshape(-1, d)
+    out2d, aux = moe_capacity(
+        p, cfg, x2d, expert_offset=idx * e_loc, n_local_experts=e_loc,
+        include_shared=False,
+    )
+    out2d = jax.lax.psum(out2d, mesh_axis)
+    if cfg.moe.n_shared:
+        # replicated over mesh_axis by design — see the §Perf note at the
+        # call site in transformer._run_moe (refuted TP hypothesis)
+        out2d = out2d + _shared_expert(p, cfg, x2d)
+    return out2d.reshape(b, s, d), aux

@@ -1,0 +1,414 @@
+"""State-space / recurrent blocks: Mamba-style selective SSM (hymba's
+parallel-SSM heads) and xLSTM (mLSTM + sLSTM).
+
+TPU adaptation (DESIGN.md §4): GPU Mamba fuses the selective scan into a
+single kernel; on TPU the natural mapping is a *chunked* linear scan —
+``associative_scan`` (log-depth, VPU-friendly) inside fixed-size chunks,
+``lax.scan`` carrying state between chunks.  Memory is O(B·chunk·d·N)
+instead of O(B·S·d·N), which is what lets long-context shapes lower.
+
+mLSTM prefill uses a flash-attention-style double scan with a running
+max over the exponential-gate logits (the stabilizer m_t from the xLSTM
+paper) — quadratic compute, O(chunk²) memory.  Decode is the O(1)
+recurrent form for all blocks.
+
+Documented deviation: sLSTM here drops the h→gate recurrent feedback so
+the recurrence stays linear (associative-scan-able); see DESIGN.md §9.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import lecun_init, rms_norm
+
+__all__ = [
+    "chunked_linear_scan",
+    "init_mamba", "mamba_specs", "mamba_seq", "mamba_decode",
+    "init_xlstm", "xlstm_specs", "mlstm_seq", "mlstm_decode",
+    "slstm_seq", "slstm_decode",
+]
+
+_NEG = -1e30
+
+
+def chunked_linear_scan(a, b, h0, chunk: int):
+    """h_t = a_t · h_{t−1} + b_t along axis 1.
+
+    a, b: (B, S, ...) elementwise coefficients; h0: (B, ...) initial state.
+    Returns (h_all (B,S,...), h_final (B,...)).
+    """
+    bsz, s = a.shape[:2]
+    c = min(chunk, s)
+    nc = s // c
+    assert nc * c == s, (s, c)
+    rest = a.shape[2:]
+    a_c = jnp.moveaxis(a.reshape(bsz, nc, c, *rest), 1, 0)
+    b_c = jnp.moveaxis(b.reshape(bsz, nc, c, *rest), 1, 0)
+
+    def combine(x, y):
+        return (y[0] * x[0], y[0] * x[1] + y[1])
+
+    def outer(h, ab):
+        ac, bc = ab
+        acc_a, acc_b = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        h_all = acc_a * h[:, None] + acc_b
+        return h_all[:, -1], h_all
+
+    h_final, chunks = jax.lax.scan(outer, h0, (a_c, b_c))
+    out = jnp.moveaxis(chunks, 0, 1).reshape(bsz, s, *rest)
+    return out, h_final
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM (hymba's SSM heads)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba(key, cfg) -> dict:
+    d = cfg.d_model
+    sc = cfg.ssm
+    n = sc.d_state
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    d_in = d  # hymba: SSM heads run at model width in parallel with attention
+    return {
+        "w_in": lecun_init(ks[0], (d, 2 * d_in), dt),
+        "conv_w": (jax.random.normal(ks[1], (sc.conv_kernel, d_in), jnp.float32) * 0.2).astype(dt),
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32), (d_in, 1))),
+        "w_dt": lecun_init(ks[2], (d_in,), jnp.float32, fan_in=d_in),
+        "b_dt": jnp.full((d_in,), -4.6, jnp.float32),  # softplus ≈ 0.01
+        "w_b": lecun_init(ks[3], (d_in, n), dt),
+        "w_c": lecun_init(ks[4], (d_in, n), dt),
+        "d_skip": jnp.ones((d_in,), jnp.float32),
+        "w_out": lecun_init(ks[5], (d_in, d), dt),
+    }
+
+
+def mamba_specs(cfg) -> dict:
+    return {
+        "w_in": ("embed", "ffn"),
+        "conv_w": (None, "ffn"),
+        "a_log": ("ffn", "state"),
+        "w_dt": ("ffn",),
+        "b_dt": ("ffn",),
+        "w_b": ("ffn", "state"),
+        "w_c": ("ffn", "state"),
+        "d_skip": ("ffn",),
+        "w_out": ("ffn", "embed"),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv via shifted adds (kernel k ≤ ~4: cheaper than
+    conv_general_dilated and trivially shardable).  x (B,S,D), w (k,D)."""
+    k = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, k):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[-1 - i]
+    return out
+
+
+def _ssm_coeffs(p, x_in, dtv=None):
+    """Shared discretization: returns (decay a, drive b, C, D·x) all fp32."""
+    xf = x_in.astype(jnp.float32)
+    dt = jax.nn.softplus(xf * p["w_dt"] + p["b_dt"])              # (B,S,D)
+    a_cont = -jnp.exp(p["a_log"])                                  # (D,N)
+    a = jnp.exp(dt[..., None] * a_cont)                            # (B,S,D,N)
+    bmat = xf @ p["w_b"].astype(jnp.float32)                       # (B,S,N)
+    b = dt[..., None] * bmat[..., None, :] * xf[..., None]         # (B,S,D,N)
+    cmat = xf @ p["w_c"].astype(jnp.float32)                       # (B,S,N)
+    return a, b, cmat, xf * p["d_skip"]
+
+
+def mamba_seq(p, cfg, x, state=None, conv_tail=None):
+    """Full-sequence selective SSM.  x (B,S,d) → (out (B,S,d), (h, conv_tail)).
+
+    ``state``/``conv_tail`` carry recurrent state across calls (prefill →
+    decode hand-off).
+
+    §Perf (hillclimb 2): the C-contraction is fused into the chunk loop —
+    the (B,S,D,N) state tensor never round-trips HBM in full; only the
+    per-chunk (B,c,D,N) slice is live, and what crosses the loop boundary
+    is the contracted (B,c,D) output.  (The Pallas twin in
+    ``repro.kernels.mamba_scan`` removes the N-dim traffic entirely by
+    keeping h in VMEM.)
+    """
+    bsz, s, d = x.shape
+    sc = cfg.ssm
+    xz = x @ p["w_in"]
+    raw, z = jnp.split(xz, 2, axis=-1)
+    if conv_tail is None:
+        conv_tail = jnp.zeros((bsz, sc.conv_kernel - 1, raw.shape[-1]), jnp.float32)
+    ext = jnp.concatenate([conv_tail.astype(raw.dtype), raw], axis=1)
+    x_in = _causal_conv(ext, p["conv_w"])[:, conv_tail.shape[1] :]
+    x_in = jax.nn.silu(x_in)
+    a, b, cmat, dx = _ssm_coeffs(p, x_in)
+    d_in, n = p["a_log"].shape
+    h0 = state if state is not None else jnp.zeros((bsz, d_in, n), jnp.float32)
+
+    if not sc.fuse_contraction:
+        # baseline layout: full (B,S,D,N) state tensor round-trips HBM
+        h_all, h_fin = chunked_linear_scan(a, b, h0, sc.chunk)
+        y = jnp.einsum("bsdn,bsn->bsd", h_all, cmat) + dx
+        out = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["w_out"]
+        new_conv_tail = ext[:, -(sc.conv_kernel - 1) :].astype(jnp.float32)
+        return out, (h_fin, new_conv_tail)
+
+    c = min(sc.chunk, s)
+    nc = s // c
+    assert nc * c == s, (s, c)
+    a_c = jnp.moveaxis(a.reshape(bsz, nc, c, d_in, n), 1, 0)
+    b_c = jnp.moveaxis(b.reshape(bsz, nc, c, d_in, n), 1, 0)
+    cm_c = jnp.moveaxis(cmat.reshape(bsz, nc, c, n), 1, 0)
+
+    def combine(u, v):
+        return (v[0] * u[0], v[0] * u[1] + v[1])
+
+    def outer(h, inp):
+        ac, bc, cmc = inp
+        acc_a, acc_b = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        h_all = acc_a * h[:, None] + acc_b                 # (B,c,D,N) chunk-local
+        y_c = jnp.einsum("bsdn,bsn->bsd", h_all, cmc)      # contract before HBM
+        return h_all[:, -1], y_c
+
+    h_fin, y_chunks = jax.lax.scan(outer, h0, (a_c, b_c, cm_c))
+    y = jnp.moveaxis(y_chunks, 0, 1).reshape(bsz, s, d_in) + dx
+    out = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["w_out"]
+    new_conv_tail = ext[:, -(sc.conv_kernel - 1) :].astype(jnp.float32)
+    return out, (h_fin, new_conv_tail)
+
+
+def mamba_decode(p, cfg, x, state, conv_tail):
+    """One-token step.  x (B,1,d); state (B,D,N); conv_tail (B,k−1,D)."""
+    sc = cfg.ssm
+    xz = x @ p["w_in"]
+    x_raw, z = jnp.split(xz, 2, axis=-1)
+    ext = jnp.concatenate([conv_tail.astype(x_raw.dtype), x_raw], axis=1)
+    x_in = _causal_conv(ext, p["conv_w"])[:, -1:]
+    x_in = jax.nn.silu(x_in)
+    a, b, cmat, dx = _ssm_coeffs(p, x_in)
+    h = a[:, 0] * state + b[:, 0]
+    y = jnp.einsum("bdn,bn->bd", h, cmat[:, 0]) + dx[:, 0]
+    out = (y[:, None].astype(x.dtype) * jax.nn.silu(z)) @ p["w_out"]
+    new_tail = ext[:, -(sc.conv_kernel - 1) :].astype(jnp.float32)
+    return out, (h, new_tail)
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory) + sLSTM (scalar memory)
+# ---------------------------------------------------------------------------
+
+
+def init_xlstm(key, cfg) -> dict:
+    """One xLSTM block's parameters (layout shared by mLSTM and sLSTM so
+    the layer stack can alternate under a single scan)."""
+    d = cfg.d_model
+    h = cfg.ssm.n_heads
+    hd = d // h
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_up": lecun_init(ks[0], (d, 2 * d), dt),      # core input + output gate
+        "wq": lecun_init(ks[1], (d, d), dt),
+        "wk": lecun_init(ks[2], (d, d), dt),
+        "wv": lecun_init(ks[3], (d, d), dt),
+        "w_if": lecun_init(ks[4], (d, 2 * h), jnp.float32),  # input/forget gate logits
+        "b_if": jnp.concatenate([jnp.zeros((h,)), jnp.full((h,), 3.0)]),
+        "w_down": lecun_init(ks[5], (d, d), dt),
+        "core_norm": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def xlstm_specs(cfg) -> dict:
+    return {
+        "w_up": ("embed", "ffn"),
+        "wq": ("embed", "heads"),
+        "wk": ("embed", "heads"),
+        "wv": ("embed", "heads"),
+        "w_if": ("embed", None),
+        "b_if": (None,),
+        "w_down": ("heads", "embed"),
+        "core_norm": (None,),
+    }
+
+
+def _xlstm_proj(p, cfg, x):
+    b, s, d = x.shape
+    h = cfg.ssm.n_heads
+    hd = d // h
+    up = x @ p["w_up"]
+    core_in, out_gate = jnp.split(up, 2, axis=-1)
+    q = (core_in @ p["wq"]).reshape(b, s, h, hd)
+    k = (core_in @ p["wk"]).reshape(b, s, h, hd) / jnp.sqrt(hd)
+    v = (core_in @ p["wv"]).reshape(b, s, h, hd)
+    gates = core_in.astype(jnp.float32) @ p["w_if"] + p["b_if"]
+    i_log = gates[..., :h]                                   # (B,S,H) exp-gate logit
+    f_log = jax.nn.log_sigmoid(gates[..., h:])               # log f ∈ (−inf, 0)
+    return q, k, v, i_log, f_log, out_gate
+
+
+def mlstm_seq(p, cfg, x, state=None):
+    """Chunkwise-parallel mLSTM with running-max stabilization.
+
+    Quadratic within the sequence (like attention) but computed chunk ×
+    chunk flash-style.  state = (C (B,H,hd,hd), n (B,H,hd), m (B,H)).
+    Cross-call state hand-off supported for prefill→decode.
+    """
+    b, s, d = x.shape
+    hh = cfg.ssm.n_heads
+    hd = d // hh
+    ck = min(cfg.ssm.chunk, s)
+    nc = s // ck
+    assert nc * ck == s
+    q, k, v, i_log, f_log, out_gate = _xlstm_proj(p, cfg, x)
+    # cumulative log-forget within the whole sequence, fp32
+    F = jnp.cumsum(f_log, axis=1)                            # (B,S,H)
+
+    qc = jnp.moveaxis(q.reshape(b, nc, ck, hh, hd), 1, 0)
+    kc = jnp.moveaxis(k.reshape(b, nc, ck, hh, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, nc, ck, hh, hd), 1, 0)
+    Fc = jnp.moveaxis(F.reshape(b, nc, ck, hh), 1, 0)
+    ic = jnp.moveaxis(i_log.reshape(b, nc, ck, hh), 1, 0)
+
+    def outer(carry, blk):
+        C, n, m, F_prev = carry                              # recurrent state @ chunk start
+        qb, kb, vb, Fb, ib = blk
+        # intra-chunk decay logits: D_ij = F_i − F_j + i_j   (j ≤ i, within chunk)
+        Fi = Fb[:, :, None, :]                               # (B,cq,1,H)
+        Fj = Fb[:, None, :, :]
+        lg = Fi - Fj + ib[:, None, :, :]
+        ii = jnp.arange(ck)
+        causal = (ii[:, None] >= ii[None, :])[None, :, :, None]
+        lg = jnp.where(causal, lg, _NEG)
+        # inter-chunk (state) contribution logit: F_i − F_prev + m
+        lg_state = Fb - F_prev[:, None, :] + m[:, None, :]   # (B,cq,H)
+        m_new = jnp.maximum(jnp.max(lg, axis=2), lg_state)   # (B,cq,H)
+        w_intra = jnp.exp(lg - m_new[:, :, None, :])         # (B,cq,ck,H)
+        w_state = jnp.exp(lg_state - m_new)                  # (B,cq,H)
+        qf = qb.astype(jnp.float32)
+        kf = kb.astype(jnp.float32)
+        vf = vb.astype(jnp.float32)
+        dots = jnp.einsum("bqhd,bkhd->bqkh", qf, kf)
+        h_intra = jnp.einsum("bqkh,bqkh,bkhe->bqhe", dots, w_intra, vf)
+        n_intra = jnp.einsum("bqkh,bqkh->bqh", dots, w_intra)
+        h_state = jnp.einsum("bqhd,bhde->bqhe", qf, C) * w_state[..., None]
+        n_state = jnp.einsum("bqhd,bhd->bqh", qf, n) * w_state
+        num = h_intra + h_state
+        den = jnp.abs(n_intra + n_state)
+        hmax = jnp.maximum(den, jnp.exp(-m_new))
+        y = num / hmax[..., None]                            # (B,cq,H,hd)
+        # ---- update recurrent state to chunk end ----
+        F_end = Fb[:, -1, :]                                 # (B,H)
+        m_endcand_state = F_end - F_prev + m
+        decay_j = F_end[:, None, :] - Fb + ib                # (B,ck,H): contribution of each j to end-state
+        m_end = jnp.maximum(jnp.max(decay_j, axis=1), m_endcand_state)
+        wj = jnp.exp(decay_j - m_end[:, None, :])
+        C_new = jnp.exp(m_endcand_state - m_end)[:, :, None, None] * C + jnp.einsum(
+            "bkh,bkhd,bkhe->bhde", wj, kf, vf
+        )
+        n_new = jnp.exp(m_endcand_state - m_end)[:, :, None] * n + jnp.einsum(
+            "bkh,bkhd->bhd", wj, kf
+        )
+        return (C_new, n_new, m_end, F_end), y
+
+    if state is None:
+        C0 = jnp.zeros((b, hh, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, hh, hd), jnp.float32)
+        m0 = jnp.full((b, hh), _NEG, jnp.float32)
+    else:
+        C0, n0, m0 = state
+    F0 = jnp.zeros((b, hh), jnp.float32)
+    (C, n, m, _), ys = jax.lax.scan(outer, (C0, n0, m0, F0), (qc, kc, vc, Fc, ic))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, d)
+    y = rms_norm(y.astype(x.dtype), p["core_norm"], cfg.norm_eps)
+    out = (y * jax.nn.silu(out_gate)) @ p["w_down"]
+    return out, (C, n, m)
+
+
+def mlstm_decode(p, cfg, x, state):
+    """O(1) recurrent mLSTM step.  x (B,1,d)."""
+    b, _, d = x.shape
+    hh = cfg.ssm.n_heads
+    hd = d // hh
+    q, k, v, i_log, f_log, out_gate = _xlstm_proj(p, cfg, x)
+    C, n, m = state
+    i1 = i_log[:, 0]                                         # (B,H)
+    f1 = f_log[:, 0]
+    m_new = jnp.maximum(f1 + m, i1)
+    fp = jnp.exp(f1 + m - m_new)
+    ip = jnp.exp(i1 - m_new)
+    kf = k[:, 0].astype(jnp.float32)
+    vf = v[:, 0].astype(jnp.float32)
+    qf = q[:, 0].astype(jnp.float32)
+    C = fp[:, :, None, None] * C + ip[:, :, None, None] * jnp.einsum("bhd,bhe->bhde", kf, vf)
+    n = fp[:, :, None] * n + ip[:, :, None] * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, C)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n))
+    y = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    y = y.reshape(b, 1, d).astype(x.dtype)
+    y = rms_norm(y, p["core_norm"], cfg.norm_eps)
+    out = (y * jax.nn.silu(out_gate)) @ p["w_down"]
+    return out, (C, n, m_new)
+
+
+def slstm_seq(p, cfg, x, state=None):
+    """sLSTM (linearized, no h-feedback — DESIGN.md §9): per-head scalar
+    memory with exponential gating, computed as a chunked linear scan.
+
+    state = (c (B,H,hd), n (B,H,hd), m (B,H)).
+    """
+    b, s, d = x.shape
+    hh = cfg.ssm.n_heads
+    hd = d // hh
+    q, k, v, i_log, f_log, out_gate = _xlstm_proj(p, cfg, x)
+    del q, k  # sLSTM uses the value path only (z = tanh proj)
+    z = jnp.tanh(v.astype(jnp.float32))                      # (B,S,H,hd)
+    # stabilized gates via running max: m_t = max(f_t + m_{t-1}, i_t)
+    # m recursion is itself a (max,+) scan — associative.
+    def mcomb(a_, b_):
+        return (a_[0] + b_[0], jnp.maximum(a_[1] + b_[0], b_[1]))
+
+    fsum, m_run = jax.lax.associative_scan(mcomb, (f_log, i_log), axis=1)
+    if state is not None:
+        m_prev0 = state[2]
+        m_run = jnp.maximum(m_run, fsum + m_prev0[:, None])
+    fp = jnp.exp(
+        f_log + jnp.concatenate([jnp.full_like(m_run[:, :1], _NEG) if state is None
+                                 else state[2][:, None], m_run[:, :-1]], axis=1) - m_run
+    )
+    ip = jnp.exp(i_log - m_run)
+    a = fp[..., None] * jnp.ones((1, 1, hh, hd))
+    bdrive = ip[..., None] * z
+    c0 = state[0] if state is not None else jnp.zeros((b, hh, hd), jnp.float32)
+    n0 = state[1] if state is not None else jnp.zeros((b, hh, hd), jnp.float32)
+    c_all, c_fin = chunked_linear_scan(a, bdrive, c0, cfg.ssm.chunk)
+    n_all, n_fin = chunked_linear_scan(a, ip[..., None] * jnp.ones_like(z), n0, cfg.ssm.chunk)
+    h = c_all / jnp.maximum(jnp.abs(n_all), 1e-6)
+    y = h.reshape(b, s, d).astype(x.dtype)
+    y = rms_norm(y, p["core_norm"], cfg.norm_eps)
+    out = (y * jax.nn.silu(out_gate)) @ p["w_down"]
+    m_fin = m_run[:, -1]
+    return out, (c_fin, n_fin, m_fin)
+
+
+def slstm_decode(p, cfg, x, state):
+    b, _, d = x.shape
+    hh = cfg.ssm.n_heads
+    hd = d // hh
+    _, _, v, i_log, f_log, out_gate = _xlstm_proj(p, cfg, x)
+    z = jnp.tanh(v[:, 0].astype(jnp.float32))
+    c, n, m = state
+    i1, f1 = i_log[:, 0], f_log[:, 0]
+    m_new = jnp.maximum(f1 + m, i1)
+    fp = jnp.exp(f1 + m - m_new)[..., None]
+    ip = jnp.exp(i1 - m_new)[..., None]
+    c = fp * c + ip * z
+    n = fp * n + ip
+    h = c / jnp.maximum(jnp.abs(n), 1e-6)
+    y = h.reshape(b, 1, d).astype(x.dtype)
+    y = rms_norm(y, p["core_norm"], cfg.norm_eps)
+    out = (y * jax.nn.silu(out_gate)) @ p["w_down"]
+    return out, (c, n, m_new)

@@ -1,0 +1,28 @@
+"""Optimizer substrate — optax-like, pure JAX, built here (optax not offline).
+
+``Optimizer`` is an (init, update) pair over pytrees.  ``update`` returns
+*updates to add* to params (already scaled by -lr), matching optax
+conventions so training loops read identically.
+
+Federated local-objective modifiers (FedProx/FedDyn) live in
+``fedmods``; they transform gradients given the round's global params and
+per-client state, leaving the base optimizer untouched — exactly how the
+paper frames them (regularization-based baselines, §II-A).
+"""
+
+from repro.optim.optimizers import Optimizer, sgd, adamw, clip_by_global_norm, chain
+from repro.optim.schedules import constant, warmup_cosine
+from repro.optim.fedmods import fedprox_grads, feddyn_grads, feddyn_update_state
+
+__all__ = [
+    "Optimizer",
+    "sgd",
+    "adamw",
+    "chain",
+    "clip_by_global_norm",
+    "constant",
+    "warmup_cosine",
+    "fedprox_grads",
+    "feddyn_grads",
+    "feddyn_update_state",
+]

@@ -1,0 +1,44 @@
+"""Federated local-objective modifiers: FedProx and FedDyn.
+
+These are the paper's regularization-based baselines (§II-A).  Both are
+expressed as *gradient transforms* — ∇(extra term) added to the task
+gradient — so they compose with any base optimizer:
+
+FedProx  (Li et al., 2020):   + (mu/2)·‖θ − θ_g‖²
+    → grads += mu · (θ − θ_g)
+
+FedDyn   (Acar et al., 2021): − ⟨h_i, θ⟩ + (a/2)·‖θ − θ_g‖²
+    → grads += −h_i + a · (θ − θ_g)
+    with per-client state   h_i ← h_i − a · (θ_local_end − θ_g)
+    and the server applying θ ← mean_k θ_k − (1/a)·mean_K h   (see
+    ``repro.federated.aggregation.feddyn_server``).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["fedprox_grads", "feddyn_grads", "feddyn_update_state"]
+
+
+def fedprox_grads(grads, params, global_params, mu: float):
+    return jax.tree.map(
+        lambda g, p, gp: g + mu * (p - gp), grads, params, global_params
+    )
+
+
+def feddyn_grads(grads, params, global_params, h_state, alpha: float):
+    return jax.tree.map(
+        lambda g, p, gp, h: g - h + alpha * (p - gp),
+        grads,
+        params,
+        global_params,
+        h_state,
+    )
+
+
+def feddyn_update_state(h_state, local_params_end, global_params, alpha: float):
+    """Per-client h_i update after finishing local training."""
+    return jax.tree.map(
+        lambda h, p, gp: h - alpha * (p - gp), h_state, local_params_end, global_params
+    )

@@ -1,0 +1,122 @@
+"""SGD / AdamW / gradient clipping — pure-JAX pytree optimizers."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "sgd", "adamw", "clip_by_global_norm", "chain"]
+
+Schedule = Callable[[jax.Array], jax.Array] | float
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]  # (grads, state, params)
+
+
+def _lr_at(lr: Schedule, count: jax.Array) -> jax.Array:
+    return lr(count) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+def sgd(lr: Schedule, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    """SGD, optionally with (Nesterov) momentum.  The paper trains with
+    plain SGD(lr=0.005) — momentum defaults off."""
+
+    def init(params):
+        mu = jax.tree.map(jnp.zeros_like, params) if momentum else ()
+        return {"count": jnp.zeros((), jnp.int32), "mu": mu}
+
+    def update(grads, state, params=None):
+        del params
+        step = _lr_at(lr, state["count"])
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+            eff = (
+                jax.tree.map(lambda m, g: momentum * m + g, mu, grads)
+                if nesterov
+                else mu
+            )
+        else:
+            mu, eff = (), grads
+        updates = jax.tree.map(lambda g: (-step * g).astype(g.dtype), eff)
+        return updates, {"count": state["count"] + 1, "mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adamw(
+    lr: Schedule,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    """AdamW with fp32 moments regardless of param dtype (bf16-safe)."""
+
+    def init(params):
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "count": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(f32, params),
+            "v": jax.tree.map(f32, params),
+        }
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        step = _lr_at(lr, state["count"])
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)), state["v"], grads
+        )
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def upd(m_, v_, p):
+            adam = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            return (-step * (adam + weight_decay * p.astype(jnp.float32))).astype(p.dtype)
+
+        updates = jax.tree.map(upd, m, v, params)
+        return updates, {"count": c, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(max_norm: float) -> Optimizer:
+    """Gradient transform: rescale grads so the global L2 norm ≤ max_norm."""
+
+    def init(params):
+        del params
+        return ()
+
+    def update(grads, state, params=None):
+        del params
+        sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+        norm = jnp.sqrt(sq)
+        scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+        return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), state
+
+    return Optimizer(init, update)
+
+
+def chain(*transforms: Optimizer) -> Optimizer:
+    """Compose gradient transforms left→right (last one produces updates)."""
+
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(grads, state, params):
+        new_state = []
+        for t, s in zip(transforms, state):
+            grads, s2 = t.update(grads, s, params)
+            new_state.append(s2)
+        return grads, tuple(new_state)
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    """θ ← θ + updates (updates already carry the -lr scaling)."""
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)

@@ -1,0 +1,24 @@
+"""Learning-rate schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["constant", "warmup_cosine"]
+
+
+def constant(lr: float):
+    return lambda count: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int, floor: float = 0.0):
+    """Linear warmup to ``peak_lr`` then cosine decay to ``floor``."""
+
+    def sched(count):
+        c = count.astype(jnp.float32)
+        warm = peak_lr * c / max(warmup_steps, 1)
+        t = jnp.clip((c - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = floor + 0.5 * (peak_lr - floor) * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(c < warmup_steps, warm, cos)
+
+    return sched

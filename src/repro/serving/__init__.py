@@ -1,0 +1,5 @@
+"""Serving substrate: batched request scheduling over the decode path."""
+
+from repro.serving.scheduler import Request, BatchScheduler
+
+__all__ = ["Request", "BatchScheduler"]

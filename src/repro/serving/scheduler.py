@@ -1,0 +1,134 @@
+"""Bucketed batch scheduler for the serving path.
+
+Production pattern (TGI-style length bucketing, adapted to the
+fixed-shape jit world): requests are queued by exact prompt length, so
+each prefill/decode group compiles once per (bucket length, batch size)
+and runs with zero padding-mask complexity — every sequence in a group
+shares positions, which is exactly what ``decode_step``'s scalar ``pos``
+wants.  Underfull groups are padded with dummy rows (masked out of the
+returned results).
+
+Usage:
+    sched = BatchScheduler(cfg, params, max_batch=8, max_new=32)
+    ids = [sched.submit(prompt) for prompt in prompts]
+    sched.run()                       # drains the queue
+    out = sched.result(ids[0])        # np.ndarray of generated tokens
+
+Greedy decoding with optional EOS early-exit per group.
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import decode_step, prefill
+
+__all__ = ["Request", "BatchScheduler"]
+
+
+@dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray          # (prompt_len,) int32
+    max_new: int
+    done: bool = False
+    output: np.ndarray | None = None
+
+
+class BatchScheduler:
+    def __init__(self, cfg, params, max_batch: int = 8, max_new: int = 32,
+                 eos_id: int | None = None, mesh=None):
+        if cfg.input_mode != "tokens":
+            raise ValueError("BatchScheduler serves token-input archs")
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_new = max_new
+        self.eos_id = eos_id
+        self.mesh = mesh
+        self._queue: dict[int, list[Request]] = defaultdict(list)  # by prompt len
+        self._results: dict[int, Request] = {}
+        self._next_id = 0
+        self._prefill = jax.jit(
+            lambda p, b, ml: prefill(p, cfg, b, max_len=ml, mesh=mesh),
+            static_argnums=(2,),
+        )
+        self._decode = jax.jit(
+            lambda p, b, c, pos: decode_step(p, cfg, b, c, pos, mesh=mesh)
+        )
+
+    # ------------------------------------------------------------------
+    def submit(self, tokens: np.ndarray, max_new: int | None = None) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        req = Request(rid, np.asarray(tokens, np.int32), max_new or self.max_new)
+        self._queue[len(req.tokens)].append(req)
+        self._results[rid] = req
+        return rid
+
+    def pending(self) -> int:
+        return sum(len(v) for v in self._queue.values())
+
+    def result(self, rid: int) -> np.ndarray:
+        req = self._results[rid]
+        if not req.done:
+            raise RuntimeError(f"request {rid} not finished; call run()")
+        return req.output
+
+    # ------------------------------------------------------------------
+    def _next_group(self) -> list[Request] | None:
+        if not self._queue:
+            return None
+        # largest bucket first: best slot utilization
+        plen = max(self._queue, key=lambda k: len(self._queue[k]))
+        bucket = self._queue[plen]
+        group = bucket[: self.max_batch]
+        self._queue[plen] = bucket[self.max_batch:]
+        if not self._queue[plen]:
+            del self._queue[plen]
+        return group
+
+    def run(self) -> int:
+        """Drain the queue; returns the number of completed requests."""
+        completed = 0
+        while (group := self._next_group()) is not None:
+            completed += self._run_group(group)
+        return completed
+
+    def _run_group(self, group: list[Request]) -> int:
+        plen = len(group[0].tokens)
+        gmax = max(r.max_new for r in group)
+        b = self.max_batch
+        toks = np.zeros((b, plen), np.int32)
+        for i, r in enumerate(group):
+            toks[i] = r.tokens
+        batch = {"tokens": jnp.asarray(toks)}
+        logits, cache = self._prefill(self.params, batch, plen + gmax)
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        outs = [np.asarray(tok)]
+        alive = np.ones(b, bool)
+        for i in range(gmax - 1):
+            if self.eos_id is not None:
+                alive &= outs[-1][:, 0] != self.eos_id
+                if not alive[: len(group)].any():
+                    break
+            logits, cache = self._decode(
+                self.params, {"token": tok}, cache, jnp.int32(plen + i)
+            )
+            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            outs.append(np.asarray(tok))
+        gen = np.concatenate(outs, axis=1)            # (b, ≤gmax)
+        for i, r in enumerate(group):
+            seq = gen[i, : r.max_new]
+            if self.eos_id is not None:
+                stop = np.flatnonzero(seq == self.eos_id)
+                if stop.size:
+                    seq = seq[: stop[0] + 1]
+            r.output = seq
+            r.done = True
+        return len(group)

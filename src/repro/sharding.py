@@ -1,0 +1,155 @@
+"""Logical-axis → mesh-axis sharding policy.
+
+Models annotate every parameter with logical axis names
+(``transformer_specs``); this module turns those into
+``NamedSharding``s for a concrete mesh, with divisibility guards (an
+axis whose dimension does not divide the mesh axis size is replicated —
+e.g. hymba's vocab 32001 on a 16-way model axis).
+
+Baseline policy (recorded as such in EXPERIMENTS.md §Perf; the hillclimb
+mutates it):
+
+  experts    → model     (expert parallelism)
+  heads      → model     (Megatron tensor parallelism)
+  ffn        → model
+  vocab      → model     (sharded logits / embedding)
+  expert_ff  → data      (FSDP: expert weights are the memory giants —
+                          gathered per layer inside the scan, grads
+                          reduce-scattered back)
+  batch      → all data-parallel axes ("pod","data")
+  seq        → data axes only when batch cannot fill them (long_500k)
+
+Everything else replicated.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardingPolicy", "make_policy", "named_sharding_tree"]
+
+
+class ShardingPolicy:
+    def __init__(self, mesh: Mesh, rules: dict[str, Any], dp_axes: tuple[str, ...]):
+        self.mesh = mesh
+        self.rules = rules
+        self.dp_axes = dp_axes
+
+    def _axis_size(self, mesh_axes) -> int:
+        if mesh_axes is None:
+            return 1
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        return int(np.prod([self.mesh.shape[a] for a in mesh_axes]))
+
+    def spec_for(self, logical_axes: tuple, shape: tuple[int, ...]) -> P:
+        """PartitionSpec with divisibility guards against ``shape``."""
+        entries = []
+        used: set[str] = set()
+        for dim, name in zip(shape, logical_axes):
+            mesh_axes = self.rules.get(name) if name is not None else None
+            if mesh_axes is None:
+                entries.append(None)
+                continue
+            tup = (mesh_axes,) if isinstance(mesh_axes, str) else tuple(mesh_axes)
+            # guard: divisibility + no mesh axis reused within one spec
+            if any(a in used for a in tup) or dim % self._axis_size(tup) != 0:
+                entries.append(None)
+                continue
+            used.update(tup)
+            entries.append(mesh_axes if isinstance(mesh_axes, str) else tup)
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    def shardings(self, specs_tree, shapes_tree):
+        """specs_tree: logical-axes tuples; shapes_tree: matching
+        ShapeDtypeStructs / arrays.  Returns a NamedSharding tree."""
+        is_axes = lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, tuple, type(None))) for e in x
+        )
+        flat_specs = jax.tree.leaves(specs_tree, is_leaf=is_axes)
+        flat_shapes = jax.tree.leaves(shapes_tree)
+        assert len(flat_specs) == len(flat_shapes), (
+            f"specs/shapes leaf mismatch: {len(flat_specs)} vs {len(flat_shapes)}"
+        )
+        out = [
+            NamedSharding(self.mesh, self.spec_for(sp, sh.shape))
+            for sp, sh in zip(flat_specs, flat_shapes)
+        ]
+        treedef = jax.tree.structure(shapes_tree)
+        return jax.tree.unflatten(treedef, out)
+
+
+def make_policy(
+    mesh: Mesh,
+    batch_size: int,
+    shard_seq: bool = False,
+    overrides: dict[str, Any] | None = None,
+    variant: str = "baseline",
+) -> ShardingPolicy:
+    """Sharding policy for ``mesh``.  ``shard_seq=True`` moves the data
+    axes from batch to sequence (long-context decode with batch 1).
+
+    Variants (§Perf hillclimb — EXPERIMENTS.md):
+      baseline — Megatron tensor parallel on ``model`` + data parallel:
+                 activations shard by batch over data axes, weights by
+                 heads/ffn/vocab over model.  Per-layer activation
+                 all-reduces scale with tokens — collective-heavy when
+                 tokens/device ≫ params/layer.
+      fsdp     — fully data-parallel compute: batch shards over ALL mesh
+                 axes; weights are stored sharded over the same axes
+                 (ZeRO-3 style) and gathered per layer inside the scan.
+                 Collective bytes scale with params, not tokens.
+    """
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    dp_total = int(np.prod([mesh.shape[a] for a in dp]))
+    all_axes = tuple(mesh.axis_names)
+    all_total = int(np.prod([mesh.shape[a] for a in all_axes]))
+    if variant == "fsdp":
+        batch_axes = all_axes if (not shard_seq and batch_size % all_total == 0) else None
+        rules: dict[str, Any] = {
+            "experts": all_axes,
+            "heads": all_axes,
+            "ffn": all_axes,
+            "vocab": all_axes,
+            "expert_ff": None,
+            "kv_heads": None,
+            "q_lora": None,
+            "kv_lora": None,
+            "embed": None,
+            "embed2": None,
+            "layers": None,
+            "state": None,
+            "batch": batch_axes,
+            "seq": dp if shard_seq else None,
+        }
+    else:
+        batch_axes = dp if (not shard_seq and batch_size % dp_total == 0) else None
+        rules = {
+            "experts": "model",
+            "heads": "model",
+            "ffn": "model",
+            "vocab": "model",
+            "expert_ff": "data",
+            "kv_heads": "model",
+            "q_lora": None,
+            "kv_lora": None,
+            "embed": None,
+            "embed2": None,
+            "layers": None,
+            "state": None,
+            "batch": batch_axes,
+            "seq": dp if shard_seq else None,
+        }
+    if overrides:
+        rules.update(overrides)
+    return ShardingPolicy(mesh, rules, dp)
+
+
+def named_sharding_tree(policy: ShardingPolicy, specs_tree, shapes_tree):
+    return policy.shardings(specs_tree, shapes_tree)

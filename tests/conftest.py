@@ -1,0 +1,23 @@
+"""Shared test fixtures.
+
+NOTE: no XLA_FLAGS device-count override here — tests see the real
+single CPU device.  Multi-device behaviour (shard_map, dry-run) is
+tested via subprocesses that set the flag before importing jax
+(test_scaleout.py, test_dryrun_mini.py).
+"""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def planted_histograms(rng, K=60, C=10, G=4, conc=200.0):
+    """Label histograms with G planted modes (used across cluster tests)."""
+    modes = rng.dirichlet(np.ones(C) * 0.2, size=G)
+    assign = rng.integers(0, G, K)
+    hists = np.stack([rng.dirichlet(modes[g] * conc + 1e-3) for g in assign])
+    return hists, assign

@@ -1,0 +1,113 @@
+"""OPTICS: Prim-equivalence against a brute-force reference + planted-mode
+recovery + extraction edge cases."""
+
+import numpy as np
+import pytest
+
+from conftest import planted_histograms
+from repro.core.clustering import extract_clusters, optics, silhouette_score
+from repro.core.hellinger import hellinger_matrix
+from repro.core.clustering import cluster_label_histograms
+
+
+def optics_reference(dist, min_samples):
+    """Straight-line numpy transcription of the Prim-style OPTICS loop."""
+    k = dist.shape[0]
+    ms = min(min_samples, k)
+    core = np.sort(dist, axis=1)[:, ms - 1]
+    reach = np.full(k, np.inf)
+    processed = np.zeros(k, bool)
+    order = []
+    for _ in range(k):
+        key = np.where(processed, np.inf, reach)
+        i = int(np.argmin(key))
+        order.append(i)
+        processed[i] = True
+        new = np.maximum(core[i], dist[i])
+        upd = ~processed
+        reach[upd] = np.minimum(reach[upd], new[upd])
+    return np.array(order), reach, core
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("min_samples", [2, 3, 5])
+def test_optics_matches_reference(seed, min_samples):
+    rng = np.random.default_rng(seed)
+    h = rng.random((30, 8)) + 1e-6
+    d = np.asarray(hellinger_matrix(h))
+    res = optics(d, min_samples=min_samples)
+    o_ref, r_ref, c_ref = optics_reference(d, min_samples)
+    np.testing.assert_array_equal(np.asarray(res.ordering), o_ref)
+    np.testing.assert_allclose(np.asarray(res.core_distances), c_ref, atol=1e-6)
+    got_r = np.asarray(res.reachability)
+    finite = np.isfinite(r_ref)
+    np.testing.assert_allclose(got_r[finite], r_ref[finite], atol=1e-5)
+
+
+def test_planted_modes_recovered(rng):
+    hists, assign = planted_histograms(rng, K=80, C=10, G=5)
+    labels, _ = cluster_label_histograms(hists, min_samples=3)
+    # purity: every found cluster maps to one planted mode
+    from collections import Counter
+
+    purity = sum(
+        max(Counter(assign[labels == c]).values()) for c in np.unique(labels)
+    ) / len(assign)
+    assert purity > 0.9
+    assert 3 <= labels.max() + 1 <= 10  # close to the 5 planted modes
+
+
+def test_every_client_gets_a_cluster(rng):
+    hists, _ = planted_histograms(rng, K=40)
+    labels, _ = cluster_label_histograms(hists)
+    assert labels.shape == (40,)
+    assert (labels >= 0).all()
+
+
+def test_single_cluster_when_identical():
+    h = np.tile(np.ones(10) / 10, (20, 1))
+    labels, _ = cluster_label_histograms(h)
+    assert labels.max() == 0  # one cluster
+
+
+def test_kmedoids_recovers_planted_modes(rng):
+    from repro.core.clustering import kmedoids
+
+    hists, assign = planted_histograms(rng, K=60, C=10, G=4)
+    d = np.asarray(hellinger_matrix(hists))
+    labels = kmedoids(d, k=4, seed=0)
+    from collections import Counter
+
+    purity = sum(max(Counter(assign[labels == c].tolist()).values())
+                 for c in np.unique(labels)) / 60
+    assert purity > 0.9
+
+
+def test_best_clustering_prefers_optics_on_structure(rng):
+    from repro.core.clustering import best_clustering
+
+    hists, _ = planted_histograms(rng, K=60, C=10, G=4)
+    d = np.asarray(hellinger_matrix(hists))
+    labels, method = best_clustering(d)
+    assert method == "optics"          # density structure present
+
+
+def test_best_clustering_falls_back_on_continuum(rng):
+    from repro.core.clustering import best_clustering
+
+    # 3-class random mixtures: no density structure
+    h = rng.dirichlet(np.ones(10) * 0.8, size=80)
+    d = np.asarray(hellinger_matrix(h))
+    labels, method = best_clustering(d)
+    assert labels.shape == (80,)
+    assert (labels >= 0).all()
+    # whatever the method, every client is clustered and k is reasonable
+    assert 1 <= labels.max() + 1 <= 20
+
+
+def test_silhouette_range(rng):
+    hists, _ = planted_histograms(rng, K=50)
+    labels, _ = cluster_label_histograms(hists)
+    d = np.asarray(hellinger_matrix(hists))
+    s = silhouette_score(d, labels)
+    assert -1.0 <= s <= 1.0

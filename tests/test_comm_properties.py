@@ -1,0 +1,62 @@
+"""Hypothesis property tests: communication ledger + compression invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.comm_model import CommModel
+from repro.federated.compression import dequantize_delta, quantize_delta
+
+
+@given(
+    st.integers(1, 10**7),   # n_params
+    st.integers(2, 500),     # K
+    st.integers(2, 100),     # classes
+    st.integers(1, 300),     # rounds
+    st.integers(1, 64),      # m
+    st.booleans(),           # losses polled
+    st.booleans(),           # histograms
+)
+@settings(max_examples=50, deadline=None)
+def test_comm_model_invariants(n_params, K, C, rounds, m, losses, hists):
+    m = min(m, K)
+    cm = CommModel(n_params, K, C)
+    total = cm.total_mb(rounds, m, losses, hists)
+    per = cm.round_mb(m, losses)
+    # totals decompose exactly
+    assert abs(total - (cm.one_time_mb(hists) + rounds * per)) < 1e-9
+    # monotone in every argument
+    assert cm.round_mb(m, losses) <= cm.round_mb(min(m + 1, K), losses) + 1e-12
+    assert cm.total_mb(rounds, m, losses, hists) <= cm.total_mb(
+        rounds + 1, m, losses, hists
+    )
+    # model traffic dominates protocol overhead for real model sizes
+    if n_params * 4 > 100 * K * C:
+        assert cm.round_mb(m, True) < 1.5 * cm.round_mb(m, False) + cm.one_time_mb(True)
+
+
+@given(
+    st.integers(1, 400),             # leaf size
+    st.floats(1e-4, 10.0),           # delta scale
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_quantization_error_bounded_by_one_step(n, scale, seed):
+    rng = np.random.default_rng(seed)
+    delta = {"w": jnp.asarray(rng.normal(0, scale, (n,)), jnp.float32)}
+    qt = quantize_delta(delta, jax.random.PRNGKey(seed % 7919), bits=8)
+    deq = dequantize_delta(qt)
+    step = float(jnp.max(jnp.abs(delta["w"]))) / 127 + 1e-9
+    assert float(jnp.max(jnp.abs(deq["w"] - delta["w"]))) <= step * (1 + 1e-5)
+    # int8 range respected
+    q = np.asarray(qt.q["w"])
+    assert q.min() >= -128 and q.max() <= 127
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_quantization_zero_is_exact(seed):
+    delta = {"w": jnp.zeros((64,), jnp.float32)}
+    deq = dequantize_delta(quantize_delta(delta, jax.random.PRNGKey(seed)))
+    np.testing.assert_allclose(np.asarray(deq["w"]), 0.0, atol=1e-9)

@@ -1,0 +1,74 @@
+"""Beyond-paper extensions: quantized aggregation + adaptive-J FedLECC."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import planted_histograms
+from repro.core.strategies import get_strategy
+from repro.federated.aggregation import fedavg
+from repro.federated.compression import (
+    compressed_fedavg, dequantize_delta, quantize_delta,
+)
+
+
+def test_quantize_roundtrip_error_bound():
+    rng = np.random.default_rng(0)
+    delta = {"w": jnp.asarray(rng.normal(0, 0.1, (50, 40)), jnp.float32)}
+    qt = quantize_delta(delta, jax.random.PRNGKey(0), bits=8)
+    deq = dequantize_delta(qt)
+    # max error ≤ 1 quantization step = max|x| / 127
+    step = float(jnp.max(jnp.abs(delta["w"]))) / 127
+    assert float(jnp.max(jnp.abs(deq["w"] - delta["w"]))) <= step + 1e-7
+
+
+def test_quantization_unbiased():
+    """Stochastic rounding: E[deq] == delta (mean over many draws)."""
+    delta = {"w": jnp.full((1000,), 0.0173, jnp.float32)}
+    acc = np.zeros(1000)
+    for i in range(50):
+        deq = dequantize_delta(quantize_delta(delta, jax.random.PRNGKey(i)))
+        acc += np.asarray(deq["w"])
+    assert abs(acc.mean() / 50 - 0.0173) < 2e-4
+
+
+def test_compressed_fedavg_close_to_exact():
+    rng = np.random.default_rng(1)
+    g = {"w": jnp.asarray(rng.normal(0, 1, (30, 20)), jnp.float32)}
+    stacked = {"w": g["w"][None] + jnp.asarray(rng.normal(0, 0.05, (4, 30, 20)), jnp.float32)}
+    w = jnp.asarray([0.1, 0.2, 0.3, 0.4])
+    exact = fedavg(stacked, w)
+    got, err = compressed_fedavg(stacked, g, w, jax.random.PRNGKey(0), bits=8)
+    # deltas ~0.05 → int8 step ~ 0.15/127 ≈ 1e-3; weighted sum stays close
+    assert float(jnp.max(jnp.abs(got["w"] - exact["w"]))) < 5e-3
+    assert float(err) < 2e-3
+
+
+def test_compressed_fedavg_respects_mask():
+    rng = np.random.default_rng(2)
+    g = {"w": jnp.zeros((10,), jnp.float32)}
+    stacked = {"w": jnp.asarray(rng.normal(0, 1, (3, 10)), jnp.float32)}
+    w = jnp.asarray([0.0, 1.0, 0.0])   # FedLECC mask: only client 1
+    got, _ = compressed_fedavg(stacked, g, w, jax.random.PRNGKey(0))
+    np.testing.assert_allclose(
+        np.asarray(got["w"]), np.asarray(stacked["w"][1]), atol=1e-2
+    )
+
+
+def test_adaptive_j_valid_and_reactive(rng):
+    hists, _ = planted_histograms(rng, K=60, G=5)
+    s = get_strategy("fedlecc_adaptive", m=10)
+    s.setup(hists, np.full(60, 100), seed=0)
+    # flat losses → spread (large J)
+    flat = np.ones(60)
+    sel_flat = s.select(0, flat, np.random.default_rng(0))
+    assert len(sel_flat) == 10
+    # one cluster dominating → concentrate
+    peaked = np.ones(60)
+    peaked[s.labels == s.labels[0]] = 10.0
+    sel_peak = s.select(1, peaked, np.random.default_rng(1))
+    assert len(sel_peak) == 10
+    n_clusters_flat = len(np.unique(s.labels[sel_flat]))
+    n_clusters_peak = len(np.unique(s.labels[sel_peak]))
+    assert n_clusters_peak <= n_clusters_flat

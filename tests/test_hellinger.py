@@ -1,0 +1,64 @@
+"""Hellinger distance: mathematical properties + Pallas kernel vs oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hellinger import average_hd, hellinger_distance, hellinger_matrix
+from repro.kernels.hellinger.ops import hellinger_matrix_pallas
+
+
+@st.composite
+def histograms(draw, max_k=40, max_c=20):
+    k = draw(st.integers(2, max_k))
+    c = draw(st.integers(2, max_c))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    h = rng.random((k, c)) + 1e-6
+    return h
+
+
+@given(histograms())
+@settings(max_examples=25, deadline=None)
+def test_hd_matrix_properties(h):
+    d = np.asarray(hellinger_matrix(jnp.asarray(h)))
+    k = h.shape[0]
+    assert d.shape == (k, k)
+    np.testing.assert_allclose(d, d.T, atol=1e-6)        # symmetric
+    np.testing.assert_allclose(np.diag(d), 0.0, atol=1e-6)
+    assert (d >= -1e-6).all() and (d <= 1 + 1e-6).all()  # bounded
+
+
+def test_hd_extremes():
+    # fp32: HD = sqrt(1−BC) amplifies rounding to ~sqrt(eps) ≈ 3e-4
+    same = np.array([[0.5, 0.5], [0.5, 0.5]])
+    assert float(hellinger_matrix(jnp.asarray(same))[0, 1]) < 1e-3
+    disjoint = np.array([[1.0, 0.0], [0.0, 1.0]])
+    assert abs(float(hellinger_matrix(jnp.asarray(disjoint))[0, 1]) - 1.0) < 1e-6
+
+
+def test_hd_pairwise_matches_matrix():
+    rng = np.random.default_rng(3)
+    h = rng.random((8, 10)) + 1e-6
+    d = np.asarray(hellinger_matrix(jnp.asarray(h)))
+    for i in range(8):
+        for j in range(8):
+            if i != j:
+                dij = float(hellinger_distance(jnp.asarray(h[i]), jnp.asarray(h[j])))
+                assert abs(d[i, j] - dij) < 1e-5
+
+
+def test_average_hd_uniform_is_zero():
+    h = np.ones((10, 5))
+    assert float(average_hd(jnp.asarray(h))) < 1e-3  # fp32 sqrt(eps) floor
+
+
+@pytest.mark.parametrize("k,c", [(10, 10), (100, 10), (250, 10), (64, 37), (130, 100)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_pallas_kernel_matches_oracle(k, c, dtype):
+    rng = np.random.default_rng(k * 1000 + c)
+    h = rng.dirichlet(np.ones(c) * 0.3, size=k).astype(dtype)
+    got = np.asarray(hellinger_matrix_pallas(jnp.asarray(h), interpret=True))
+    want = np.asarray(hellinger_matrix(jnp.asarray(h)))
+    np.testing.assert_allclose(got, want, atol=2e-6)

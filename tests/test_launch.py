@@ -1,0 +1,76 @@
+"""Launch-layer tests: input specs, long-context variants, CLI drivers."""
+
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config, list_configs
+from repro.configs.inputs import decode_specs, input_specs, long_context_variant
+
+_ENV = dict(os.environ, PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def test_input_shapes_table():
+    assert set(INPUT_SHAPES) == {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["long_500k"].seq_len == 524_288
+    assert INPUT_SHAPES["decode_32k"].kind == "decode"
+
+
+@pytest.mark.parametrize("arch", list_configs())
+@pytest.mark.parametrize("shape", ["train_4k", "prefill_32k"])
+def test_input_specs_shapes(arch, shape):
+    cfg = get_config(arch)
+    sh = INPUT_SHAPES[shape]
+    specs = input_specs(cfg, sh)
+    if cfg.input_mode == "tokens":
+        assert specs["tokens"].shape == (sh.global_batch, sh.seq_len)
+    elif cfg.input_mode == "frames":
+        assert specs["frames"].shape == (sh.global_batch, sh.seq_len, cfg.d_model)
+    else:
+        assert specs["patches"].shape == (sh.global_batch, cfg.n_patches, cfg.d_model)
+        assert specs["tokens"].shape == (sh.global_batch, sh.seq_len - cfg.n_patches)
+    if sh.kind == "train":
+        assert specs["labels"].shape == (sh.global_batch, sh.seq_len)
+    d = decode_specs(cfg, INPUT_SHAPES["decode_32k"])
+    key = "frame" if cfg.input_mode == "frames" else "token"
+    assert d[key].shape[0] == 128
+
+
+def test_long_context_variant_policy():
+    # native sub-quadratic archs unchanged
+    for arch in ("xlstm-125m", "hymba-1.5b", "gemma3-27b"):
+        cfg = get_config(arch)
+        assert long_context_variant(cfg).name == cfg.name
+    # full-attention archs get the documented SWA variant
+    for arch in ("qwen3-14b", "deepseek-v3-671b", "musicgen-large"):
+        v = long_context_variant(get_config(arch))
+        assert v.name.endswith("+swa4k")
+        assert v.sliding_window == 4096
+        assert v.layer_pattern == "L"
+
+
+@pytest.mark.slow
+def test_train_cli_reduced():
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "xlstm-125m",
+         "--reduced", "--steps", "8", "--batch", "2", "--seq", "64",
+         "--log-every", "4"],
+        env=_ENV, capture_output=True, text=True, timeout=600,
+    )
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "step    0" in r.stdout
+
+
+@pytest.mark.slow
+def test_serve_cli_reduced():
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "qwen3-14b",
+         "--reduced", "--batch", "2", "--prompt-len", "32", "--gen", "4"],
+        env=_ENV, capture_output=True, text=True, timeout=600,
+    )
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "decoded" in r.stdout

@@ -1,0 +1,104 @@
+"""MoE: capacity path vs dense oracle, shard-sum decomposition, gradients,
+router properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.moe import (
+    _shared_expert, init_moe, moe_capacity, moe_dense,
+)
+
+
+def _cfg(e=8, k=2, shared=1, cf=100.0, d=64, fe=32):
+    return ModelConfig(
+        name="t", family="moe", n_layers=1, d_model=d, n_heads=4, n_kv_heads=2,
+        d_ff=128, vocab=100, dtype="float32",
+        moe=MoEConfig(n_experts=e, top_k=k, d_expert=fe, n_shared=shared,
+                      capacity_factor=cf),
+    )
+
+
+@given(
+    st.integers(2, 16),    # experts
+    st.integers(1, 4),     # top_k
+    st.integers(0, 1),     # shared
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=20, deadline=None)
+def test_capacity_matches_dense_with_ample_capacity(e, k, shared, seed):
+    k = min(k, e)
+    cfg = _cfg(e=e, k=k, shared=shared)
+    p = init_moe(jax.random.PRNGKey(seed % 1000), cfg)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, 1, (2, 8, 64)), jnp.float32)
+    yd, auxd = moe_dense(p, cfg, x)
+    yc, auxc = moe_capacity(p, cfg, x.reshape(-1, 64))
+    np.testing.assert_allclose(
+        np.asarray(yd).reshape(-1, 64), np.asarray(yc), atol=5e-5
+    )
+    assert abs(float(auxd) - float(auxc)) < 1e-6
+
+
+def test_shard_partials_sum_to_dense():
+    cfg = _cfg(e=8, k=2, shared=1)
+    p = init_moe(jax.random.PRNGKey(1), cfg)
+    rng = np.random.default_rng(0)
+    x2d = jnp.asarray(rng.normal(0, 1, (32, 64)), jnp.float32)
+
+    def shard(lo, hi):
+        q = dict(p)
+        for key in ("w_gate", "w_up", "w_down"):
+            q[key] = p[key][lo:hi]
+        return q
+
+    parts = [
+        moe_capacity(shard(o, o + 2), cfg, x2d, expert_offset=o,
+                     n_local_experts=2, include_shared=False)[0]
+        for o in range(0, 8, 2)
+    ]
+    total = sum(parts) + _shared_expert(p, cfg, x2d)
+    want, _ = moe_dense(p, cfg, x2d.reshape(1, 32, 64))
+    np.testing.assert_allclose(np.asarray(total), np.asarray(want)[0], atol=5e-5)
+
+
+def test_gradients_match_dense():
+    cfg = _cfg(e=4, k=2, shared=1)
+    p = init_moe(jax.random.PRNGKey(2), cfg)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(0, 1, (2, 8, 64)), jnp.float32)
+
+    gd = jax.grad(lambda p_: jnp.sum(moe_dense(p_, cfg, x)[0] ** 2))(p)
+    gc = jax.grad(
+        lambda p_: jnp.sum(moe_capacity(p_, cfg, x.reshape(-1, 64))[0] ** 2)
+    )(p)
+    for a, b in zip(jax.tree.leaves(gd), jax.tree.leaves(gc)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-3)
+
+
+def test_capacity_drops_lowest_weight_on_overflow():
+    """With capacity 1 token per expert, the highest-weight assignment
+    survives."""
+    cfg = _cfg(e=2, k=1, shared=0, cf=1e-9)  # cap = max(1, ~0) = 1
+    p = init_moe(jax.random.PRNGKey(4), cfg)
+    rng = np.random.default_rng(5)
+    x2d = jnp.asarray(rng.normal(0, 1, (6, 64)), jnp.float32)
+    y, _ = moe_capacity(p, cfg, x2d)
+    # at most 2 tokens (1 per expert) produce nonzero output
+    nonzero = (np.abs(np.asarray(y)).max(axis=1) > 1e-7).sum()
+    assert nonzero <= 2
+
+
+def test_aux_loss_balanced_router_is_one():
+    """Uniform routing gives aux = E · Σ (1/E)(1/E) · E = 1."""
+    cfg = _cfg(e=4, k=4, shared=0)  # top_k = E → f uniform
+    p = init_moe(jax.random.PRNGKey(6), cfg)
+    p = dict(p)
+    p["router"] = jnp.zeros_like(p["router"])   # uniform probs
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(0, 1, (2, 16, 64)), jnp.float32)
+    _, aux = moe_dense(p, cfg, x)
+    assert abs(float(aux) - 1.0) < 1e-5

@@ -1,0 +1,126 @@
+"""SSM blocks: chunked-scan vs naive recurrence (hypothesis), mLSTM/sLSTM
+and Mamba sequence-vs-decode equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.ssm import (
+    chunked_linear_scan, init_mamba, init_xlstm, mamba_decode, mamba_seq,
+    mlstm_decode, mlstm_seq, slstm_decode, slstm_seq,
+)
+
+
+@given(
+    st.integers(1, 3),                     # batch
+    st.sampled_from([4, 8, 16, 32]),       # seq
+    st.sampled_from([1, 2, 4, 8]),         # chunk
+    st.integers(1, 6),                     # feature dim
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_chunked_linear_scan_matches_naive(b, s, chunk, d, seed):
+    if s % chunk:
+        chunk = s
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.uniform(0.2, 0.99, (b, s, d)), jnp.float32)
+    drive = jnp.asarray(rng.normal(0, 1, (b, s, d)), jnp.float32)
+    h0 = jnp.asarray(rng.normal(0, 1, (b, d)), jnp.float32)
+    got, fin = chunked_linear_scan(a, drive, h0, chunk)
+    # naive recurrence
+    h = np.asarray(h0)
+    outs = []
+    for t in range(s):
+        h = np.asarray(a[:, t]) * h + np.asarray(drive[:, t])
+        outs.append(h.copy())
+    want = np.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), want, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(fin), want[:, -1], atol=1e-4)
+
+
+def _xlstm_cfg(chunk=16):
+    return ModelConfig(
+        name="x", family="ssm", n_layers=1, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=0, vocab=100, dtype="float32", block_type="xlstm",
+        ssm=SSMConfig(n_heads=4, chunk=chunk, family="xlstm"),
+    )
+
+
+@pytest.mark.parametrize("chunk", [4, 16, 32])
+def test_mlstm_seq_matches_recurrent(chunk):
+    cfg = _xlstm_cfg(chunk)
+    p = init_xlstm(jax.random.PRNGKey(2), cfg)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 0.5, (2, 32, 64)), jnp.float32)
+    yseq, st_seq = mlstm_seq(p, cfg, x)
+    st = (jnp.zeros((2, 4, 16, 16)), jnp.zeros((2, 4, 16)), jnp.full((2, 4), -1e30))
+    ys = []
+    for t in range(32):
+        y, st = mlstm_decode(p, cfg, x[:, t : t + 1], st)
+        ys.append(y)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate(ys, 1)), np.asarray(yseq), atol=1e-4
+    )
+    for a, b in zip(st_seq, st):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_slstm_seq_matches_recurrent():
+    cfg = _xlstm_cfg()
+    p = init_xlstm(jax.random.PRNGKey(3), cfg)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(0, 0.5, (2, 32, 64)), jnp.float32)
+    yseq, _ = slstm_seq(p, cfg, x)
+    st = (jnp.zeros((2, 4, 16)), jnp.zeros((2, 4, 16)), jnp.full((2, 4), -1e30))
+    ys = []
+    for t in range(32):
+        y, st = slstm_decode(p, cfg, x[:, t : t + 1], st)
+        ys.append(y)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate(ys, 1)), np.asarray(yseq), atol=1e-4
+    )
+
+
+def _mamba_cfg(chunk=8):
+    return ModelConfig(
+        name="m", family="hybrid", n_layers=1, d_model=32, n_heads=4,
+        n_kv_heads=2, d_ff=64, vocab=100, dtype="float32", block_type="hymba",
+        ssm=SSMConfig(d_state=8, conv_kernel=4, chunk=chunk, family="mamba"),
+    )
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 32])
+def test_mamba_seq_matches_recurrent(chunk):
+    cfg = _mamba_cfg(chunk)
+    p = init_mamba(jax.random.PRNGKey(4), cfg)
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(0, 0.5, (2, 32, 32)), jnp.float32)
+    yseq, (hf, tailf) = mamba_seq(p, cfg, x)
+    h = jnp.zeros((2, 32, 8))
+    tail = jnp.zeros((2, 3, 32))
+    ys = []
+    for t in range(32):
+        y, (h, tail) = mamba_decode(p, cfg, x[:, t : t + 1], h, tail)
+        ys.append(y)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate(ys, 1)), np.asarray(yseq), atol=1e-4
+    )
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(h), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(tailf), np.asarray(tail), atol=1e-5)
+
+
+def test_mamba_state_handoff():
+    """mamba_seq(state=...) continues exactly where a previous call ended."""
+    cfg = _mamba_cfg(4)
+    p = init_mamba(jax.random.PRNGKey(5), cfg)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(0, 0.5, (1, 16, 32)), jnp.float32)
+    y_all, _ = mamba_seq(p, cfg, x)
+    y1, (h, tail) = mamba_seq(p, cfg, x[:, :8])
+    y2, _ = mamba_seq(p, cfg, x[:, 8:], state=h, conv_tail=tail)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([y1, y2], 1)), np.asarray(y_all), atol=1e-4
+    )

@@ -1,0 +1,101 @@
+"""Optimizers, schedules, federated gradient modifiers, checkpointing."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.optim import (
+    adamw, chain, clip_by_global_norm, constant, fedprox_grads, feddyn_grads,
+    sgd, warmup_cosine,
+)
+from repro.optim.optimizers import apply_updates
+
+
+def _quadratic_descends(opt, steps=200):
+    target = {"w": jnp.asarray([3.0, -2.0, 1.0])}
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - target["w"]) ** 2)
+
+    for _ in range(steps):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+    return float(loss(params))
+
+
+@pytest.mark.parametrize(
+    "opt",
+    [
+        sgd(0.1),
+        sgd(0.05, momentum=0.9),
+        sgd(0.05, momentum=0.9, nesterov=True),
+        adamw(0.05),
+        chain(clip_by_global_norm(1.0), sgd(0.1)),
+    ],
+    ids=["sgd", "sgd-mom", "sgd-nesterov", "adamw", "clip+sgd"],
+)
+def test_optimizers_minimize_quadratic(opt):
+    assert _quadratic_descends(opt) < 1e-2
+
+
+def test_clip_by_global_norm():
+    clip = clip_by_global_norm(1.0)
+    g = {"a": jnp.asarray([3.0, 4.0])}          # norm 5
+    out, _ = clip.update(g, clip.init(g), None)
+    assert abs(float(jnp.linalg.norm(out["a"])) - 1.0) < 1e-6
+    g2 = {"a": jnp.asarray([0.3, 0.4])}          # norm 0.5 → untouched
+    out2, _ = clip.update(g2, clip.init(g2), None)
+    np.testing.assert_allclose(np.asarray(out2["a"]), [0.3, 0.4], atol=1e-7)
+
+
+def test_schedules():
+    s = warmup_cosine(1.0, 10, 100)
+    assert float(s(jnp.asarray(0))) == 0.0
+    assert abs(float(s(jnp.asarray(10))) - 1.0) < 1e-6
+    assert float(s(jnp.asarray(100))) < 1e-6
+    assert float(constant(0.3)(jnp.asarray(7))) == pytest.approx(0.3)
+
+
+def test_fedprox_pulls_toward_global():
+    p = {"w": jnp.asarray([1.0])}
+    gl = {"w": jnp.asarray([0.0])}
+    g = {"w": jnp.asarray([0.0])}
+    out = fedprox_grads(g, p, gl, mu=0.5)
+    assert float(out["w"][0]) == pytest.approx(0.5)  # mu·(θ−θg)
+
+
+def test_feddyn_grad_terms():
+    p = {"w": jnp.asarray([2.0])}
+    gl = {"w": jnp.asarray([1.0])}
+    h = {"w": jnp.asarray([0.3])}
+    g = {"w": jnp.asarray([1.0])}
+    out = feddyn_grads(g, p, gl, h, alpha=0.1)
+    assert float(out["w"][0]) == pytest.approx(1.0 - 0.3 + 0.1 * 1.0)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "b": [jnp.ones((2,), jnp.int32), {"c": jnp.asarray(2.5, jnp.bfloat16)}],
+    }
+    path = os.path.join(tmp_path, "ck.msgpack")
+    save_checkpoint(path, tree, meta={"step": 7})
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restored, meta = load_checkpoint(path, like)
+    assert meta["step"] == 7
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    path = os.path.join(tmp_path, "ck.msgpack")
+    save_checkpoint(path, {"a": jnp.ones((3,))})
+    with pytest.raises(ValueError):
+        load_checkpoint(path, {"a": jnp.ones((4,))})

@@ -1,0 +1,90 @@
+"""Algorithm 1: invariants (hypothesis) + numpy/JAX implementation
+equivalence + aggregation-weight properties."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.selection import fedlecc_select, fedlecc_select_jax, selection_weights
+
+
+@st.composite
+def selection_case(draw):
+    k = draw(st.integers(4, 60))
+    n_clusters = draw(st.integers(1, 8))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, n_clusters, k)
+    losses = rng.uniform(0.1, 5.0, k).astype(np.float32)
+    m = draw(st.integers(1, k))
+    J = draw(st.integers(1, 10))
+    return labels, losses, m, J
+
+
+@given(selection_case())
+@settings(max_examples=60, deadline=None)
+def test_selection_invariants(case):
+    labels, losses, m, J = case
+    sel = fedlecc_select(labels, losses, m=m, J=J)
+    assert len(sel) == min(m, len(labels))           # exactly m selected
+    assert len(set(sel.tolist())) == len(sel)        # no duplicates
+    assert (sel >= 0).all() and (sel < len(labels)).all()
+
+
+@given(selection_case())
+@settings(max_examples=60, deadline=None)
+def test_numpy_jax_equivalence(case):
+    labels, losses, m, J = case
+    a = fedlecc_select(labels, losses, m=m, J=J)
+    n_clusters = int(labels.max()) + 1
+    Jj = max(1, min(J, len(np.unique(labels))))
+    mask = np.asarray(
+        fedlecc_select_jax(
+            jnp.asarray(labels), jnp.asarray(losses), m=min(m, len(labels)),
+            J=Jj, n_clusters=n_clusters,
+        )
+    )
+    b = np.where(mask)[0]
+    np.testing.assert_array_equal(a, b)
+
+
+def test_top_cluster_highest_loss_client_always_selected():
+    rng = np.random.default_rng(7)
+    for _ in range(20):
+        labels = rng.integers(0, 5, 40)
+        losses = rng.uniform(0, 3, 40)
+        sel = fedlecc_select(labels, losses, m=8, J=3)
+        # the single highest-loss client of the highest-mean-loss cluster
+        clusters = np.unique(labels)
+        means = np.array([losses[labels == c].mean() for c in clusters])
+        top_c = clusters[np.argmax(means)]
+        members = np.where(labels == top_c)[0]
+        star = members[np.argmax(losses[members])]
+        assert star in sel
+
+
+def test_cluster_diversity_respected():
+    """With J=m and singleton-capacity z=1, selection spans J clusters."""
+    labels = np.repeat(np.arange(5), 8)           # 5 clusters × 8 members
+    rng = np.random.default_rng(1)
+    losses = rng.uniform(1, 2, 40)
+    sel = fedlecc_select(labels, losses, m=5, J=5)
+    assert len(np.unique(labels[sel])) == 5
+
+
+def test_backfill_when_cluster_small():
+    # cluster 0: huge loss but only 1 member; z=3 forces backfill
+    labels = np.array([0] + [1] * 6 + [2] * 6)
+    losses = np.array([10.0] + [5.0] * 6 + [1.0] * 6)
+    sel = fedlecc_select(labels, losses, m=6, J=2)
+    assert 0 in sel
+    assert len(sel) == 6
+
+
+def test_selection_weights_properties():
+    mask = jnp.asarray(np.array([1, 0, 1, 1, 0], bool))
+    sizes = jnp.asarray(np.array([10.0, 20.0, 30.0, 40.0, 50.0]))
+    w = np.asarray(selection_weights(mask, sizes))
+    assert abs(w.sum() - 1.0) < 1e-6
+    assert w[1] == 0 and w[4] == 0
+    np.testing.assert_allclose(w[[0, 2, 3]], np.array([10, 30, 40]) / 80.0, atol=1e-6)

@@ -1,0 +1,59 @@
+"""Selection-strategy registry + communication ledger."""
+
+import numpy as np
+import pytest
+
+from conftest import planted_histograms
+from repro.core.comm_model import CommModel
+from repro.core.strategies import STRATEGIES, get_strategy
+
+
+@pytest.mark.parametrize("name", sorted(STRATEGIES))
+def test_strategy_valid_selection(name, rng):
+    hists, _ = planted_histograms(rng, K=50)
+    s = get_strategy(name, m=8)
+    s.setup(hists, np.full(50, 100), seed=0)
+    losses = rng.uniform(0.1, 3.0, 50)
+    for rnd in range(3):
+        sel = s.select(rnd, losses, np.random.default_rng(rnd))
+        assert len(sel) == 8
+        assert len(set(sel.tolist())) == 8
+        assert (sel >= 0).all() and (sel < 50).all()
+
+
+def test_fedlecc_strategy_uses_clusters(rng):
+    hists, assign = planted_histograms(rng, K=60, G=5)
+    s = get_strategy("fedlecc", m=10, J=4)
+    s.setup(hists, np.full(60, 100), seed=0)
+    assert s.n_clusters >= 3
+    losses = rng.uniform(0.1, 3.0, 60)
+    sel = s.select(0, losses, np.random.default_rng(0))
+    assert len(np.unique(s.labels[sel])) >= 3  # diversity across clusters
+
+
+def test_poc_prefers_high_loss(rng):
+    s = get_strategy("poc", m=5, d=20)
+    s.setup(np.ones((50, 10)), np.full(50, 100), seed=0)
+    losses = np.arange(50, dtype=float)
+    sel = s.select(0, losses, np.random.default_rng(0))
+    assert losses[sel].mean() > losses.mean()  # biased toward high loss
+
+
+def test_unknown_strategy_raises():
+    with pytest.raises(KeyError):
+        get_strategy("nope", m=3)
+
+
+def test_comm_model_ledger():
+    cm = CommModel(n_params=199_210, K=100, n_classes=10)
+    per_round = cm.round_mb(10, needs_losses=True)
+    # model traffic dominates: 2·10·199210·4 bytes ≈ 15.2 MB
+    assert 15.0 < per_round < 15.4
+    total = cm.total_mb(150, 10, needs_losses=True, needs_histograms=True)
+    assert abs(total - (cm.one_time_mb(True) + 150 * per_round)) < 1e-9
+    # fewer clients → strictly less traffic
+    assert cm.round_mb(2, True) < cm.round_mb(10, True)
+    # loss polling costs K floats
+    assert cm.round_mb(10, True) - cm.round_mb(10, False) == pytest.approx(
+        100 * 4 / (1024 * 1024)
+    )
