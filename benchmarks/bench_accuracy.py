@@ -9,11 +9,11 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.fl_common import FAST_METHODS, METHODS, ensure_runs
+from benchmarks.fl_common import ensure_runs, methods_for
 
 
 def main(full: bool = False, rounds: int | None = None) -> list[tuple]:
-    methods = list(METHODS) if full else FAST_METHODS
+    methods = methods_for(full)
     seeds = [0, 1] if full else [0]
     rounds = rounds or (100 if full else 60)
     runs = ensure_runs(methods, seeds, rounds)

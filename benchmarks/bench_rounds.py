@@ -8,13 +8,13 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.fl_common import FAST_METHODS, METHODS, ensure_runs
-from repro.federated.simulation import rounds_to_accuracy
+from benchmarks.fl_common import ensure_runs, methods_for
+from repro.engine import rounds_to_accuracy
 
 
 def main(full: bool = False, rounds: int | None = None,
          targets=(0.4, 0.5, 0.6)) -> list[tuple]:
-    methods = list(METHODS) if full else FAST_METHODS
+    methods = methods_for(full)
     seeds = [0, 1] if full else [0]
     rounds = rounds or (100 if full else 60)
     runs = ensure_runs(methods, seeds, rounds)

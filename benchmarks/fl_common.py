@@ -1,9 +1,16 @@
 """Shared FL-experiment runner for the paper-table benchmarks.
 
-Runs each (strategy × seed) cell once and caches the full history in
+Runs each (method × seed) cell once and caches the full history in
 results/fl_runs.json so Table II / Table III / Fig 3 benchmarks share one
 set of simulations (exactly how the paper derives all three artifacts
 from the same runs).
+
+Methods are the registered ``ExperimentPreset``s (``repro.engine.presets``)
+— one named (strategy × client_mode × aggregator) cell each — and every
+cell runs through ``repro.engine.make_engine``, so the benchmarks, the
+examples, and ad-hoc scripts all exercise the same engine API.  Each
+cached record embeds ``cfg`` (``FLConfig.to_dict()``) so a cell is fully
+reproducible from the cache alone via ``FLConfig.from_dict``.
 """
 
 from __future__ import annotations
@@ -12,55 +19,55 @@ import json
 import os
 import time
 
-import numpy as np
-
 from repro.data import make_classification
-from repro.federated import FLConfig, FederatedSimulation
+from repro.engine import make_engine
+from repro.engine.presets import get_preset, list_presets
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "fl_runs.json")
 
-# method name → (strategy, client_mode, aggregator, mu, strategy_kwargs)
-METHODS = {
-    "fedavg": ("random", "plain", "fedavg", 0.0, {}),
-    "fedprox": ("random", "fedprox", "fedavg", 0.01, {}),
-    "fednova": ("random", "plain", "fednova", 0.0, {}),
-    "feddyn": ("random", "feddyn", "feddyn", 0.1, {}),
-    "haccs": ("haccs", "plain", "fedavg", 0.0, {}),
-    "fedcls": ("fedcls", "plain", "fedavg", 0.0, {}),
-    "fedcor": ("fedcor", "plain", "fedavg", 0.0, {}),
-    "poc": ("poc", "plain", "fedavg", 0.0, {}),
-    # J=10 (z=1: one client per label-mode cluster) is the tuned setting on
-    # the shards partition (J sweep in EXPERIMENTS §Claims; the paper's §VII
-    # sensitivity caveat reproduced: J=5 froze on a degenerate partition)
-    "fedlecc": ("fedlecc", "plain", "fedavg", 0.0, {"J": 10}),
-    # beyond-paper: adaptive J (the paper's stated future work)
-    "fedlecc_adaptive": ("fedlecc_adaptive", "plain", "fedavg", 0.0, {}),
-}
+# Bump whenever the simulator's numerics change so stale cached cells are
+# re-run instead of silently mixed with new ones.  2 = engine API PR:
+# per-client PRNG keys moved from cohort split to fold_in-by-client-index.
+CACHE_VERSION = 2
 
-FAST_METHODS = ["fedavg", "poc", "fedlecc"]
+# Deprecated compat views over the preset registry, preserving the old
+# METHODS value shape — name → (strategy, client_mode, aggregator, mu,
+# strategy_kwargs) — so legacy tuple-unpacking consumers keep working;
+# new code should use methods_for()/get_preset() directly.
+METHODS = {
+    name: (p.strategy, p.client_mode, p.aggregator, p.mu,
+           dict(p.strategy_kwargs))
+    for name, p in ((n, get_preset(n)) for n in list_presets())
+}
+FAST_METHODS = list_presets(fast_only=True)
+
+
+def methods_for(full: bool) -> list[str]:
+    """Benchmark method set: every registered preset, or the fast subset."""
+    return list_presets() if full else list_presets(fast_only=True)
 
 
 def run_cell(method: str, seed: int, rounds: int, n_clients: int = 100,
              m: int = 10, data_seed: int = 0) -> dict:
     train = make_classification(20_000, seed=data_seed)
     test = make_classification(2_000, seed=data_seed + 1)
-    strategy, mode, agg, mu, skw = METHODS[method]
-    cfg = FLConfig(
-        n_clients=n_clients, m=m, rounds=rounds, seed=seed, strategy=strategy,
-        client_mode=mode, aggregator=agg, mu=mu, strategy_kwargs=skw,
+    cfg = get_preset(method).make_config(
+        n_clients=n_clients, m=m, rounds=rounds, seed=seed,
         target_hd=0.9, eval_every=5,
     )
-    sim = FederatedSimulation(cfg, train, test, n_classes=10)
+    engine = make_engine(cfg, train, test, n_classes=10)
     t0 = time.time()
-    hist = sim.run()
+    hist = engine.run()
     return {
         "method": method, "seed": seed, "rounds": rounds,
         "n_clients": n_clients, "m": m,
-        "alpha": sim.alpha,
-        "n_params": sim.n_params,
+        "cache_version": CACHE_VERSION,
+        "cfg": cfg.to_dict(),
+        "alpha": engine.alpha,
+        "n_params": engine.n_params,
         "wall_s": round(time.time() - t0, 1),
-        "needs_losses": sim.strategy.needs_losses,
-        "needs_histograms": sim.strategy.needs_histograms,
+        "needs_losses": engine.strategy.needs_losses,
+        "needs_histograms": engine.strategy.needs_histograms,
         "history": hist,
     }
 
@@ -81,6 +88,13 @@ def save_runs(runs: list[dict]) -> None:
 def ensure_runs(methods: list[str], seeds: list[int], rounds: int,
                 m: int = 10, verbose: bool = True) -> list[dict]:
     runs = load_runs()
+    # drop cells from an older simulator version — numerically incomparable
+    stale = [r for r in runs if r.get("cache_version") != CACHE_VERSION]
+    if stale:
+        print(f"# dropping {len(stale)} cached cells from an older "
+              f"simulator version (cache_version != {CACHE_VERSION})",
+              flush=True)
+        runs = [r for r in runs if r.get("cache_version") == CACHE_VERSION]
     have = {(r["method"], r["seed"], r["rounds"], r.get("m", 10)) for r in runs}
     for method in methods:
         for seed in seeds:

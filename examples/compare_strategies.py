@@ -1,22 +1,22 @@
 """Mini Table II/III: FedLECC vs baselines under severe label skew.
 
-Runs {FedAvg(random), POC, FedLECC} on the same partition/seed and prints
-final accuracy, rounds-to-50%, and communication — the paper's three
-claims in one table.  (~5 min on CPU; add methods to METHODS for more.)
+Runs {FedAvg(random), POC, FedLECC} — looked up from the engine's
+experiment-preset registry — on the same partition/seed and prints final
+accuracy, rounds-to-50%, and communication: the paper's three claims in
+one table.  (~5 min on CPU; any name from ``list_presets()`` works.)
 
     PYTHONPATH=src python examples/compare_strategies.py
 """
 
-import numpy as np
-
 from repro.data import make_classification
-from repro.federated import FLConfig, FederatedSimulation
-from repro.federated.simulation import rounds_to_accuracy
+from repro.engine import make_engine, rounds_to_accuracy
+from repro.engine.presets import get_preset
 
-METHODS = {
-    "fedavg": dict(strategy="random"),
-    "poc": dict(strategy="poc"),
-    "fedlecc": dict(strategy="fedlecc", strategy_kwargs={"J": 5}),
+# preset name → per-example overrides (J=5 suits this 60-client partition)
+RUNS = {
+    "fedavg": {},
+    "poc": {},
+    "fedlecc": {"strategy_kwargs": {"J": 5}},
 }
 
 
@@ -24,11 +24,13 @@ def main(rounds: int = 60):
     train = make_classification(15_000, seed=0)
     test = make_classification(2_000, seed=1)
     rows = []
-    for name, kw in METHODS.items():
-        cfg = FLConfig(n_clients=60, m=8, rounds=rounds, eval_every=5,
-                       target_hd=0.9, seed=0, **kw)
-        sim = FederatedSimulation(cfg, train, test, n_classes=10)
-        h = sim.run()
+    for name, overrides in RUNS.items():
+        cfg = get_preset(name).make_config(
+            n_clients=60, m=8, rounds=rounds, eval_every=5,
+            target_hd=0.9, seed=0, **overrides,
+        )
+        engine = make_engine(cfg, train, test, n_classes=10)
+        h = engine.run()
         rows.append((name, h["test_acc"][-1], rounds_to_accuracy(h, 0.5),
                      h["comm_mb"][-1]))
         print(f"{name:8s} done: acc={rows[-1][1]:.4f}")

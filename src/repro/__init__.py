@@ -7,7 +7,16 @@ training/serving framework:
 
 - ``repro.core``       — the paper's contribution (HD, OPTICS, Algorithm 1,
                          baseline selection strategies, comm accounting)
-- ``repro.federated``  — FL runtime (vmapped simulation + mesh scale-out)
+- ``repro.engine``     — the pluggable federated engine: strategy /
+                         aggregator / client-mode registries, ``FLConfig``
+                         (validated, serializable), and the backend-agnostic
+                         round protocol (``HostEngine`` | ``CompiledEngine``
+                         behind ``FLConfig.backend``) streaming
+                         ``RoundResult``s via ``engine.rounds()``
+- ``repro.federated``  — FL runtime primitives (client local training,
+                         aggregation rules, mesh scale-out round); the old
+                         ``FederatedSimulation`` is a deprecated shim over
+                         ``repro.engine``
 - ``repro.models``     — composable model zoo (dense/MoE/SSM/hybrid/audio/vlm)
 - ``repro.data``       — synthetic datasets + Dirichlet label-skew partitioner
 - ``repro.optim``      — SGD/AdamW + FedProx/FedDyn/FedNova

@@ -13,25 +13,34 @@ Every strategy implements:
     extra_upload_bytes_per_round()    — selection-protocol overhead used
                                         by ``CommModel`` (Table III)
 
+Strategies register themselves into the engine registry at definition
+time (``@register_strategy``); ``repro.engine`` builds them by name, so
+new strategies plug in without touching any round loop.  Strategies with
+a jit-compatible selection additionally expose
+``select_mask_jax(losses) -> (K,) bool mask`` and set
+``supports_compiled_selection`` (the FedLECC family) — that is what
+``CompiledEngine`` calls.
+
 All are host-side numpy: K scalars/vectors per round (DESIGN.md §8.5).
 """
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
 
 import numpy as np
 
 from repro.core.clustering import cluster_label_histograms
 from repro.core.hellinger import hellinger_matrix
-from repro.core.selection import fedlecc_select
+from repro.core.selection import fedlecc_select, fedlecc_select_jax
+from repro.engine.registry import STRATEGY_REGISTRY, register_strategy
 
 __all__ = ["SelectionStrategy", "get_strategy", "STRATEGIES"]
 
 _FLOAT_BYTES = 4
 
 
+@register_strategy("random")
 @dataclass
 class SelectionStrategy:
     """Base: uniform random sampling (what FedAvg/FedProx/... use)."""
@@ -40,6 +49,7 @@ class SelectionStrategy:
     name: str = "random"
     needs_losses: bool = False          # does the server poll all clients for loss?
     needs_histograms: bool = False      # one-time label-histogram upload?
+    supports_compiled_selection = False  # has a jit-compatible select_mask_jax?
     K: int = field(default=0, init=False)
     client_sizes: np.ndarray | None = field(default=None, init=False)
 
@@ -55,6 +65,7 @@ class SelectionStrategy:
         return float(self.K * _FLOAT_BYTES) if self.needs_losses else 0.0
 
 
+@register_strategy("fedlecc")
 @dataclass
 class FedLECC(SelectionStrategy):
     """The paper's strategy: OPTICS clusters + Algorithm 1.
@@ -70,6 +81,7 @@ class FedLECC(SelectionStrategy):
     name: str = "fedlecc"
     needs_losses: bool = True
     needs_histograms: bool = True
+    supports_compiled_selection = True
     labels: np.ndarray | None = field(default=None, init=False)
     n_clusters: int = field(default=0, init=False)
     cluster_method: str = field(default="optics", init=False)
@@ -78,7 +90,6 @@ class FedLECC(SelectionStrategy):
         super().setup(hists, client_sizes, seed)
         if self.cluster == "auto":
             from repro.core.clustering import best_clustering
-            from repro.core.hellinger import hellinger_matrix
 
             d = np.asarray(hellinger_matrix(np.asarray(hists)))
             self.labels, self.cluster_method = best_clustering(
@@ -90,11 +101,28 @@ class FedLECC(SelectionStrategy):
             )
         self.n_clusters = int(self.labels.max()) + 1  # J_max from OPTICS
 
+    def _round_J(self, losses: np.ndarray) -> int:
+        return min(self.J, self.n_clusters)
+
     def select(self, rnd, losses, rng) -> np.ndarray:
-        J = min(self.J, self.n_clusters)
-        return fedlecc_select(self.labels, losses, m=self.m, J=J)
+        return fedlecc_select(
+            self.labels, losses, m=self.m, J=self._round_J(losses)
+        )
+
+    def select_mask_jax(self, losses):
+        """(K,) boolean participation mask, computable inside jit — the
+        CompiledEngine's selection hook (verified identical to ``select``
+        by property test)."""
+        import jax.numpy as jnp
+
+        J = max(1, min(self._round_J(np.asarray(losses)), self.n_clusters))
+        return fedlecc_select_jax(
+            jnp.asarray(self.labels), jnp.asarray(losses, jnp.float32),
+            m=min(self.m, self.K), J=J, n_clusters=self.n_clusters,
+        )
 
 
+@register_strategy("poc")
 @dataclass
 class PowerOfChoice(SelectionStrategy):
     """POC (Cho et al., 2022): sample d candidates ~ p_i, keep top-m by loss."""
@@ -112,6 +140,7 @@ class PowerOfChoice(SelectionStrategy):
         return np.sort(top)
 
 
+@register_strategy("haccs")
 @dataclass
 class HACCS(SelectionStrategy):
     """HACCS (Wolfrath et al., 2022): histogram clusters; latency-efficient
@@ -136,6 +165,9 @@ class HACCS(SelectionStrategy):
         # devices first within each cluster.
         counts = np.bincount(self.labels, minlength=self.n_clusters)
         slots = np.maximum(np.round(self.m * counts / counts.sum()).astype(int), 0)
+        largest = int(np.argmax(counts))
+        if slots[largest] == 0:  # rounding can starve even the largest cluster
+            slots[largest] = 1
         selected: list[int] = []
         order = np.argsort(-counts)
         for c in order:
@@ -154,6 +186,7 @@ class HACCS(SelectionStrategy):
         return np.sort(np.array(selected, dtype=np.int64))
 
 
+@register_strategy("fedcls")
 @dataclass
 class FedCLS(SelectionStrategy):
     """FedCLS (Li & Wu, 2022): Hamming distance over binarized label
@@ -189,6 +222,7 @@ class FedCLS(SelectionStrategy):
         return np.sort(np.array(selected, dtype=np.int64))
 
 
+@register_strategy("fedcor")
 @dataclass
 class FedCor(SelectionStrategy):
     """FedCor (Tang et al., 2022), lightweight variant: GP posterior over
@@ -225,6 +259,7 @@ class FedCor(SelectionStrategy):
         return np.sort(np.array(selected, dtype=np.int64))
 
 
+@register_strategy("lossonly")
 @dataclass
 class LossOnly(SelectionStrategy):
     """Ablation (RQ2): FedLECC without clustering — global top-m by loss.
@@ -238,6 +273,7 @@ class LossOnly(SelectionStrategy):
         return np.sort(np.argsort(-losses, kind="stable")[: self.m])
 
 
+@register_strategy("clusterrandom")
 @dataclass
 class ClusterRandom(FedLECC):
     """Ablation (RQ2): FedLECC without loss guidance — same OPTICS
@@ -246,6 +282,7 @@ class ClusterRandom(FedLECC):
 
     name: str = "clusterrandom"
     needs_losses: bool = False
+    supports_compiled_selection = False  # selection is rng-driven, host-only
 
     def select(self, rnd, losses, rng) -> np.ndarray:
         del losses
@@ -267,6 +304,7 @@ class ClusterRandom(FedLECC):
         return np.sort(np.array(sel, dtype=np.int64))
 
 
+@register_strategy("fedlecc_adaptive")
 @dataclass
 class FedLECCAdaptive(FedLECC):
     """Beyond-paper: adaptive J (the paper's stated future work, §VII).
@@ -281,38 +319,22 @@ class FedLECCAdaptive(FedLECC):
 
     name: str = "fedlecc_adaptive"
 
-    def select(self, rnd, losses, rng) -> np.ndarray:
+    def _round_J(self, losses: np.ndarray) -> int:
         clusters = np.unique(self.labels)
         means = np.array([losses[self.labels == c].mean() for c in clusters])
         if means.size <= 1:
-            J = 1
-        else:
-            thr = means.min() + 0.5 * (means.max() - means.min())
-            J = int((means >= thr).sum())
-            J = max(2, min(J, self.m, self.n_clusters))
-        return fedlecc_select(self.labels, losses, m=self.m, J=J)
+            return 1
+        thr = means.min() + 0.5 * (means.max() - means.min())
+        J = int((means >= thr).sum())
+        return max(2, min(J, self.m, self.n_clusters))
 
 
-def _make(name: str, m: int, **kw) -> SelectionStrategy:
-    cls = STRATEGIES[name]
-    return cls(m=m, **kw)
-
-
-STRATEGIES: dict[str, type] = {
-    "random": SelectionStrategy,
-    "fedlecc": FedLECC,
-    "fedlecc_adaptive": FedLECCAdaptive,
-    "lossonly": LossOnly,
-    "clusterrandom": ClusterRandom,
-    "poc": PowerOfChoice,
-    "haccs": HACCS,
-    "fedcls": FedCLS,
-    "fedcor": FedCor,
-}
+# Deprecated alias: the registry *is* the strategy table now.  Kept so
+# legacy ``from repro.core.strategies import STRATEGIES`` consumers keep
+# working — it behaves like the old name → class dict.
+STRATEGIES = STRATEGY_REGISTRY
 
 
 def get_strategy(name: str, m: int, **kwargs) -> SelectionStrategy:
-    """Build a selection strategy by name (see ``STRATEGIES``)."""
-    if name not in STRATEGIES:
-        raise KeyError(f"unknown strategy {name!r}; available: {sorted(STRATEGIES)}")
-    return _make(name, m, **kwargs)
+    """Build a selection strategy by name via the engine registry."""
+    return STRATEGY_REGISTRY.build(name, m=m, **kwargs)

@@ -1,0 +1,112 @@
+"""repro.engine — the pluggable federated engine API.
+
+One API, three orthogonal axes, two backends:
+
+- ``registry``     — ``@register_strategy`` / ``@register_aggregator`` /
+                     ``@register_client_mode`` decorators + lookups
+- ``config``       — ``FLConfig`` with validation, ``backend`` switch,
+                     and ``to_dict``/``from_dict`` round-tripping
+- ``base``         — ``Engine`` round protocol (poll_losses → select →
+                     local_train → aggregate → evaluate), streaming
+                     ``rounds()`` iterator of frozen ``RoundResult``s
+- ``host``         — ``HostEngine``: numpy selection + vmapped cohort
+- ``compiled``     — ``CompiledEngine``: jitted selection/round with the
+                     participation mask gating aggregation (scale-out
+                     semantics), plus ``make_scaleout_round`` for the
+                     production mesh
+- ``aggregators``  — FedAvg / FedNova / FedDyn as stateful objects
+- ``client_modes`` — plain / FedProx / FedDyn gradient modifiers
+- ``presets``      — named method cells (Table II/III) via
+                     ``get_preset(name).make_config(...)``
+
+Typical use::
+
+    from repro.engine import FLConfig, make_engine
+
+    cfg = FLConfig(strategy="fedlecc", backend="host", rounds=30)
+    engine = make_engine(cfg, train, test, n_classes=10)
+    for result in engine.rounds():
+        ...  # result: RoundResult(round, selected, losses, metrics, MB)
+
+``HostEngine``/``CompiledEngine`` are imported lazily (module
+``__getattr__``) so that registering a component never drags in the
+training stack.
+"""
+
+from repro.engine.config import BACKENDS, FLConfig
+from repro.engine.registry import (
+    AGGREGATOR_REGISTRY,
+    CLIENT_MODE_REGISTRY,
+    PRESET_REGISTRY,
+    STRATEGY_REGISTRY,
+    Registry,
+    list_aggregators,
+    list_client_modes,
+    list_strategies,
+    register_aggregator,
+    register_client_mode,
+    register_strategy,
+)
+
+__all__ = [
+    "BACKENDS",
+    "FLConfig",
+    "Registry",
+    "STRATEGY_REGISTRY",
+    "AGGREGATOR_REGISTRY",
+    "CLIENT_MODE_REGISTRY",
+    "PRESET_REGISTRY",
+    "register_strategy",
+    "register_aggregator",
+    "register_client_mode",
+    "list_strategies",
+    "list_aggregators",
+    "list_client_modes",
+    "Engine",
+    "RoundResult",
+    "rounds_to_accuracy",
+    "HostEngine",
+    "CompiledEngine",
+    "make_scaleout_round",
+    "ExperimentPreset",
+    "get_preset",
+    "list_presets",
+    "register_preset",
+    "make_engine",
+]
+
+_LAZY = {
+    "Engine": ("repro.engine.base", "Engine"),
+    "RoundResult": ("repro.engine.base", "RoundResult"),
+    "rounds_to_accuracy": ("repro.engine.base", "rounds_to_accuracy"),
+    "HostEngine": ("repro.engine.host", "HostEngine"),
+    "CompiledEngine": ("repro.engine.compiled", "CompiledEngine"),
+    "make_scaleout_round": ("repro.engine.compiled", "make_scaleout_round"),
+    "ExperimentPreset": ("repro.engine.presets", "ExperimentPreset"),
+    "get_preset": ("repro.engine.presets", "get_preset"),
+    "list_presets": ("repro.engine.presets", "list_presets"),
+    "register_preset": ("repro.engine.presets", "register_preset"),
+}
+
+
+def __getattr__(name):
+    try:
+        mod, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro.engine' has no attribute {name!r}")
+    import importlib
+
+    value = getattr(importlib.import_module(mod), attr)
+    globals()[name] = value
+    return value
+
+
+def make_engine(cfg: FLConfig, train, test, n_classes: int):
+    """Build the engine selected by ``cfg.backend`` ("host" | "compiled")."""
+    if cfg.backend == "compiled":
+        from repro.engine.compiled import CompiledEngine
+
+        return CompiledEngine(cfg, train, test, n_classes)
+    from repro.engine.host import HostEngine
+
+    return HostEngine(cfg, train, test, n_classes)

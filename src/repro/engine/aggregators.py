@@ -1,0 +1,131 @@
+"""Server aggregation rules as registered objects.
+
+Each aggregator carries its own cross-round server state through three
+hooks, so rule-specific bookkeeping (FedDyn's server ``h``) lives here
+instead of inside the round loop:
+
+    init_state(global_params)                      -> state (or None)
+    aggregate(stacked, global_params, weights,
+              taus, state, n_selected)             -> new global params
+    update_state(state, stacked, global_params,
+                 weights, n_selected)              -> new state
+
+``stacked`` is a pytree with a leading client axis; it may hold just the
+selected cohort (host backend) or all K clients with zero weight outside
+the selected set (compiled backend) — the rules are weight-gated either
+way, so both backends share these objects unchanged.
+
+The pure pytree math stays in ``repro.federated.aggregation``; these
+classes only add state-threading and registration.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine.registry import AGGREGATOR_REGISTRY, register_aggregator
+from repro.federated.aggregation import (
+    fedavg,
+    feddyn_server,
+    feddyn_update_h,
+    fednova,
+)
+
+__all__ = [
+    "Aggregator",
+    "FedAvgAggregator",
+    "FedNovaAggregator",
+    "FedDynAggregator",
+    "get_aggregator",
+]
+
+
+class Aggregator:
+    """Base aggregator: stateless, must implement ``aggregate``."""
+
+    name = "base"
+    needs_state = False
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def init_state(self, global_params: Any) -> Any:
+        return None
+
+    def aggregate(self, stacked, global_params, weights, taus, state,
+                  n_selected: int):
+        raise NotImplementedError
+
+    def update_state(self, state, stacked, global_params, weights,
+                     n_selected: int):
+        return state
+
+
+@register_aggregator("fedavg")
+class FedAvgAggregator(Aggregator):
+    """θ ← Σ_i w_i θ_i (weights normalized ∝ N_i over the selected set)."""
+
+    name = "fedavg"
+
+    def aggregate(self, stacked, global_params, weights, taus, state,
+                  n_selected: int):
+        return fedavg(stacked, weights)
+
+
+@register_aggregator("fednova")
+class FedNovaAggregator(Aggregator):
+    """FedNova: τ-normalized client deltas rescaled by τ_eff = Σ w_i τ_i."""
+
+    name = "fednova"
+
+    def aggregate(self, stacked, global_params, weights, taus, state,
+                  n_selected: int):
+        return fednova(stacked, global_params, weights, taus)
+
+
+@register_aggregator("feddyn")
+class FedDynAggregator(Aggregator):
+    """FedDyn server rule with the ``h`` correction as aggregator state.
+
+    The round loop never sees ``h``: ``init_state`` allocates it,
+    ``aggregate`` applies θ ← mean_S θ_i − h/α, and ``update_state``
+    accumulates h ← h − α·(m/K)·(mean_S θ_i − θ_g).
+    """
+
+    name = "feddyn"
+    needs_state = True
+
+    def init_state(self, global_params: Any) -> Any:
+        return jax.tree.map(
+            lambda p: jnp.zeros_like(p, jnp.float32), global_params
+        )
+
+    def aggregate(self, stacked, global_params, weights, taus, state,
+                  n_selected: int):
+        theta, mean_params = feddyn_server(
+            stacked, weights, state, self.cfg.mu,
+            n_selected / self.cfg.n_clients,
+        )
+        # stash for update_state (called right after in the round loop) so
+        # the full-model weighted sum isn't computed twice per round
+        self._last_mean = mean_params
+        return theta
+
+    def update_state(self, state, stacked, global_params, weights,
+                     n_selected: int):
+        mean_params = getattr(self, "_last_mean", None)
+        if mean_params is None:  # update_state called standalone
+            mean_params = fedavg(stacked, weights)
+        self._last_mean = None
+        return feddyn_update_h(
+            state, mean_params, global_params, self.cfg.mu,
+            n_selected / self.cfg.n_clients,
+        )
+
+
+def get_aggregator(name: str, cfg) -> Aggregator:
+    """Build a registered aggregator bound to an ``FLConfig``."""
+    return AGGREGATOR_REGISTRY.build(name, cfg)

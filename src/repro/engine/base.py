@@ -1,0 +1,283 @@
+"""Backend-agnostic federated engine: the typed round protocol.
+
+``Engine`` owns everything both backends share — the non-IID partition,
+the packed client tensors, the MLP, the selection strategy, the comm
+ledger — and drives one canonical round loop:
+
+    poll_losses → select → local_train → aggregate → evaluate
+
+Backends implement the hooks:
+
+- ``HostEngine``     (``repro.engine.host``)     — numpy selection +
+  vmapped cohort training (the paper-faithful simulation).
+- ``CompiledEngine`` (``repro.engine.compiled``) — selection, training,
+  and mask-gated aggregation as jitted computations (the scale-out
+  semantics where every client computes and the participation mask
+  gates aggregation).
+
+``rounds()`` is a streaming iterator yielding one frozen ``RoundResult``
+per round (plus an optional callback), so consumers — examples,
+benchmarks, schedulers — observe training without owning the loop.
+``run()`` is the legacy consumer, producing the same history dict that
+``FederatedSimulation.run()`` always returned.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.comm_model import CommModel, count_params
+from repro.engine.aggregators import get_aggregator
+from repro.engine.client_modes import get_client_mode
+from repro.engine.config import FLConfig
+from repro.engine.registry import STRATEGY_REGISTRY
+
+__all__ = ["Engine", "RoundResult", "rounds_to_accuracy"]
+
+
+@dataclass(frozen=True)
+class RoundResult:
+    """One completed federated round.  ``test_loss``/``test_acc`` are
+    ``None`` on rounds where evaluation was skipped (``eval_every``)."""
+
+    round: int
+    selected: tuple[int, ...]
+    mean_selected_loss: float
+    comm_mb: float
+    test_loss: float | None = None
+    test_acc: float | None = None
+
+    @property
+    def evaluated(self) -> bool:
+        return self.test_acc is not None
+
+
+class Engine:
+    """Shared state + the canonical round loop; backends fill in hooks."""
+
+    backend = "base"
+
+    def __init__(self, cfg: FLConfig, train, test, n_classes: int):
+        from repro.data.partition import (
+            calibrate_alpha,
+            dirichlet_partition,
+            label_histograms,
+            pack_clients,
+        )
+        from repro.models.mlp import init_mlp
+
+        self.cfg = cfg
+        self.n_classes = n_classes
+        self.rng = np.random.default_rng(cfg.seed)
+
+        # --- non-IID partition (calibrated to the paper's HD regime) ---
+        if cfg.partition == "shards":
+            from repro.data.partition import calibrate_shards, shard_partition
+
+            s = calibrate_shards(train.y, cfg.n_clients, cfg.target_hd,
+                                 n_classes, seed=cfg.seed)
+            self.alpha = float(s)  # records shards/client in the alpha slot
+            self.client_idx = shard_partition(
+                train.y, cfg.n_clients, s, seed=cfg.seed
+            )
+        else:
+            alpha = cfg.alpha_dirichlet
+            if alpha is None:
+                alpha = calibrate_alpha(
+                    train.y, cfg.n_clients, cfg.target_hd, n_classes,
+                    seed=cfg.seed,
+                )
+            self.alpha = float(alpha)
+            self.client_idx = dirichlet_partition(
+                train.y, cfg.n_clients, self.alpha, seed=cfg.seed
+            )
+        self.hists = label_histograms(train.y, self.client_idx, n_classes)
+        xs, ys, mask = pack_clients(train.x, train.y, self.client_idx)
+        self.xs, self.ys, self.mask = (
+            jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(mask),
+        )
+        self.sizes = np.array([len(ix) for ix in self.client_idx])
+        self.test_x, self.test_y = jnp.asarray(test.x), jnp.asarray(test.y)
+
+        # --- model / optimizer-free local SGD ---
+        feat = train.x.shape[1]
+        self.params = init_mlp(
+            jax.random.PRNGKey(cfg.seed), (feat, *cfg.hidden, n_classes)
+        )
+        self.n_params = count_params(self.params)
+
+        # --- local step budgets (heterogeneous → FedNova is meaningful) ---
+        taus = np.ceil(
+            self.sizes * cfg.local_epochs / cfg.batch_size
+        ).astype(np.int32)
+        self.taus = np.maximum(taus, 1)
+        self.max_steps = int(min(cfg.max_steps_cap, self.taus.max()))
+
+        # --- pluggable components, all via the registries ---
+        self.strategy = STRATEGY_REGISTRY.build(
+            cfg.strategy, m=cfg.m, **cfg.strategy_kwargs
+        )
+        self.strategy.setup(self.hists, self.sizes, seed=cfg.seed)
+        self.aggregator = get_aggregator(cfg.aggregator, cfg)
+        self.agg_state = self.aggregator.init_state(self.params)
+        self.client_mode = get_client_mode(cfg.client_mode)
+        self.h_clients = self.client_mode.init_client_state(
+            self.params, cfg.n_clients
+        )
+
+        # --- communication ledger ---
+        self.comm = CommModel(self.n_params, cfg.n_clients, n_classes)
+        self.comm_mb = self.comm.one_time_mb(self.strategy.needs_histograms)
+
+        self._build_shared_jits()
+        self._round = 0
+        self.history: dict[str, list] = {
+            "round": [], "test_acc": [], "test_loss": [], "comm_mb": [],
+            "mean_selected_loss": [], "selected": [],
+        }
+
+    # ------------------------------------------------------------------
+    def _build_shared_jits(self) -> None:
+        from repro.models.mlp import accuracy, cross_entropy_loss, mlp_apply
+
+        cfg = self.cfg
+        self._apply_fn, self._loss_fn = mlp_apply, cross_entropy_loss
+        apply_fn, loss_fn = self._apply_fn, self._loss_fn
+
+        def _poll_losses(params, xs, ys, mask, key):
+            """Subsampled local empirical loss of the *global* model on
+            every client (Algorithm 1 lines 2–4)."""
+
+            def one(x, y, m, k):
+                n = x.shape[0]
+                p = m / jnp.maximum(m.sum(), 1e-9)
+                idx = jax.random.choice(k, n, shape=(cfg.eval_samples,), p=p)
+                logits = apply_fn(params, jnp.take(x, idx, axis=0))
+                return loss_fn(logits, jnp.take(y, idx, axis=0), None)
+
+            keys = jax.random.split(key, xs.shape[0])
+            return jax.vmap(one)(xs, ys, mask, keys)
+
+        self._poll_losses = jax.jit(_poll_losses)
+
+        def _evaluate(params, x, y):
+            logits = apply_fn(params, x)
+            return loss_fn(logits, y, None), accuracy(logits, y)
+
+        self._evaluate = jax.jit(_evaluate)
+
+    @staticmethod
+    def _client_keys(key: jax.Array, indices) -> jax.Array:
+        """Per-client PRNG keys derived by client index (``fold_in``), so
+        a client's local-training stream is identical whichever backend —
+        and whichever cohort — it runs in."""
+        return jax.vmap(
+            lambda i: jax.random.fold_in(key, i)
+        )(jnp.asarray(indices, jnp.int32))
+
+    # -- hooks (backend contract) --------------------------------------
+    def poll_losses(self, rnd: int, key: jax.Array) -> np.ndarray:
+        """(K,) polled losses — zeros when the strategy never polls."""
+        if self.strategy.needs_losses:
+            return np.asarray(
+                self._poll_losses(self.params, self.xs, self.ys, self.mask, key)
+            )
+        return np.zeros(self.cfg.n_clients, np.float32)
+
+    def select(self, rnd: int, losses: np.ndarray) -> np.ndarray:
+        """Sorted indices of this round's participants."""
+        raise NotImplementedError
+
+    def local_train(self, rnd: int, sel: np.ndarray, key: jax.Array):
+        """Run local training.  Returns ``(payload, sel_losses)`` where
+        ``payload`` is backend-opaque (threaded into ``aggregate``) and
+        ``sel_losses`` is a (len(sel),) array of local training losses."""
+        raise NotImplementedError
+
+    def aggregate(self, rnd: int, sel: np.ndarray, payload) -> None:
+        """Fold the payload into ``self.params`` (and any server state)."""
+        raise NotImplementedError
+
+    def evaluate(self) -> tuple[float, float]:
+        tl, ta = self._evaluate(self.params, self.test_x, self.test_y)
+        return float(tl), float(ta)
+
+    # -- the canonical round loop --------------------------------------
+    def rounds(
+        self,
+        n_rounds: int | None = None,
+        callback: Callable[[RoundResult], None] | None = None,
+    ) -> Iterator[RoundResult]:
+        """Stream ``RoundResult`` records, one per federated round."""
+        cfg = self.cfg
+        n_rounds = n_rounds or cfg.rounds
+        key = jax.random.PRNGKey(cfg.seed + 17)
+        # resume key stream where a previous rounds()/run() call stopped
+        for _ in range(self._round):
+            key, _, _ = jax.random.split(key, 3)
+
+        start = self._round
+        for rnd in range(start, start + n_rounds):
+            key, k_poll, k_train = jax.random.split(key, 3)
+
+            losses = self.poll_losses(rnd, k_poll)
+            sel = np.asarray(self.select(rnd, losses))
+            payload, sel_losses = self.local_train(rnd, sel, k_train)
+            self.aggregate(rnd, sel, payload)
+
+            self.comm_mb += self.comm.round_mb(
+                len(sel), self.strategy.needs_losses
+            )
+            test_loss = test_acc = None
+            # absolute cadence, so chunked rounds() calls evaluate on the
+            # same schedule as one contiguous call (each call additionally
+            # evaluates its own final round)
+            if rnd % cfg.eval_every == 0 or rnd == start + n_rounds - 1:
+                test_loss, test_acc = self.evaluate()
+
+            self._round = rnd + 1
+            result = RoundResult(
+                round=rnd,
+                selected=tuple(int(i) for i in sel),
+                mean_selected_loss=float(np.mean(np.asarray(sel_losses))),
+                comm_mb=float(self.comm_mb),
+                test_loss=test_loss,
+                test_acc=test_acc,
+            )
+            if callback is not None:
+                callback(result)
+            yield result
+
+    def run(self, rounds: int | None = None, log_every: int = 0) -> dict[str, list]:
+        """Legacy consumer: drain ``rounds()`` into the history dict
+        (evaluated rounds only, matching ``FederatedSimulation.run()``)."""
+        for r in self.rounds(rounds):
+            if not r.evaluated:
+                continue
+            self.history["round"].append(r.round)
+            self.history["test_acc"].append(r.test_acc)
+            self.history["test_loss"].append(r.test_loss)
+            self.history["comm_mb"].append(r.comm_mb)
+            self.history["mean_selected_loss"].append(r.mean_selected_loss)
+            self.history["selected"].append(list(r.selected))
+            if log_every and (r.round % log_every == 0):
+                print(
+                    f"[{self.cfg.strategy}] round {r.round:4d} "
+                    f"acc={r.test_acc:.4f} loss={r.test_loss:.4f} "
+                    f"comm={r.comm_mb:.1f}MB"
+                )
+        return self.history
+
+
+def rounds_to_accuracy(history: dict[str, list], target: float) -> int | None:
+    """First evaluated round reaching ``target`` test accuracy (Fig 3 / the
+    paper's −22%-rounds claim); None if never reached."""
+    for rnd, acc in zip(history["round"], history["test_acc"]):
+        if acc >= target:
+            return rnd
+    return None

@@ -1,0 +1,102 @@
+"""Local-objective client modes as registered objects.
+
+A client mode is the third orthogonal axis of a federated method (after
+selection and aggregation): a gradient transform applied inside each
+local SGD step, plus optional per-client state.  ``local_train``
+(``repro.federated.client``) looks its mode up here at trace time — the
+mode name is a static jit argument, so the dispatch costs nothing in the
+compiled step.
+
+    modify_grads(grads, params, global_params, h_state, mu) -> grads
+    init_client_state(global_params, n_clients)  -> (K,)+leaf state or None
+    update_client_state(h_sel, local_params_end, new_global, mu) -> h_sel
+
+The gradient math lives in ``repro.optim.fedmods``; these classes only
+add registration and state-threading.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine.registry import CLIENT_MODE_REGISTRY, register_client_mode
+from repro.optim.fedmods import feddyn_grads, feddyn_update_state, fedprox_grads
+
+__all__ = [
+    "ClientMode",
+    "PlainMode",
+    "FedProxMode",
+    "FedDynMode",
+    "get_client_mode",
+]
+
+
+class ClientMode:
+    """Base: unmodified local SGD (what FedAvg and every selection-only
+    method use)."""
+
+    name = "plain"
+    needs_h = False  # per-client correction state (FedDyn)?
+
+    def modify_grads(self, grads, params, global_params, h_state, mu: float):
+        return grads
+
+    def init_client_state(self, global_params: Any, n_clients: int) -> Any:
+        return None
+
+    def update_client_state(self, h_sel, local_params_end, new_global,
+                            mu: float):
+        return h_sel
+
+
+@register_client_mode("plain")
+class PlainMode(ClientMode):
+    name = "plain"
+
+
+@register_client_mode("fedprox")
+class FedProxMode(ClientMode):
+    """FedProx: + (mu/2)·‖θ − θ_g‖² proximal term."""
+
+    name = "fedprox"
+
+    def modify_grads(self, grads, params, global_params, h_state, mu: float):
+        return fedprox_grads(grads, params, global_params, mu)
+
+
+@register_client_mode("feddyn")
+class FedDynMode(ClientMode):
+    """FedDyn: linear-dual correction ⟨h_i, θ⟩ with per-client h_i state."""
+
+    name = "feddyn"
+    needs_h = True
+
+    def modify_grads(self, grads, params, global_params, h_state, mu: float):
+        return feddyn_grads(grads, params, global_params, h_state, mu)
+
+    def init_client_state(self, global_params: Any, n_clients: int) -> Any:
+        return jax.tree.map(
+            lambda p: jnp.zeros((n_clients,) + p.shape, jnp.float32),
+            global_params,
+        )
+
+    def update_client_state(self, h_sel, local_params_end, new_global,
+                            mu: float):
+        return jax.vmap(
+            lambda h, p: feddyn_update_state(h, p, new_global, mu),
+            in_axes=(0, 0),
+        )(h_sel, local_params_end)
+
+
+_INSTANCES: dict[str, ClientMode] = {}
+
+
+def get_client_mode(name: str) -> ClientMode:
+    """Registered client-mode singleton (modes are stateless objects; the
+    per-client state is threaded explicitly by the engine)."""
+    if name not in _INSTANCES:
+        _INSTANCES[name] = CLIENT_MODE_REGISTRY.build(name)
+    return _INSTANCES[name]

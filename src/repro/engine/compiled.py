@@ -1,0 +1,126 @@
+"""CompiledEngine — selection inside the compiled computation.
+
+Mirrors the scale-out mesh round (``repro.federated.scaleout``): every
+client runs local training every round — as pods on the production mesh
+always do — and *selection enters as a weight vector*: the FedLECC mask
+(``fedlecc_select_jax``) is turned into aggregation weights
+(``selection_weights``) that zero out unselected clients, exactly the
+mask-gated psum of DESIGN.md §3b, here realized as a mask-gated weighted
+sum over the stacked client axis.
+
+Because per-client PRNG keys are derived by client index (``fold_in``,
+see ``Engine._client_keys``) and zero-weight clients contribute exact
+zeros to the aggregation, a ``CompiledEngine`` round is numerically
+identical to the ``HostEngine`` round for the same config — the
+cross-backend equivalence test asserts this.
+
+Requirements: the strategy must provide a jit-compatible selection
+(``supports_compiled_selection`` — the FedLECC family), and
+``client_mode`` must be ``"plain"`` (per-client FedDyn state for
+unselected clients has no scale-out analog yet).
+
+``make_scaleout_round`` re-exports the production mesh round
+(clients ↔ pods, shard_map + psum) as the engine-API entry point used by
+``repro.launch.dryrun --federated``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.selection import selection_weights
+from repro.engine.base import Engine
+from repro.federated.client import local_train
+
+__all__ = ["CompiledEngine", "make_scaleout_round"]
+
+
+class CompiledEngine(Engine):
+    backend = "compiled"
+
+    def __init__(self, cfg, train, test, n_classes: int):
+        super().__init__(cfg, train, test, n_classes)
+        if not getattr(self.strategy, "supports_compiled_selection", False):
+            raise ValueError(
+                f"strategy {cfg.strategy!r} has no jit-compatible selection; "
+                f"use backend='host' (compiled selection: the fedlecc family)"
+            )
+        if cfg.client_mode != "plain":
+            raise ValueError(
+                "backend='compiled' supports client_mode='plain' only "
+                f"(got {cfg.client_mode!r})"
+            )
+        self._taus_j = jnp.asarray(self.taus)
+        self._sizes_j = jnp.asarray(self.sizes, jnp.float32)
+        self._build_compiled_jits()
+
+    # ------------------------------------------------------------------
+    def _build_compiled_jits(self) -> None:
+        cfg = self.cfg
+        apply_fn, loss_fn = self._apply_fn, self._loss_fn
+        K = cfg.n_clients
+
+        def _one_client(global_params, x, y, mask, tau, key):
+            return local_train(
+                apply_fn, loss_fn, global_params, x, y, mask, tau, key,
+                lr=cfg.lr, max_steps=self.max_steps, batch_size=cfg.batch_size,
+                mode="plain", mu=cfg.mu, h_state=None,
+            )
+
+        vmapped = jax.vmap(_one_client, in_axes=(None, 0, 0, 0, 0, 0))
+
+        def _train_all(params, xs, ys, mask, taus, key):
+            keys = self._client_keys(key, jnp.arange(K))
+            return vmapped(params, xs, ys, mask, taus, keys)
+
+        self._train_all = jax.jit(_train_all)
+
+        def _masked_weights(mask):
+            return selection_weights(mask, self._sizes_j)
+
+        self._masked_weights = jax.jit(_masked_weights)
+
+    # -- hooks ----------------------------------------------------------
+    def select(self, rnd: int, losses: np.ndarray) -> np.ndarray:
+        mask = np.asarray(self.strategy.select_mask_jax(losses))
+        return np.where(mask)[0]
+
+    def local_train(self, rnd: int, sel: np.ndarray, key: jax.Array):
+        stacked, losses = self._train_all(
+            self.params, self.xs, self.ys, self.mask, self._taus_j, key
+        )
+        return stacked, np.asarray(losses)[sel]
+
+    def aggregate(self, rnd: int, sel: np.ndarray, payload) -> None:
+        stacked = payload
+        mask = jnp.zeros((self.cfg.n_clients,), jnp.bool_).at[
+            jnp.asarray(sel)
+        ].set(True)
+        w = self._masked_weights(mask)
+        new_params = self.aggregator.aggregate(
+            stacked, self.params, w, jnp.asarray(self.taus, jnp.float32),
+            self.agg_state, n_selected=len(sel),
+        )
+        self.agg_state = self.aggregator.update_state(
+            self.agg_state, stacked, self.params, w, n_selected=len(sel)
+        )
+        self.params = new_params
+
+
+def make_scaleout_round(model_cfg, mesh, lr: float, local_steps: int = 4,
+                        compress_bits: int = 0):
+    """Engine-API entry for the production mesh round (clients ↔ pods).
+
+    Thin wrapper over ``repro.federated.scaleout.make_federated_round`` —
+    the mesh round is the ``CompiledEngine`` semantics at pod scale:
+    every pod trains, and the FedLECC ``selection_weights`` vector gates
+    the all-reduce.  Imported lazily so ``repro.engine`` stays light.
+    """
+    from repro.federated.scaleout import make_federated_round
+
+    return make_federated_round(
+        model_cfg, mesh, lr=lr, local_steps=local_steps,
+        compress_bits=compress_bits,
+    )

@@ -1,0 +1,170 @@
+"""Pluggable-component registries for the federated engine.
+
+One ``Registry`` per orthogonal axis of a federated experiment
+(Fu et al., 2022 — selection, aggregation, and local-objective
+modification compose freely):
+
+- **strategies**    — client-selection policies (``repro.core.strategies``)
+- **aggregators**   — server update rules as objects with
+                      ``init_state / aggregate / update_state``
+                      (``repro.engine.aggregators``)
+- **client modes**  — local-objective gradient modifiers
+                      (``repro.engine.client_modes``)
+- **presets**       — named (strategy × mode × aggregator) experiment
+                      cells (``repro.engine.presets``)
+
+Components self-register at class-definition time via the decorators
+(``@register_strategy("fedlecc")`` etc.), so adding a new method never
+requires editing a dispatch table in the round loop, the benchmarks, or
+the examples.  Lookups lazily import the known provider modules, so
+``STRATEGY_REGISTRY["fedlecc"]`` works regardless of import order.
+
+This module is intentionally dependency-free (stdlib only) — everything
+else in ``repro.engine`` imports it, never the other way around.
+"""
+
+from __future__ import annotations
+
+import importlib
+from collections.abc import Mapping
+from typing import Any, Callable, Iterator
+
+__all__ = [
+    "Registry",
+    "STRATEGY_REGISTRY",
+    "AGGREGATOR_REGISTRY",
+    "CLIENT_MODE_REGISTRY",
+    "PRESET_REGISTRY",
+    "register_strategy",
+    "register_aggregator",
+    "register_client_mode",
+    "list_strategies",
+    "list_aggregators",
+    "list_client_modes",
+]
+
+# Modules whose import populates each registry (decorator side-effects).
+_PROVIDERS: dict[str, tuple[str, ...]] = {
+    "strategy": ("repro.core.strategies",),
+    "aggregator": ("repro.engine.aggregators",),
+    "client_mode": ("repro.engine.client_modes",),
+    "preset": ("repro.engine.presets",),
+}
+
+
+class Registry(Mapping):
+    """A named string → component mapping with a ``register`` decorator.
+
+    Behaves as a ``Mapping`` so legacy consumers written against plain
+    dicts (``sorted(STRATEGIES)``, ``name in STRATEGIES``,
+    ``STRATEGIES[name]``) keep working against the registry; dict-style
+    insertion (``STRATEGIES["mine"] = Cls``) delegates to ``register``.
+    """
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._items: dict[str, Any] = {}
+        self._populated = False
+
+    # -- registration ---------------------------------------------------
+    def register(self, name: str | None = None) -> Callable[[Any], Any]:
+        """Decorator: ``@REG.register("name")`` or ``@REG.register()``
+        (falls back to the object's ``name`` attribute, then __name__)."""
+
+        def deco(obj: Any) -> Any:
+            key = name or getattr(obj, "name", None) or getattr(obj, "__name__", None)
+            if not key or not isinstance(key, str):
+                raise ValueError(f"cannot infer a registry name for {obj!r}")
+            existing = self._items.get(key)
+            if existing is not None and existing is not obj:
+                # Re-registration of the same component (module reload,
+                # re-run notebook cell) overwrites; a *different*
+                # component claiming a taken name is an error.
+                def _origin(o: Any) -> tuple[str, str]:
+                    t = o if isinstance(o, type) else type(o)
+                    return (t.__qualname__, t.__module__)
+
+                same = _origin(existing) == _origin(obj) and (
+                    isinstance(obj, type) or repr(existing) == repr(obj)
+                )
+                if not same:
+                    raise ValueError(
+                        f"duplicate {self.kind} registration {key!r} "
+                        f"({existing!r} vs {obj!r})"
+                    )
+            self._items[key] = obj
+            return obj
+
+        return deco
+
+    # -- lookup ---------------------------------------------------------
+    def _populate(self) -> None:
+        if self._populated:
+            return
+        for mod in _PROVIDERS.get(self.kind, ()):
+            importlib.import_module(mod)
+        self._populated = True
+
+    def build(self, name: str, *args: Any, **kwargs: Any) -> Any:
+        """Instantiate the registered class ``name`` with the given args."""
+        return self[name](*args, **kwargs)
+
+    def names(self) -> list[str]:
+        self._populate()
+        return sorted(self._items)
+
+    # -- Mapping protocol ----------------------------------------------
+    def __getitem__(self, name: str) -> Any:
+        self._populate()
+        try:
+            return self._items[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown {self.kind} {name!r}; available: {sorted(self._items)}"
+            ) from None
+
+    def __iter__(self) -> Iterator[str]:
+        self._populate()
+        return iter(self._items)
+
+    def __len__(self) -> int:
+        self._populate()
+        return len(self._items)
+
+    def __contains__(self, name: object) -> bool:
+        self._populate()
+        return name in self._items
+
+    def __setitem__(self, name: str, obj: Any) -> None:
+        """Legacy dict-style registration (``STRATEGIES["mine"] = Cls``) —
+        plain-dict semantics, i.e. silent overwrite (the ``register``
+        decorator path keeps the strict duplicate check)."""
+        self._items[name] = obj
+
+    def __delitem__(self, name: str) -> None:
+        del self._items[name]
+
+    def __repr__(self) -> str:
+        return f"Registry({self.kind!r}, {sorted(self._items)})"
+
+
+STRATEGY_REGISTRY = Registry("strategy")
+AGGREGATOR_REGISTRY = Registry("aggregator")
+CLIENT_MODE_REGISTRY = Registry("client_mode")
+PRESET_REGISTRY = Registry("preset")
+
+register_strategy = STRATEGY_REGISTRY.register
+register_aggregator = AGGREGATOR_REGISTRY.register
+register_client_mode = CLIENT_MODE_REGISTRY.register
+
+
+def list_strategies() -> list[str]:
+    return STRATEGY_REGISTRY.names()
+
+
+def list_aggregators() -> list[str]:
+    return AGGREGATOR_REGISTRY.names()
+
+
+def list_client_modes() -> list[str]:
+    return CLIENT_MODE_REGISTRY.names()

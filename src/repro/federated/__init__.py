@@ -1,15 +1,28 @@
 """Federated runtime.
 
 - ``aggregation`` — FedAvg / FedNova / FedDyn server rules over pytrees
+                    (wrapped as stateful objects in ``repro.engine.aggregators``)
 - ``client``      — jit/vmap-able local training (SGD minibatch loop with
-                    FedProx/FedDyn gradient modifiers)
-- ``simulation``  — the paper-faithful K-client simulation (selection
-                    strategies from ``repro.core`` plugged in per round)
+                    gradient modifiers from the engine client-mode registry)
+- ``simulation``  — deprecated shim: ``FederatedSimulation`` →
+                    ``repro.engine.host.HostEngine``
 - ``scaleout``    — mesh-collective federated round for the large
                     architectures (selection mask gates the client-axis
-                    all-reduce; see DESIGN.md §3b)
+                    all-reduce; see DESIGN.md §3b); engine entry point:
+                    ``repro.engine.compiled.make_scaleout_round``
+
+``FLConfig`` / ``FederatedSimulation`` are lazy re-exports (PEP 562) so
+importing a submodule such as ``repro.federated.client`` never pulls in
+the full engine stack (and the engine can import submodules here without
+a cycle).
 """
 
-from repro.federated.simulation import FLConfig, FederatedSimulation
-
 __all__ = ["FLConfig", "FederatedSimulation"]
+
+
+def __getattr__(name):
+    if name in __all__:
+        from repro.federated import simulation
+
+        return getattr(simulation, name)
+    raise AttributeError(f"module 'repro.federated' has no attribute {name!r}")

@@ -8,7 +8,10 @@ Clients whose true step budget τ_i < max_steps freeze after τ_i steps
 (``jnp.where`` gating), which is what makes FedNova's τ-normalization
 meaningful under heterogeneous dataset sizes.
 
-FedProx / FedDyn gradient modifiers plug in via ``mode``.
+Gradient modifiers (FedProx / FedDyn / any registered client mode) plug
+in via ``mode``: the name is a static jit argument resolved against the
+``repro.engine`` client-mode registry at trace time, so adding a mode
+never touches this loop.
 """
 
 from __future__ import annotations
@@ -19,7 +22,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.optim.fedmods import fedprox_grads, feddyn_grads
+from repro.engine.client_modes import get_client_mode
 
 __all__ = ["local_train", "client_loss"]
 
@@ -59,6 +62,8 @@ def local_train(
 ):
     """Returns (params_end, mean_train_loss_over_executed_steps)."""
 
+    mode_impl = get_client_mode(mode)  # static name → registry, trace-time
+
     def loss_on_batch(params, bx, by):
         return loss_fn(apply_fn(params, bx), by, None)
 
@@ -70,10 +75,7 @@ def local_train(
         bidx = _sample_batch(k, mask, batch_size)
         bx, by = jnp.take(x, bidx, axis=0), jnp.take(y, bidx, axis=0)
         loss, grads = grad_fn(params, bx, by)
-        if mode == "fedprox":
-            grads = fedprox_grads(grads, params, global_params, mu)
-        elif mode == "feddyn":
-            grads = feddyn_grads(grads, params, global_params, h_state, mu)
+        grads = mode_impl.modify_grads(grads, params, global_params, h_state, mu)
         live = (t < tau).astype(jnp.float32)
         new_params = jax.tree.map(
             lambda p, g: p - lr * live * g.astype(p.dtype), params, grads

@@ -1,268 +1,42 @@
-"""Paper-faithful K-client federated simulation (§V protocol).
+"""Deprecated entry point — the simulation moved to ``repro.engine``.
 
-One ``FederatedSimulation`` = one experimental cell of Table II/III:
-dataset partitioned Dirichlet(alpha) across K clients, MLP trained with
-SGD(lr, B=64), a selection strategy picking m clients per round, an
-aggregation rule, and the communication ledger running alongside.
+``FederatedSimulation`` is now a thin shim over
+``repro.engine.host.HostEngine``: same constructor, same attributes
+(``params``, ``strategy``, ``comm``, ``history``, ...), and ``run()``
+returns the same history dict — but the round loop, the streaming
+``rounds()`` iterator, and the strategy/aggregator/client-mode dispatch
+all live in ``repro.engine``.  New code should use::
 
-Client local training is vmapped over the selected cohort inside one jit
-(see ``repro.federated.client``); the selection itself is host-side
-numpy (K scalars/round — DESIGN.md §8.5).
+    from repro.engine import FLConfig, make_engine
+
+    engine = make_engine(FLConfig(backend="host", ...), train, test, n_classes)
+    for result in engine.rounds():   # RoundResult stream
+        ...
+
+``FLConfig`` and ``rounds_to_accuracy`` are re-exported here for
+backward compatibility.
 """
 
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
-from typing import Any
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.comm_model import CommModel, count_params
-from repro.core.strategies import get_strategy
-from repro.data.partition import (
-    calibrate_alpha,
-    dirichlet_partition,
-    label_histograms,
-    pack_clients,
-)
-from repro.data.synthetic import Dataset
-from repro.federated.aggregation import fedavg, feddyn_server, feddyn_update_h, fednova
-from repro.federated.client import local_train
-from repro.models.mlp import accuracy, cross_entropy_loss, init_mlp, mlp_apply
-from repro.optim.fedmods import feddyn_update_state
+from repro.engine.base import rounds_to_accuracy
+from repro.engine.config import FLConfig
+from repro.engine.host import HostEngine
 
 __all__ = ["FLConfig", "FederatedSimulation", "rounds_to_accuracy"]
 
 
-@dataclass
-class FLConfig:
-    n_clients: int = 100
-    m: int = 10                    # participants per round
-    rounds: int = 150
-    local_epochs: int = 1
-    batch_size: int = 64
-    lr: float = 0.005              # paper: SGD lr=0.005
-    strategy: str = "fedlecc"
-    strategy_kwargs: dict = field(default_factory=dict)
-    aggregator: str = "fedavg"     # fedavg | fednova | feddyn
-    client_mode: str = "plain"     # plain | fedprox | feddyn
-    mu: float = 0.0                # fedprox mu / feddyn alpha
-    partition: str = "shards"      # shards | dirichlet (see partition.py:
-                                   # shards = the paper's balanced severe-
-                                   # skew regime; dirichlet at matched HD
-                                   # degenerates into stub clients)
-    alpha_dirichlet: float | None = None   # dirichlet: None → calibrate
-    target_hd: float = 0.9
-    eval_samples: int = 128        # per-client loss-poll subsample
-    max_steps_cap: int = 50
-    eval_every: int = 5
-    seed: int = 0
-    hidden: tuple[int, ...] = (200, 200)   # paper MLP
+class FederatedSimulation(HostEngine):
+    """Deprecated alias of :class:`repro.engine.host.HostEngine`."""
 
-
-class FederatedSimulation:
-    def __init__(
-        self,
-        cfg: FLConfig,
-        train: Dataset,
-        test: Dataset,
-        n_classes: int,
-    ):
-        self.cfg = cfg
-        self.n_classes = n_classes
-        rng = np.random.default_rng(cfg.seed)
-        self.rng = rng
-
-        # --- non-IID partition (calibrated to the paper's HD regime) ---
-        if cfg.partition == "shards":
-            from repro.data.partition import calibrate_shards, shard_partition
-
-            s = calibrate_shards(train.y, cfg.n_clients, cfg.target_hd,
-                                 n_classes, seed=cfg.seed)
-            self.alpha = float(s)  # records shards/client in the alpha slot
-            self.client_idx = shard_partition(
-                train.y, cfg.n_clients, s, seed=cfg.seed
-            )
-        else:
-            alpha = cfg.alpha_dirichlet
-            if alpha is None:
-                alpha = calibrate_alpha(
-                    train.y, cfg.n_clients, cfg.target_hd, n_classes, seed=cfg.seed
-                )
-            self.alpha = float(alpha)
-            self.client_idx = dirichlet_partition(
-                train.y, cfg.n_clients, self.alpha, seed=cfg.seed
-            )
-        self.hists = label_histograms(train.y, self.client_idx, n_classes)
-        xs, ys, mask = pack_clients(train.x, train.y, self.client_idx)
-        self.xs, self.ys, self.mask = jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(mask)
-        self.sizes = np.array([len(ix) for ix in self.client_idx])
-        self.test_x, self.test_y = jnp.asarray(test.x), jnp.asarray(test.y)
-
-        # --- model / optimizer-free local SGD ---
-        feat = train.x.shape[1]
-        self.params = init_mlp(
-            jax.random.PRNGKey(cfg.seed), (feat, *cfg.hidden, n_classes)
+    def __init__(self, cfg: FLConfig, train, test, n_classes: int):
+        warnings.warn(
+            "FederatedSimulation is deprecated; use repro.engine.make_engine"
+            " (engine.rounds() streams RoundResult records; engine.run()"
+            " returns the same history dict)",
+            DeprecationWarning,
+            stacklevel=2,
         )
-        self.n_params = count_params(self.params)
-
-        # --- local step budgets (heterogeneous → FedNova is meaningful) ---
-        taus = np.ceil(self.sizes * cfg.local_epochs / cfg.batch_size).astype(np.int32)
-        self.taus = np.maximum(taus, 1)
-        self.max_steps = int(min(cfg.max_steps_cap, self.taus.max()))
-
-        # --- selection strategy + comm ledger ---
-        self.strategy = get_strategy(cfg.strategy, m=cfg.m, **cfg.strategy_kwargs)
-        self.strategy.setup(self.hists, self.sizes, seed=cfg.seed)
-        self.comm = CommModel(self.n_params, cfg.n_clients, n_classes)
-        self.comm_mb = self.comm.one_time_mb(self.strategy.needs_histograms)
-
-        # --- FedDyn state ---
-        if cfg.aggregator == "feddyn" or cfg.client_mode == "feddyn":
-            zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), self.params)
-            self.h_server = zeros
-            self.h_clients = jax.tree.map(
-                lambda p: jnp.zeros((cfg.n_clients,) + p.shape, jnp.float32), self.params
-            )
-        else:
-            self.h_server = self.h_clients = None
-
-        self._build_jits()
-        self.history: dict[str, list] = {
-            "round": [], "test_acc": [], "test_loss": [], "comm_mb": [],
-            "mean_selected_loss": [], "selected": [],
-        }
-
-    # ------------------------------------------------------------------
-    def _build_jits(self):
-        cfg = self.cfg
-        apply_fn, loss_fn = mlp_apply, cross_entropy_loss
-
-        def _one_client(global_params, x, y, mask, tau, key, h):
-            return local_train(
-                apply_fn, loss_fn, global_params, x, y, mask, tau, key,
-                lr=cfg.lr, max_steps=self.max_steps, batch_size=cfg.batch_size,
-                mode=cfg.client_mode, mu=cfg.mu, h_state=h,
-            )
-
-        h_ax = 0 if self.h_clients is not None else None
-        self._round_train = jax.jit(
-            jax.vmap(_one_client, in_axes=(None, 0, 0, 0, 0, 0, h_ax))
-        )
-
-        def _poll_losses(params, xs, ys, mask, key):
-            """Subsampled local empirical loss of the *global* model on
-            every client (Algorithm 1 lines 2–4)."""
-
-            def one(x, y, m, k):
-                n = x.shape[0]
-                p = m / jnp.maximum(m.sum(), 1e-9)
-                idx = jax.random.choice(k, n, shape=(cfg.eval_samples,), p=p)
-                logits = apply_fn(params, jnp.take(x, idx, axis=0))
-                return loss_fn(logits, jnp.take(y, idx, axis=0), None)
-
-            keys = jax.random.split(key, xs.shape[0])
-            return jax.vmap(one)(xs, ys, mask, keys)
-
-        self._poll_losses = jax.jit(_poll_losses)
-
-        def _evaluate(params, x, y):
-            logits = apply_fn(params, x)
-            return loss_fn(logits, y, None), accuracy(logits, y)
-
-        self._evaluate = jax.jit(_evaluate)
-
-    # ------------------------------------------------------------------
-    def run(self, rounds: int | None = None, log_every: int = 0) -> dict[str, list]:
-        cfg = self.cfg
-        rounds = rounds or cfg.rounds
-        key = jax.random.PRNGKey(cfg.seed + 17)
-
-        for rnd in range(rounds):
-            key, k_poll, k_train = jax.random.split(key, 3)
-
-            # (1) loss poll — only if the strategy needs it (comm-accounted)
-            if self.strategy.needs_losses:
-                losses = np.asarray(
-                    self._poll_losses(self.params, self.xs, self.ys, self.mask, k_poll)
-                )
-            else:
-                losses = np.zeros(cfg.n_clients, np.float32)
-
-            # (2) select participants
-            sel = self.strategy.select(rnd, losses, self.rng)
-            sel_j = jnp.asarray(sel)
-
-            # (3) local training on the selected cohort
-            keys = jax.random.split(k_train, len(sel))
-            h_sel = (
-                jax.tree.map(lambda a: a[sel_j], self.h_clients)
-                if self.h_clients is not None
-                else None
-            )
-            stacked, local_losses = self._round_train(
-                self.params,
-                self.xs[sel_j], self.ys[sel_j], self.mask[sel_j],
-                jnp.asarray(self.taus[sel]), keys, h_sel,
-            )
-
-            # (4) aggregate
-            w = self.sizes[sel] / self.sizes[sel].sum()
-            w_j = jnp.asarray(w, jnp.float32)
-            if cfg.aggregator == "fedavg":
-                self.params = fedavg(stacked, w_j)
-            elif cfg.aggregator == "fednova":
-                self.params = fednova(
-                    stacked, self.params, w_j, jnp.asarray(self.taus[sel], jnp.float32)
-                )
-            elif cfg.aggregator == "feddyn":
-                new_theta, mean_params = feddyn_server(
-                    stacked, w_j, self.h_server, cfg.mu, len(sel) / cfg.n_clients
-                )
-                self.h_server = feddyn_update_h(
-                    self.h_server, mean_params, self.params, cfg.mu,
-                    len(sel) / cfg.n_clients,
-                )
-                self.params = new_theta
-            else:
-                raise ValueError(f"unknown aggregator {cfg.aggregator!r}")
-
-            # FedDyn per-client correction state
-            if cfg.client_mode == "feddyn":
-                h_new = jax.vmap(
-                    lambda h, p: feddyn_update_state(h, p, self.params, cfg.mu),
-                    in_axes=(0, 0),
-                )(h_sel, stacked)
-                self.h_clients = jax.tree.map(
-                    lambda all_, new: all_.at[sel_j].set(new), self.h_clients, h_new
-                )
-
-            # (5) ledger + periodic eval
-            self.comm_mb += self.comm.round_mb(len(sel), self.strategy.needs_losses)
-            if rnd % cfg.eval_every == 0 or rnd == rounds - 1:
-                tl, ta = self._evaluate(self.params, self.test_x, self.test_y)
-                self.history["round"].append(rnd)
-                self.history["test_acc"].append(float(ta))
-                self.history["test_loss"].append(float(tl))
-                self.history["comm_mb"].append(float(self.comm_mb))
-                self.history["mean_selected_loss"].append(float(jnp.mean(local_losses)))
-                self.history["selected"].append(sel.tolist())
-                if log_every and (rnd % log_every == 0):
-                    print(
-                        f"[{cfg.strategy}] round {rnd:4d} "
-                        f"acc={float(ta):.4f} loss={float(tl):.4f} "
-                        f"comm={self.comm_mb:.1f}MB"
-                    )
-        return self.history
-
-
-def rounds_to_accuracy(history: dict[str, list], target: float) -> int | None:
-    """First evaluated round reaching ``target`` test accuracy (Fig 3 / the
-    paper's −22%-rounds claim); None if never reached."""
-    for rnd, acc in zip(history["round"], history["test_acc"]):
-        if acc >= target:
-            return rnd
-    return None
+        super().__init__(cfg, train, test, n_classes)

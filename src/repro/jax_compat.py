@@ -1,0 +1,61 @@
+"""Thin compatibility layer over moving JAX APIs.
+
+The scale-out code targets the modern spelling (``jax.shard_map`` with
+``axis_names``/``check_vma``, ``jax.set_mesh``); older JAX (< 0.6, e.g.
+the 0.4.x in this container) only has ``jax.experimental.shard_map``
+(``auto``/``check_rep``) and uses the ``Mesh`` object itself as the
+context manager.  These wrappers prefer the modern API when present and
+translate otherwise, so every call site is version-agnostic:
+
+- ``axis_names`` (manual axes) ↔ ``auto`` (its complement over the mesh)
+- ``check_vma``               ↔ ``check_rep``
+- ``jax.set_mesh(mesh)``      ↔ ``with mesh:``
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["set_mesh", "shard_map", "cost_analysis"]
+
+
+def cost_analysis(compiled) -> dict:
+    """Dict-valued ``compiled.cost_analysis()`` on any JAX version
+    (older JAX returns a one-element list of dicts per module)."""
+    c = compiled.cost_analysis()
+    if isinstance(c, (list, tuple)):
+        c = c[0] if c else {}
+    return c or {}
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh  # jax<0.6: Mesh is itself a context manager
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma: bool = False):
+    """``jax.shard_map`` with the modern signature on any supported JAX.
+
+    ``axis_names`` is the set of *manual* mesh axes (None = all manual);
+    on older JAX this becomes ``auto = mesh axes − axis_names``.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        return jax.shard_map(f, **kw)
+
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    # Old JAX/XLA crashes on partial-auto shard_map (IsManualSubgroup
+    # check), so run fully manual instead: axes absent from the specs are
+    # replicated rather than GSPMD-parallelized.  The body sees identical
+    # shapes and computes identical values — only intra-shard auto
+    # parallelism over the would-be-auto axes is lost (a documented
+    # perf-only degradation on jax<0.6).
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

@@ -38,6 +38,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import INPUT_SHAPES, get_config, list_configs
 from repro.configs.inputs import decode_specs, input_specs, long_context_variant
+from repro.jax_compat import cost_analysis, set_mesh
 from repro.launch.mesh import make_production_mesh
 from repro.models.transformer import (
     cache_specs,
@@ -215,14 +216,14 @@ def _lower_cost(cfg, mesh, shape, policy_variant: str = "baseline"):
     fn, arg_specs, (in_shard, out_shard), donate = build_step(
         cfg, mesh, shape, policy_variant=policy_variant
     )
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         compiled = (
             jax.jit(fn, in_shardings=in_shard, out_shardings=out_shard,
                     donate_argnums=donate)
             .lower(*arg_specs)
             .compile()
         )
-    cost = compiled.cost_analysis()
+    cost = cost_analysis(compiled)
     try:
         hlo = compiled.as_text()
     except Exception:
@@ -283,7 +284,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, record_hlo: bool = Fals
     fn, arg_specs, (in_shard, out_shard), donate = build_step(
         cfg, mesh, shape, policy_variant=policy_variant
     )
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         jitted = jax.jit(
             fn, in_shardings=in_shard, out_shardings=out_shard, donate_argnums=donate
         )
@@ -292,7 +293,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, record_hlo: bool = Fals
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis(compiled)
     try:
         hlo = compiled.as_text()
     except Exception:
@@ -338,8 +339,9 @@ def run_federated(arch: str, local_steps: int = 4, batch_per_client: int = 128,
     """Lower + compile the scale-out FedLECC round (DESIGN.md §3b): clients
     = pods, local SGD steps inside shard_map(manual={'pod'}), aggregation
     = selection-weighted psum over 'pod'.  The paper-representative
-    dry-run artifact."""
-    from repro.federated.scaleout import make_federated_round
+    dry-run artifact.  Built via the engine API (`repro.engine.compiled`),
+    the same entry every other consumer of the compiled round uses."""
+    from repro.engine.compiled import make_scaleout_round
 
     cfg = get_config(arch)
     mesh = make_production_mesh(multi_pod=True)
@@ -373,10 +375,10 @@ def run_federated(arch: str, local_steps: int = 4, batch_per_client: int = 128,
     w = jax.ShapeDtypeStruct((n_pods,), jnp.float32)
     wshard = NamedSharding(mesh, P("pod"))
 
-    round_fn = make_federated_round(cfg, mesh, lr=1e-3, local_steps=local_steps,
-                                    compress_bits=compress_bits)
+    round_fn = make_scaleout_round(cfg, mesh, lr=1e-3, local_steps=local_steps,
+                                   compress_bits=compress_bits)
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         jitted = jax.jit(
             round_fn,
             in_shardings=(pshard, bshard, wshard),
@@ -386,7 +388,7 @@ def run_federated(arch: str, local_steps: int = 4, batch_per_client: int = 128,
         lowered = jitted.lower(stacked_shapes, batch, w)
         compiled = lowered.compile()
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis(compiled)
     hlo = compiled.as_text()
     rec = {
         "arch": arch,

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.jax_compat import shard_map
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
@@ -286,7 +287,7 @@ def _run_moe(p_mlp, cfg, x, mesh):
                 out2d = out2d + moe_mod._shared_expert(pl, cfg, x2d)
             return out2d.reshape(b, s, d), aux
 
-        return jax.shard_map(
+        return shard_map(
             ep_block, mesh=mesh, in_specs=(pspec, xspec), out_specs=(xspec, P()),
             check_vma=False,
         )(p_mlp, x)
@@ -322,7 +323,7 @@ def _run_moe(p_mlp, cfg, x, mesh):
                 out2d = out2d + moe_mod._shared_expert(pl, cfg, x2d)
             return out2d.reshape(b, s, d), aux
 
-        return jax.shard_map(
+        return shard_map(
             tp_block, mesh=mesh, in_specs=(pspec, xspec), out_specs=(xspec, P()),
             check_vma=False,
         )(p_mlp, x)
@@ -355,7 +356,7 @@ def _run_moe(p_mlp, cfg, x, mesh):
     # +37% — a net wall-time regression (≈87 ms redundant compute vs
     # ≈118 ms TP+all-reduce per layer on v5e napkin numbers).  Redundant
     # compute beats communication for this thin (d_ff=2048) layer.
-    return jax.shard_map(
+    return shard_map(
         block, mesh=mesh, in_specs=(pspec, xspec), out_specs=(xspec, P()),
         check_vma=False,
     )(p_mlp, x)

@@ -2,7 +2,11 @@
 
 import jax
 import jax.numpy as jnp
+import pytest
 import numpy as np
+
+pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
+
 from hypothesis import given, settings, strategies as st
 
 from repro.core.comm_model import CommModel

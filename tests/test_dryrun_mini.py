@@ -16,6 +16,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
 from repro.configs import get_config
 from repro.configs.base import InputShape
+from repro.jax_compat import cost_analysis, set_mesh
 from repro.launch.dryrun import build_step, collective_bytes
 
 mesh = jax.make_mesh((2, 4), ("data", "model"))
@@ -31,10 +32,10 @@ for arch, shape in cases:
         from dataclasses import replace
         cfg = replace(cfg, moe=replace(cfg.moe, impl="capacity"))
     fn, arg_specs, (ins, outs), donate = build_step(cfg, mesh, shape)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         compiled = jax.jit(fn, in_shardings=ins, out_shardings=outs,
                            donate_argnums=donate).lower(*arg_specs).compile()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis(compiled)
     mem = compiled.memory_analysis()
     coll = collective_bytes(compiled.as_text())
     assert cost.get("flops", 0) > 0, (arch, cost)

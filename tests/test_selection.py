@@ -2,7 +2,11 @@
 equivalence + aggregation-weight properties."""
 
 import jax.numpy as jnp
+import pytest
 import numpy as np
+
+pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
+
 from hypothesis import given, settings, strategies as st
 
 from repro.core.selection import fedlecc_select, fedlecc_select_jax, selection_weights

@@ -5,10 +5,11 @@ import pytest
 
 from conftest import planted_histograms
 from repro.core.comm_model import CommModel
-from repro.core.strategies import STRATEGIES, get_strategy
+from repro.core.strategies import get_strategy
+from repro.engine.registry import STRATEGY_REGISTRY, list_strategies
 
 
-@pytest.mark.parametrize("name", sorted(STRATEGIES))
+@pytest.mark.parametrize("name", list_strategies())
 def test_strategy_valid_selection(name, rng):
     hists, _ = planted_histograms(rng, K=50)
     s = get_strategy(name, m=8)
@@ -42,6 +43,34 @@ def test_poc_prefers_high_loss(rng):
 def test_unknown_strategy_raises():
     with pytest.raises(KeyError):
         get_strategy("nope", m=3)
+
+
+def test_legacy_strategies_alias_is_registry():
+    # deprecated dict-style consumers keep working against the registry
+    from repro.core.strategies import STRATEGIES
+
+    assert STRATEGIES is STRATEGY_REGISTRY
+    assert "fedlecc" in STRATEGIES
+    assert sorted(STRATEGIES) == list_strategies()
+    assert STRATEGIES["fedlecc"] is STRATEGY_REGISTRY["fedlecc"]
+
+
+def test_haccs_largest_cluster_guaranteed_slot(rng):
+    """Regression: proportional-slot rounding must never starve the
+    largest cluster (docstring promises >=1 slot for it).  With m=1 and
+    the dominant cluster under half the population, np.round gives it 0
+    slots — the fix pins it to 1, so the pick comes from that cluster."""
+    s = get_strategy("haccs", m=1)
+    hists, _ = planted_histograms(rng, K=50)
+    s.setup(hists, np.full(50, 100), seed=0)
+    # dominant-cluster histogram: 10/50 = 0.2 -> round(m*0.2) == 0 slots
+    s.labels = np.array([0] * 10 + [1] * 8 + [2] * 8 + [3] * 8 + [4] * 8 + [5] * 8)
+    s.n_clusters = 6
+    losses = rng.uniform(0.1, 1.0, 50)
+    for seed in range(5):
+        sel = s.select(0, losses, np.random.default_rng(seed))
+        assert len(sel) == 1
+        assert s.labels[sel[0]] == 0  # picked from the largest cluster
 
 
 def test_comm_model_ledger():
