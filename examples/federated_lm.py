@@ -4,8 +4,15 @@ The scale-out story of DESIGN.md §3 in miniature: K clients each hold a
 token stream with *topic skew* (distinct Markov transition tables play
 the role of label skew); per round FedLECC clusters clients by their
 token-histogram Hellinger distances and selects the highest-loss
-clusters; selected clients run local steps on a reduced xlstm-125m; the
-server aggregates with the Pallas-validated masked weighted reduce.
+clusters; selected clients run local steps on a reduced xlstm-125m.
+
+The round loop is the engine protocol in consumer form: selection goes
+through the strategy's jit-compatible ``select_mask_jax`` (the same hook
+``CompiledEngine``/``ScaleoutEngine`` call via ``MaskSelectionMixin``),
+the participation mask becomes aggregation weights via
+``selection_weights`` (exactly the vector the pod-scale mesh round feeds
+its psum), and each round is reported as a frozen ``RoundResult`` — so
+this example consumes the same records ``engine.rounds()`` streams.
 
     PYTHONPATH=src python examples/federated_lm.py [--rounds 8]
 """
@@ -17,8 +24,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.comm_model import CommModel, count_params
+from repro.core.selection import selection_weights
 from repro.core.strategies import get_strategy
 from repro.data.synthetic import make_token_stream
+from repro.engine import RoundResult
 from repro.federated.aggregation import fedavg
 from repro.models.transformer import init_transformer, loss_fn
 
@@ -37,10 +47,14 @@ def main(rounds: int = 8, K: int = 12, m: int = 4, local_steps: int = 4):
     hists = np.stack([
         np.bincount(d.x.ravel() % 64, minlength=64) for d in data
     ]).astype(np.float64)
+    sizes = jnp.full((K,), 64.0 * 128.0)
 
     strat = get_strategy("fedlecc", m=m, J=3)
     strat.setup(hists, np.full(K, 64 * 128), seed=0)
     print(f"clusters found: {strat.n_clusters} (3 topics planted)")
+
+    comm = CommModel(count_params(params), K, n_classes=64)
+    comm_mb = comm.one_time_mb(strat.needs_histograms)
 
     @jax.jit
     def local_train(p, x, y):
@@ -63,7 +77,11 @@ def main(rounds: int = 8, K: int = 12, m: int = 4, local_steps: int = 4):
             float(eval_loss(params, jnp.asarray(d.x[:8]), jnp.asarray(d.y[:8])))
             for d in data
         ])
-        sel = strat.select(rnd, losses, rng)
+        # the mask-gated selection path shared with the compiled/scaleout
+        # backends: strategy mask -> aggregation weight vector
+        mask = np.asarray(strat.select_mask_jax(jnp.asarray(losses), rng))
+        sel = np.where(mask)[0]
+        w_full = selection_weights(jnp.asarray(mask), sizes)   # (K,), 0 off-mask
         locals_, locloss = [], []
         for i in sel:
             d = data[int(i)]
@@ -71,13 +89,22 @@ def main(rounds: int = 8, K: int = 12, m: int = 4, local_steps: int = 4):
             p_i, l_i = local_train(params, jnp.asarray(d.x[b:b+8]), jnp.asarray(d.y[b:b+8]))
             locals_.append(p_i)
             locloss.append(float(l_i))
+        # the mesh round computes psum_i w_i θ_i over all K pods; here only
+        # the selected (nonzero-weight) replicas exist, same weighted sum
         stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *locals_)
-        w = jnp.full((len(sel),), 1.0 / len(sel))
-        params = fedavg(stacked, w)
-        print(f"round {rnd}: selected {sel.tolist()} "
-              f"(topics {[int(topics[i]) for i in sel]}) "
-              f"mean_local_loss={np.mean(locloss):.3f} "
-              f"global_loss={losses.mean():.3f}")
+        params = fedavg(stacked, w_full[jnp.asarray(sel)])
+        comm_mb += comm.round_mb(len(sel), strat.needs_losses)
+        result = RoundResult(
+            round=rnd,
+            selected=tuple(int(i) for i in sel),
+            mean_selected_loss=float(np.mean(locloss)),
+            comm_mb=float(comm_mb),
+            test_loss=float(losses.mean()),
+        )
+        print(f"round {result.round}: selected {list(result.selected)} "
+              f"(topics {[int(topics[i]) for i in result.selected]}) "
+              f"mean_local_loss={result.mean_selected_loss:.3f} "
+              f"global_loss={result.test_loss:.3f}")
     print("done — global loss should be trending down across rounds")
 
 

@@ -17,9 +17,15 @@ Strategies register themselves into the engine registry at definition
 time (``@register_strategy``); ``repro.engine`` builds them by name, so
 new strategies plug in without touching any round loop.  Strategies with
 a jit-compatible selection additionally expose
-``select_mask_jax(losses) -> (K,) bool mask`` and set
-``supports_compiled_selection`` (the FedLECC family) — that is what
-``CompiledEngine`` calls.
+``select_mask_jax(losses, rng=None) -> (K,) bool mask`` and set
+``supports_compiled_selection`` — that is what the mask-gated backends
+(``CompiledEngine`` / ``ScaleoutEngine``) call.  The contract: any
+per-round randomness is drawn host-side from ``rng`` (the same numpy
+stream the host backend would consume, so backends stay in lockstep for
+one seed), and the ranking itself is expressed in jax ops (top-k /
+segment reductions) so the mask can live inside a compiled round.
+``select`` and ``select_mask_jax`` must agree exactly for the same
+inputs and rng state — the property suite asserts this.
 
 All are host-side numpy: K scalars/vectors per round (DESIGN.md §8.5).
 """
@@ -109,10 +115,11 @@ class FedLECC(SelectionStrategy):
             self.labels, losses, m=self.m, J=self._round_J(losses)
         )
 
-    def select_mask_jax(self, losses):
+    def select_mask_jax(self, losses, rng=None):
         """(K,) boolean participation mask, computable inside jit — the
-        CompiledEngine's selection hook (verified identical to ``select``
-        by property test)."""
+        selection hook of the mask-gated backends (verified identical to
+        ``select`` by property test).  ``rng`` is accepted for protocol
+        uniformity; FedLECC selection is deterministic given losses."""
         import jax.numpy as jnp
 
         J = max(1, min(self._round_J(np.asarray(losses)), self.n_clusters))
@@ -125,30 +132,68 @@ class FedLECC(SelectionStrategy):
 @register_strategy("poc")
 @dataclass
 class PowerOfChoice(SelectionStrategy):
-    """POC (Cho et al., 2022): sample d candidates ~ p_i, keep top-m by loss."""
+    """POC (Cho et al., 2022): sample d candidates ~ p_i, keep top-m by loss.
+
+    The candidate draw is host-side rng (both backends consume the same
+    stream); the top-m ranking over the gated loss vector is jax
+    ``top_k`` in ``select_mask_jax``, so the mask jits cleanly.  Ties are
+    broken by lowest client index in both implementations.
+    """
 
     d: int = 0  # candidate-set size; 0 -> max(2m, K//5)
     name: str = "poc"
     needs_losses: bool = True
+    supports_compiled_selection = True
 
-    def select(self, rnd, losses, rng) -> np.ndarray:
+    def _candidate_mask(self, rng: np.random.Generator) -> np.ndarray:
+        """(K,) bool — the d-candidate set drawn ~ p_i without replacement."""
         d = self.d or max(2 * self.m, self.K // 5)
         d = min(max(d, self.m), self.K)
         p = self.client_sizes / self.client_sizes.sum()
         cand = rng.choice(self.K, size=d, replace=False, p=p)
-        top = cand[np.argsort(-losses[cand], kind="stable")][: self.m]
-        return np.sort(top)
+        mask = np.zeros(self.K, bool)
+        mask[cand] = True
+        return mask
+
+    def select(self, rnd, losses, rng) -> np.ndarray:
+        cand = self._candidate_mask(rng)
+        # float32 to match select_mask_jax exactly (same ordering + ties)
+        gated = np.where(cand, np.asarray(losses, np.float32), -np.inf)
+        return np.sort(np.argsort(-gated, kind="stable")[: min(self.m, self.K)])
+
+    def select_mask_jax(self, losses, rng=None):
+        import jax
+        import jax.numpy as jnp
+
+        if rng is None:
+            raise ValueError("poc selection draws candidates host-side; pass rng")
+        cand = jnp.asarray(self._candidate_mask(rng))
+        gated = jnp.where(cand, jnp.asarray(losses, jnp.float32), -jnp.inf)
+        _, top = jax.lax.top_k(gated, min(self.m, self.K))  # ties -> lowest index
+        return jnp.zeros((self.K,), jnp.bool_).at[top].set(True)
 
 
 @register_strategy("haccs")
 @dataclass
 class HACCS(SelectionStrategy):
     """HACCS (Wolfrath et al., 2022): histogram clusters; latency-efficient
-    pick per cluster.  Device latency is a simulated static attribute."""
+    pick per cluster.  Device latency is a simulated static attribute.
+
+    Selection is cluster-quota: proportional slots per cluster (>=1 for
+    the largest), fastest devices first within each cluster, then trim /
+    fill to exactly m with the globally fastest unchosen.  Both
+    implementations rank clients by one lexicographic key
+    ``(phase, cluster-rank, within-cluster latency rank | global latency
+    rank)`` — phase 0 = inside the cluster quota, phase 1 = fill — so
+    the numpy ``select`` and the jax ``select_mask_jax`` agree exactly.
+    Selection ignores losses, so the mask is constant within a setup and
+    trivially jit-compatible.
+    """
 
     min_samples: int = 3
     name: str = "haccs"
     needs_histograms: bool = True
+    supports_compiled_selection = True
     labels: np.ndarray | None = field(default=None, init=False)
     latency: np.ndarray | None = field(default=None, init=False)
     n_clusters: int = field(default=0, init=False)
@@ -160,30 +205,44 @@ class HACCS(SelectionStrategy):
         # Simulated heterogeneous device latency (lognormal, fixed per client).
         self.latency = np.random.default_rng(seed).lognormal(0.0, 0.5, size=self.K)
 
-    def select(self, rnd, losses, rng) -> np.ndarray:
-        # Proportional slots per cluster (>=1 for the largest), fastest
-        # devices first within each cluster.
+    def _selection_keys(self) -> np.ndarray:
+        """(K,) int sort key: ascending order visits clients exactly as the
+        quota algorithm does.  Computed per call (not cached at setup) so
+        tests may re-plant ``labels``/``n_clusters`` after setup."""
         counts = np.bincount(self.labels, minlength=self.n_clusters)
         slots = np.maximum(np.round(self.m * counts / counts.sum()).astype(int), 0)
         largest = int(np.argmax(counts))
         if slots[largest] == 0:  # rounding can starve even the largest cluster
             slots[largest] = 1
-        selected: list[int] = []
-        order = np.argsort(-counts)
-        for c in order:
+        # cluster rank: 0 = most-populated (stable on count ties)
+        crank = np.empty(self.n_clusters, np.int64)
+        crank[np.argsort(-counts, kind="stable")] = np.arange(self.n_clusters)
+        # within-cluster latency rank q (0 = fastest in own cluster) and
+        # global latency rank g (0 = fastest overall)
+        q = np.empty(self.K, np.int64)
+        for c in range(self.n_clusters):
             members = np.where(self.labels == c)[0]
-            fast = members[np.argsort(self.latency[members])]
-            selected.extend(int(i) for i in fast[: slots[c]])
-        # Trim / fill to exactly m with globally fastest unchosen.
-        selected = selected[: self.m]
-        if len(selected) < self.m:
-            chosen = set(selected)
-            for i in np.argsort(self.latency):
-                if int(i) not in chosen:
-                    selected.append(int(i))
-                if len(selected) >= self.m:
-                    break
-        return np.sort(np.array(selected, dtype=np.int64))
+            q[members[np.argsort(self.latency[members], kind="stable")]] = (
+                np.arange(members.size)
+            )
+        g = np.empty(self.K, np.int64)
+        g[np.argsort(self.latency, kind="stable")] = np.arange(self.K)
+        in_quota = q < slots[self.labels]
+        key0 = crank[self.labels] * self.K + q       # < K*K by construction
+        return np.where(in_quota, key0, self.K * self.K + g)
+
+    def select(self, rnd, losses, rng) -> np.ndarray:
+        keys = self._selection_keys()
+        return np.sort(np.argsort(keys, kind="stable")[: min(self.m, self.K)])
+
+    def select_mask_jax(self, losses, rng=None):
+        import jax.numpy as jnp
+
+        del losses, rng  # latency-driven: deterministic given setup
+        take = jnp.argsort(jnp.asarray(self._selection_keys()), stable=True)[
+            : min(self.m, self.K)
+        ]
+        return jnp.zeros((self.K,), jnp.bool_).at[take].set(True)
 
 
 @register_strategy("fedcls")
@@ -268,9 +327,22 @@ class LossOnly(SelectionStrategy):
 
     name: str = "lossonly"
     needs_losses: bool = True
+    supports_compiled_selection = True
 
     def select(self, rnd, losses, rng) -> np.ndarray:
-        return np.sort(np.argsort(-losses, kind="stable")[: self.m])
+        # float32 to match select_mask_jax exactly (same ordering + ties)
+        losses = np.asarray(losses, np.float32)
+        return np.sort(np.argsort(-losses, kind="stable")[: min(self.m, self.K)])
+
+    def select_mask_jax(self, losses, rng=None):
+        import jax
+        import jax.numpy as jnp
+
+        del rng  # deterministic given losses
+        _, top = jax.lax.top_k(
+            jnp.asarray(losses, jnp.float32), min(self.m, self.K)
+        )  # ties -> lowest index, matching the stable numpy argsort
+        return jnp.zeros((self.K,), jnp.bool_).at[top].set(True)
 
 
 @register_strategy("clusterrandom")
@@ -278,30 +350,59 @@ class LossOnly(SelectionStrategy):
 class ClusterRandom(FedLECC):
     """Ablation (RQ2): FedLECC without loss guidance — same OPTICS
     clusters, but clusters and clients drawn uniformly.  Isolates the
-    diversity term."""
+    diversity term.
+
+    Implemented as Algorithm 1 over *random scores*: per round the host
+    draws a uniform cluster permutation and a uniform client permutation
+    and composes them into one integer score vector whose cluster term
+    dominates; ``fedlecc_select`` / ``fedlecc_select_jax`` on that vector
+    then realize "top-J random clusters, z random members each, random-
+    cluster-order backfill".  This keeps the selection uniform over
+    clusters and members while reusing the already-property-tested
+    numpy↔jax selection core, so the mask jits cleanly and both backends
+    agree exactly.  (The rng draw sequence differs from the pre-scaleout
+    implementation, so selections for a given seed changed once at that
+    migration.)
+    """
 
     name: str = "clusterrandom"
     needs_losses: bool = False
-    supports_compiled_selection = False  # selection is rng-driven, host-only
+    supports_compiled_selection = True
+
+    def _random_scores(self, rng: np.random.Generator) -> np.ndarray:
+        """(K,) scores: cluster draw ≫ member draw, all values distinct.
+        Integer-valued and bounded by ~n_clusters·K, so exact in the
+        float32 arithmetic of ``fedlecc_select_jax`` for any realistic K.
+        """
+        cluster_rank = rng.permutation(self.n_clusters)  # 0 = drawn first
+        client_rank = rng.permutation(self.K)
+        return (
+            (self.n_clusters - cluster_rank[self.labels]) * (self.K + 1)
+            + (self.K - client_rank)
+        ).astype(np.float64)
 
     def select(self, rnd, losses, rng) -> np.ndarray:
         del losses
-        clusters = np.unique(self.labels)
-        J = min(self.J, clusters.size)
-        z = -(-self.m // J)
-        chosen = rng.choice(clusters, size=J, replace=False)
-        sel: list[int] = []
-        for c in chosen:
-            members = np.where(self.labels == c)[0]
-            take = rng.choice(members, size=min(z, len(members)), replace=False)
-            sel.extend(int(i) for i in take)
-        sel = sel[: self.m]
-        pool = [i for i in range(self.K) if i not in set(sel)]
-        while len(sel) < self.m:
-            pick = int(rng.choice(pool))
-            sel.append(pick)
-            pool.remove(pick)
-        return np.sort(np.array(sel, dtype=np.int64))
+        return fedlecc_select(
+            self.labels, self._random_scores(rng), m=self.m,
+            J=min(self.J, self.n_clusters),
+        )
+
+    def select_mask_jax(self, losses, rng=None):
+        import jax.numpy as jnp
+
+        del losses
+        if rng is None:
+            raise ValueError(
+                "clusterrandom draws its random scores host-side; pass rng"
+            )
+        return fedlecc_select_jax(
+            jnp.asarray(self.labels),
+            jnp.asarray(self._random_scores(rng), jnp.float32),
+            m=min(self.m, self.K),
+            J=max(1, min(self.J, self.n_clusters)),
+            n_clusters=self.n_clusters,
+        )
 
 
 @register_strategy("fedlecc_adaptive")

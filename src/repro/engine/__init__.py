@@ -1,6 +1,6 @@
 """repro.engine — the pluggable federated engine API.
 
-One API, three orthogonal axes, two backends:
+One API, three orthogonal axes, three backends:
 
 - ``registry``     — ``@register_strategy`` / ``@register_aggregator`` /
                      ``@register_client_mode`` decorators + lookups
@@ -8,29 +8,53 @@ One API, three orthogonal axes, two backends:
                      and ``to_dict``/``from_dict`` round-tripping
 - ``base``         — ``Engine`` round protocol (poll_losses → select →
                      local_train → aggregate → evaluate), streaming
-                     ``rounds()`` iterator of frozen ``RoundResult``s
+                     ``rounds()`` iterator of frozen ``RoundResult``s,
+                     plus ``MaskSelectionMixin`` (the shared
+                     ``select_mask_jax`` selection path)
 - ``host``         — ``HostEngine``: numpy selection + vmapped cohort
 - ``compiled``     — ``CompiledEngine``: jitted selection/round with the
                      participation mask gating aggregation (scale-out
-                     semantics), plus ``make_scaleout_round`` for the
-                     production mesh
+                     semantics on one device)
+- ``scaleout``     — ``ScaleoutEngine``: the mesh round (clients blocked
+                     over the ``pod`` axis, shard_map + selection-
+                     weighted psum), plus ``make_scaleout_round`` for
+                     the production transformer mesh
 - ``aggregators``  — FedAvg / FedNova / FedDyn as stateful objects
 - ``client_modes`` — plain / FedProx / FedDyn gradient modifiers
 - ``presets``      — named method cells (Table II/III) via
                      ``get_preset(name).make_config(...)``
 
+Strategy × backend support matrix (mask-gated backends need a
+jit-compatible ``select_mask_jax``; FLConfig validation enforces this
+up front):
+
+    strategy          host   compiled   scaleout
+    ----------------  ----   --------   --------
+    fedlecc            ✓        ✓          ✓
+    fedlecc_adaptive   ✓        ✓          ✓
+    poc                ✓        ✓          ✓
+    lossonly           ✓        ✓          ✓
+    clusterrandom      ✓        ✓          ✓
+    haccs              ✓        ✓          ✓
+    random             ✓        —          —
+    fedcls             ✓        —          —
+    fedcor             ✓        —          —
+
+(``compiled``/``scaleout`` additionally require ``client_mode="plain"``;
+``scaleout`` aggregates inside the mesh round, so ``aggregator`` must be
+``"fedavg"``.)
+
 Typical use::
 
     from repro.engine import FLConfig, make_engine
 
-    cfg = FLConfig(strategy="fedlecc", backend="host", rounds=30)
+    cfg = FLConfig(strategy="fedlecc", backend="scaleout", rounds=30)
     engine = make_engine(cfg, train, test, n_classes=10)
     for result in engine.rounds():
         ...  # result: RoundResult(round, selected, losses, metrics, MB)
 
-``HostEngine``/``CompiledEngine`` are imported lazily (module
-``__getattr__``) so that registering a component never drags in the
-training stack.
+The engines are imported lazily (module ``__getattr__``) so that
+registering a component never drags in the training stack.
 """
 
 from repro.engine.config import BACKENDS, FLConfig
@@ -43,6 +67,7 @@ from repro.engine.registry import (
     list_aggregators,
     list_client_modes,
     list_strategies,
+    mask_selection_strategies,
     register_aggregator,
     register_client_mode,
     register_strategy,
@@ -63,10 +88,13 @@ __all__ = [
     "list_aggregators",
     "list_client_modes",
     "Engine",
+    "MaskSelectionMixin",
     "RoundResult",
+    "mask_selection_strategies",
     "rounds_to_accuracy",
     "HostEngine",
     "CompiledEngine",
+    "ScaleoutEngine",
     "make_scaleout_round",
     "ExperimentPreset",
     "get_preset",
@@ -77,11 +105,13 @@ __all__ = [
 
 _LAZY = {
     "Engine": ("repro.engine.base", "Engine"),
+    "MaskSelectionMixin": ("repro.engine.base", "MaskSelectionMixin"),
     "RoundResult": ("repro.engine.base", "RoundResult"),
     "rounds_to_accuracy": ("repro.engine.base", "rounds_to_accuracy"),
     "HostEngine": ("repro.engine.host", "HostEngine"),
     "CompiledEngine": ("repro.engine.compiled", "CompiledEngine"),
-    "make_scaleout_round": ("repro.engine.compiled", "make_scaleout_round"),
+    "ScaleoutEngine": ("repro.engine.scaleout", "ScaleoutEngine"),
+    "make_scaleout_round": ("repro.engine.scaleout", "make_scaleout_round"),
     "ExperimentPreset": ("repro.engine.presets", "ExperimentPreset"),
     "get_preset": ("repro.engine.presets", "get_preset"),
     "list_presets": ("repro.engine.presets", "list_presets"),
@@ -101,12 +131,18 @@ def __getattr__(name):
     return value
 
 
-def make_engine(cfg: FLConfig, train, test, n_classes: int):
-    """Build the engine selected by ``cfg.backend`` ("host" | "compiled")."""
+def make_engine(cfg: FLConfig, train, test, n_classes: int, **kwargs):
+    """Build the engine selected by ``cfg.backend``
+    ("host" | "compiled" | "scaleout").  Extra kwargs go to the backend
+    constructor (e.g. ``mesh=`` for the scaleout backend)."""
     if cfg.backend == "compiled":
         from repro.engine.compiled import CompiledEngine
 
-        return CompiledEngine(cfg, train, test, n_classes)
+        return CompiledEngine(cfg, train, test, n_classes, **kwargs)
+    if cfg.backend == "scaleout":
+        from repro.engine.scaleout import ScaleoutEngine
+
+        return ScaleoutEngine(cfg, train, test, n_classes, **kwargs)
     from repro.engine.host import HostEngine
 
-    return HostEngine(cfg, train, test, n_classes)
+    return HostEngine(cfg, train, test, n_classes, **kwargs)

@@ -14,6 +14,13 @@ Backends implement the hooks:
   and mask-gated aggregation as jitted computations (the scale-out
   semantics where every client computes and the participation mask
   gates aggregation).
+- ``ScaleoutEngine`` (``repro.engine.scaleout``) — the same mask-gated
+  semantics at mesh scale: clients sharded over the ``pod`` axis via
+  shard_map, aggregation as the selection-weighted psum.
+
+``CompiledEngine`` and ``ScaleoutEngine`` share one selection path,
+``MaskSelectionMixin`` — strategy-produced jit-compatible masks
+(``select_mask_jax``) instead of host-side index lists.
 
 ``rounds()`` is a streaming iterator yielding one frozen ``RoundResult``
 per round (plus an optional callback), so consumers — examples,
@@ -34,10 +41,21 @@ import numpy as np
 from repro.core.comm_model import CommModel, count_params
 from repro.engine.aggregators import get_aggregator
 from repro.engine.client_modes import get_client_mode
-from repro.engine.config import FLConfig
-from repro.engine.registry import STRATEGY_REGISTRY
+from repro.engine.config import (
+    FLConfig,
+    mask_backend_aggregator_error,
+    mask_backend_client_mode_error,
+    mask_backend_strategy_error,
+)
+from repro.engine.registry import STRATEGY_REGISTRY, mask_selection_strategies
 
-__all__ = ["Engine", "RoundResult", "rounds_to_accuracy"]
+__all__ = [
+    "Engine",
+    "MaskSelectionMixin",
+    "RoundResult",
+    "mask_selection_strategies",
+    "rounds_to_accuracy",
+]
 
 
 @dataclass(frozen=True)
@@ -272,6 +290,39 @@ class Engine:
                     f"comm={r.comm_mb:.1f}MB"
                 )
         return self.history
+
+
+class MaskSelectionMixin:
+    """Selection hook shared by the mask-gated backends.
+
+    ``select`` asks the strategy for a jit-compatible participation mask
+    (``select_mask_jax``); any per-round randomness is drawn host-side
+    from ``self.rng`` — the same numpy stream ``HostEngine`` would
+    consume — so a host run and a mask-gated run of the same config stay
+    in lockstep round by round.  ``_check_mask_backend`` is the
+    engine-level guard behind the up-front ``FLConfig`` validation
+    (defense in depth for mutated / hand-built configs).
+    """
+
+    # backends that aggregate inside the compiled round (the psum) can
+    # only realize fedavg semantics; ScaleoutEngine flips this on
+    requires_fedavg_aggregator = False
+
+    def _check_mask_backend(self) -> None:
+        if not getattr(self.strategy, "supports_compiled_selection", False):
+            raise ValueError(
+                mask_backend_strategy_error(self.cfg.strategy, self.backend)
+            )
+        if self.cfg.client_mode != "plain":
+            raise ValueError(
+                mask_backend_client_mode_error(self.cfg.client_mode, self.backend)
+            )
+        if self.requires_fedavg_aggregator and self.cfg.aggregator != "fedavg":
+            raise ValueError(mask_backend_aggregator_error(self.cfg.aggregator))
+
+    def select(self, rnd: int, losses: np.ndarray) -> np.ndarray:
+        mask = np.asarray(self.strategy.select_mask_jax(losses, self.rng))
+        return np.where(mask)[0]
 
 
 def rounds_to_accuracy(history: dict[str, list], target: float) -> int | None:

@@ -15,13 +15,15 @@ identical to the ``HostEngine`` round for the same config — the
 cross-backend equivalence test asserts this.
 
 Requirements: the strategy must provide a jit-compatible selection
-(``supports_compiled_selection`` — the FedLECC family), and
-``client_mode`` must be ``"plain"`` (per-client FedDyn state for
-unselected clients has no scale-out analog yet).
+(``supports_compiled_selection``), and ``client_mode`` must be
+``"plain"`` (per-client FedDyn state for unselected clients has no
+scale-out analog yet) — both rejected up front by ``FLConfig``
+validation and re-checked here.  Selection is the shared
+``MaskSelectionMixin`` path, identical to ``ScaleoutEngine``'s.
 
-``make_scaleout_round`` re-exports the production mesh round
-(clients ↔ pods, shard_map + psum) as the engine-API entry point used by
-``repro.launch.dryrun --federated``.
+``make_scaleout_round`` (the production transformer mesh round) moved to
+``repro.engine.scaleout``; the re-export here is kept for backward
+compatibility.
 """
 
 from __future__ import annotations
@@ -31,27 +33,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.selection import selection_weights
-from repro.engine.base import Engine
+from repro.engine.base import Engine, MaskSelectionMixin
 from repro.federated.client import local_train
 
 __all__ = ["CompiledEngine", "make_scaleout_round"]
 
 
-class CompiledEngine(Engine):
+class CompiledEngine(MaskSelectionMixin, Engine):
     backend = "compiled"
 
     def __init__(self, cfg, train, test, n_classes: int):
         super().__init__(cfg, train, test, n_classes)
-        if not getattr(self.strategy, "supports_compiled_selection", False):
-            raise ValueError(
-                f"strategy {cfg.strategy!r} has no jit-compatible selection; "
-                f"use backend='host' (compiled selection: the fedlecc family)"
-            )
-        if cfg.client_mode != "plain":
-            raise ValueError(
-                "backend='compiled' supports client_mode='plain' only "
-                f"(got {cfg.client_mode!r})"
-            )
+        self._check_mask_backend()
         self._taus_j = jnp.asarray(self.taus)
         self._sizes_j = jnp.asarray(self.sizes, jnp.float32)
         self._build_compiled_jits()
@@ -82,11 +75,7 @@ class CompiledEngine(Engine):
 
         self._masked_weights = jax.jit(_masked_weights)
 
-    # -- hooks ----------------------------------------------------------
-    def select(self, rnd: int, losses: np.ndarray) -> np.ndarray:
-        mask = np.asarray(self.strategy.select_mask_jax(losses))
-        return np.where(mask)[0]
-
+    # -- hooks (select comes from MaskSelectionMixin) --------------------
     def local_train(self, rnd: int, sel: np.ndarray, key: jax.Array):
         stacked, losses = self._train_all(
             self.params, self.xs, self.ys, self.mask, self._taus_j, key
@@ -111,16 +100,9 @@ class CompiledEngine(Engine):
 
 def make_scaleout_round(model_cfg, mesh, lr: float, local_steps: int = 4,
                         compress_bits: int = 0):
-    """Engine-API entry for the production mesh round (clients ↔ pods).
+    """Deprecated location — moved to ``repro.engine.scaleout`` alongside
+    ``ScaleoutEngine``.  Thin delegation kept for backward compatibility."""
+    from repro.engine.scaleout import make_scaleout_round as _impl
 
-    Thin wrapper over ``repro.federated.scaleout.make_federated_round`` —
-    the mesh round is the ``CompiledEngine`` semantics at pod scale:
-    every pod trains, and the FedLECC ``selection_weights`` vector gates
-    the all-reduce.  Imported lazily so ``repro.engine`` stays light.
-    """
-    from repro.federated.scaleout import make_federated_round
-
-    return make_federated_round(
-        model_cfg, mesh, lr=lr, local_steps=local_steps,
-        compress_bits=compress_bits,
-    )
+    return _impl(model_cfg, mesh, lr=lr, local_steps=local_steps,
+                 compress_bits=compress_bits)

@@ -4,13 +4,17 @@ Moved here from ``repro.federated.simulation`` (which re-exports it for
 backward compatibility) and extended with:
 
 - ``backend`` — ``"host"`` (numpy selection + vmapped cohort training,
-  the paper-faithful simulation) or ``"compiled"`` (selection, training,
+  the paper-faithful simulation), ``"compiled"`` (selection, training,
   and masked aggregation as jitted computations, mirroring the scale-out
   mesh round where every client computes and the participation mask
-  gates the aggregation).
+  gates the aggregation), or ``"scaleout"`` (the same mask-gated
+  semantics driven through the shard_map mesh round: clients blocked
+  over the ``pod`` axis, aggregation as the selection-weighted psum).
 - eager validation in ``__post_init__`` — component names are checked
   against the engine registries, so a typo fails at config construction
-  rather than mid-run.
+  rather than mid-run; mask-gated backends additionally reject
+  strategies without a jit-compatible ``select_mask_jax`` up front, with
+  an error naming the strategies that do support it.
 - ``to_dict`` / ``from_dict`` round-tripping, so benchmark caches
   (``results/fl_runs.json``) and checkpointed experiments share one
   serialized format.
@@ -22,8 +26,39 @@ from dataclasses import asdict, dataclass, field, fields
 
 __all__ = ["FLConfig", "BACKENDS"]
 
-BACKENDS = ("host", "compiled")
+BACKENDS = ("host", "compiled", "scaleout")
+_MASK_BACKENDS = ("compiled", "scaleout")  # selection enters as a jit mask
 _PARTITIONS = ("shards", "dirichlet")
+
+
+# Backend-combination error messages — single-sourced here so the
+# up-front validation below and the engine-level defense-in-depth guard
+# (``MaskSelectionMixin._check_mask_backend``) never drift apart.
+def mask_backend_strategy_error(strategy: str, backend: str) -> str:
+    from repro.engine.registry import mask_selection_strategies
+
+    return (
+        f"strategy {strategy!r} has no jit-compatible selection "
+        f"(select_mask_jax), required by backend={backend!r}; either use "
+        f"backend='host' or one of the strategies that support it: "
+        f"{mask_selection_strategies()}"
+    )
+
+
+def mask_backend_client_mode_error(client_mode: str, backend: str) -> str:
+    return (
+        f"backend={backend!r} supports client_mode='plain' only (got "
+        f"{client_mode!r}); per-client state for unselected clients has "
+        f"no scale-out analog"
+    )
+
+
+def mask_backend_aggregator_error(aggregator: str) -> str:
+    return (
+        "backend='scaleout' aggregates inside the mesh round as the "
+        f"mask-gated psum (fedavg semantics); got aggregator={aggregator!r} "
+        "— use backend='host' or 'compiled' for other server rules"
+    )
 
 
 @dataclass
@@ -50,7 +85,7 @@ class FLConfig:
     eval_every: int = 5
     seed: int = 0
     hidden: tuple[int, ...] = (200, 200)   # paper MLP
-    backend: str = "host"          # host | compiled
+    backend: str = "host"          # host | compiled | scaleout
 
     # ------------------------------------------------------------------
     def __post_init__(self) -> None:
@@ -92,6 +127,21 @@ class FLConfig:
                 raise ValueError(
                     f"unknown {reg.kind} {name!r}; available: {reg.names()}"
                 )
+        # Mask-gated backends need a jit-compatible selection: reject the
+        # combination at construction (previously this surfaced only when
+        # the engine was built) with the list of strategies that qualify.
+        if self.backend in _MASK_BACKENDS:
+            cls = STRATEGY_REGISTRY[self.strategy]
+            if not getattr(cls, "supports_compiled_selection", False):
+                raise ValueError(
+                    mask_backend_strategy_error(self.strategy, self.backend)
+                )
+            if self.client_mode != "plain":
+                raise ValueError(
+                    mask_backend_client_mode_error(self.client_mode, self.backend)
+                )
+        if self.backend == "scaleout" and self.aggregator != "fedavg":
+            raise ValueError(mask_backend_aggregator_error(self.aggregator))
 
     # ------------------------------------------------------------------
     def to_dict(self) -> dict:

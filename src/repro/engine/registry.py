@@ -41,6 +41,7 @@ __all__ = [
     "list_strategies",
     "list_aggregators",
     "list_client_modes",
+    "mask_selection_strategies",
 ]
 
 # Modules whose import populates each registry (decorator side-effects).
@@ -168,3 +169,14 @@ def list_aggregators() -> list[str]:
 
 def list_client_modes() -> list[str]:
     return CLIENT_MODE_REGISTRY.names()
+
+
+def mask_selection_strategies() -> list[str]:
+    """Names of registered strategies with a jit-compatible selection
+    (``supports_compiled_selection``) — the ones the mask-gated backends
+    (``compiled`` / ``scaleout``) can run.  Lives here (stdlib-only) so
+    ``FLConfig`` validation never drags in the training stack."""
+    return [
+        n for n in STRATEGY_REGISTRY.names()
+        if getattr(STRATEGY_REGISTRY[n], "supports_compiled_selection", False)
+    ]

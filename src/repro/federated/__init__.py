@@ -8,8 +8,10 @@
                     ``repro.engine.host.HostEngine``
 - ``scaleout``    — mesh-collective federated round for the large
                     architectures (selection mask gates the client-axis
-                    all-reduce; see DESIGN.md §3b); engine entry point:
-                    ``repro.engine.compiled.make_scaleout_round``
+                    all-reduce; see DESIGN.md §3b); engine entry points:
+                    ``repro.engine.scaleout.ScaleoutEngine`` (the round
+                    protocol) and
+                    ``repro.engine.scaleout.make_scaleout_round``
 
 ``FLConfig`` / ``FederatedSimulation`` are lazy re-exports (PEP 562) so
 importing a submodule such as ``repro.federated.client`` never pulls in

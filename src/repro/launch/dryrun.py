@@ -339,9 +339,10 @@ def run_federated(arch: str, local_steps: int = 4, batch_per_client: int = 128,
     """Lower + compile the scale-out FedLECC round (DESIGN.md §3b): clients
     = pods, local SGD steps inside shard_map(manual={'pod'}), aggregation
     = selection-weighted psum over 'pod'.  The paper-representative
-    dry-run artifact.  Built via the engine API (`repro.engine.compiled`),
-    the same entry every other consumer of the compiled round uses."""
-    from repro.engine.compiled import make_scaleout_round
+    dry-run artifact.  Built via the engine API (`repro.engine.scaleout`),
+    the same entry `ScaleoutEngine` and every other consumer of the mesh
+    round use."""
+    from repro.engine.scaleout import make_scaleout_round
 
     cfg = get_config(arch)
     mesh = make_production_mesh(multi_pod=True)

@@ -15,6 +15,34 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture(scope="session")
+def data():
+    """The canonical tiny synthetic FL task shared by the engine and
+    cross-backend conformance suites (immutable, so session-scoped)."""
+    from repro.data import make_classification
+
+    train = make_classification(800, n_features=64, n_classes=10, seed=0)
+    test = make_classification(200, n_features=64, n_classes=10, seed=1)
+    return train, test
+
+
+def fl_cfg(**kw):
+    """The canonical tiny-task FLConfig (12 clients, m=4, 3 rounds).
+    Overriding ``strategy`` without ``strategy_kwargs`` resets the
+    fedlecc-specific kwargs."""
+    from repro.engine import FLConfig
+
+    defaults = dict(
+        n_clients=12, m=4, rounds=3, strategy="fedlecc",
+        strategy_kwargs={"J": 3}, hidden=(16,), eval_samples=16,
+        eval_every=1, target_hd=0.8, seed=0,
+    )
+    if "strategy" in kw and "strategy_kwargs" not in kw:
+        defaults["strategy_kwargs"] = {}
+    defaults.update(kw)
+    return FLConfig(**defaults)
+
+
 def planted_histograms(rng, K=60, C=10, G=4, conc=200.0):
     """Label histograms with G planted modes (used across cluster tests)."""
     modes = rng.dirichlet(np.ones(C) * 0.2, size=G)

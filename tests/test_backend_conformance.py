@@ -1,0 +1,134 @@
+"""Cross-backend conformance: every mask-capable strategy must select the
+same clients and land on (all)close final params on every backend —
+host, compiled, and scaleout — from the same seed.  Also guards the
+streaming-API contract: ``engine.rounds()`` yields frozen
+``RoundResult``s with a stable field set on all backends.
+"""
+
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import fl_cfg as _cfg
+from repro.engine import (
+    BACKENDS,
+    RoundResult,
+    make_engine,
+    mask_selection_strategies,
+)
+
+ROUNDS = 3
+MASK_STRATEGIES = mask_selection_strategies()
+
+
+def _run(strategy, backend, data):
+    train, test = data
+    engine = make_engine(_cfg(strategy=strategy, backend=backend),
+                         train, test, n_classes=10)
+    results = list(engine.rounds(ROUNDS))
+    return results, engine.params
+
+
+def test_mask_strategy_registry_covers_issue_set():
+    """The jit-selection surface the scaleout backend promises."""
+    assert {"fedlecc", "poc", "lossonly", "clusterrandom", "haccs"} <= set(
+        MASK_STRATEGIES
+    )
+
+
+@pytest.mark.parametrize("strategy", MASK_STRATEGIES)
+def test_cross_backend_conformance(strategy, data):
+    """For each strategy: identical per-round selections and allclose
+    final params across host/compiled/scaleout from one seed."""
+    runs = {b: _run(strategy, b, data) for b in BACKENDS}
+    ref_results, ref_params = runs["host"]
+    assert len(ref_results) == ROUNDS
+    for backend in ("compiled", "scaleout"):
+        results, params = runs[backend]
+        for a, b in zip(ref_results, results):
+            assert a.selected == b.selected, (
+                f"{strategy}: host vs {backend} selected different clients "
+                f"in round {a.round}: {a.selected} vs {b.selected}"
+            )
+            assert a.comm_mb == pytest.approx(b.comm_mb)
+            assert a.mean_selected_loss == pytest.approx(
+                b.mean_selected_loss, rel=1e-4
+            )
+        for x, y in zip(jax.tree.leaves(ref_params), jax.tree.leaves(params)):
+            np.testing.assert_allclose(
+                np.asarray(x), np.asarray(y), atol=1e-5,
+                err_msg=f"{strategy}: host vs {backend} final params diverge",
+            )
+
+
+# ------------------------------------------------- streaming API contract
+ROUND_RESULT_FIELDS = (
+    "round", "selected", "mean_selected_loss", "comm_mb",
+    "test_loss", "test_acc",
+)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_rounds_yields_frozen_stable_round_results(backend, data):
+    """Regression guard for benchmark consumers: the record type, its
+    field set, and its frozenness must not drift on any backend."""
+    train, test = data
+    engine = make_engine(_cfg(backend=backend), train, test, n_classes=10)
+    results = list(engine.rounds(2))
+    assert len(results) == 2
+    for r in results:
+        assert isinstance(r, RoundResult)
+        assert tuple(f.name for f in dataclasses.fields(r)) == ROUND_RESULT_FIELDS
+        assert isinstance(r.selected, tuple)
+        assert isinstance(r.mean_selected_loss, float)
+        assert isinstance(r.comm_mb, float)
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            r.round = -1
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            r.test_acc = 1.0
+
+
+# ------------------------------------------------- multi-pod mesh parity
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np
+from repro.data import make_classification
+from repro.engine import FLConfig, make_engine
+
+train = make_classification(800, n_features=64, n_classes=10, seed=0)
+test = make_classification(200, n_features=64, n_classes=10, seed=1)
+kw = dict(n_clients=12, m=4, rounds=2, strategy="fedlecc",
+          strategy_kwargs={"J": 3}, hidden=(16,), eval_samples=16,
+          eval_every=1, target_hd=0.8, seed=0)
+host = make_engine(FLConfig(backend="host", **kw), train, test, 10)
+scale = make_engine(FLConfig(backend="scaleout", **kw), train, test, 10)
+assert scale.n_pods > 1, f"expected a multi-pod mesh, got {scale.n_pods}"
+rh, rs = list(host.rounds(2)), list(scale.rounds(2))
+for a, b in zip(rh, rs):
+    assert a.selected == b.selected, (a.selected, b.selected)
+for x, y in zip(jax.tree.leaves(host.params), jax.tree.leaves(scale.params)):
+    np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+print("SCALEOUT_ENGINE_MULTIPOD_OK", scale.n_pods)
+"""
+
+
+@pytest.mark.slow
+def test_scaleout_engine_multipod_matches_host():
+    """ScaleoutEngine on a real multi-pod (virtual-device) mesh — the
+    psum over a >1 pod axis — still matches the host backend.  Subprocess
+    so the device-count flag doesn't leak into other tests."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run(
+        [sys.executable, "-c", _SCRIPT], env=env, capture_output=True,
+        text=True, timeout=900,
+    )
+    assert "SCALEOUT_ENGINE_MULTIPOD_OK" in r.stdout, (
+        f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
+    )

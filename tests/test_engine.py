@@ -6,7 +6,7 @@ import dataclasses
 import numpy as np
 import pytest
 
-from repro.data import make_classification
+from conftest import fl_cfg as _cfg
 from repro.engine import (
     FLConfig,
     Registry,
@@ -18,25 +18,6 @@ from repro.engine import (
 )
 from repro.engine.aggregators import get_aggregator
 from repro.engine.presets import get_preset, list_presets
-
-
-@pytest.fixture(scope="module")
-def data():
-    train = make_classification(800, n_features=64, n_classes=10, seed=0)
-    test = make_classification(200, n_features=64, n_classes=10, seed=1)
-    return train, test
-
-
-def _cfg(**kw):
-    defaults = dict(
-        n_clients=12, m=4, rounds=3, strategy="fedlecc",
-        strategy_kwargs={"J": 3}, hidden=(16,), eval_samples=16,
-        eval_every=1, target_hd=0.8, seed=0,
-    )
-    if "strategy" in kw and "strategy_kwargs" not in kw:
-        defaults["strategy_kwargs"] = {}
-    defaults.update(kw)
-    return FLConfig(**defaults)
 
 
 # ---------------------------------------------------------------- registry
@@ -262,16 +243,40 @@ def test_backends_run_fedlecc_end_to_end_equivalently(data):
     assert err < 1e-5
 
 
-def test_compiled_backend_rejects_unsupported_combos(data):
+def test_mask_backends_reject_unsupported_combos_at_config_time():
+    """A strategy without select_mask_jax on a mask-gated backend must
+    fail at FLConfig construction (not mid-engine-build), and the error
+    must name the strategies that do support it."""
+    from repro.engine import mask_selection_strategies
+
+    supported = mask_selection_strategies()
+    assert "fedlecc" in supported and "poc" in supported
+    for backend in ("compiled", "scaleout"):
+        with pytest.raises(ValueError, match="jit-compatible selection") as ei:
+            _cfg(backend=backend, strategy="fedcor")
+        for name in supported:  # actionable: lists every working strategy
+            assert name in str(ei.value)
+        with pytest.raises(ValueError, match="client_mode"):
+            _cfg(backend=backend, client_mode="fedprox", mu=0.1)
+    # previously-rejected-at-engine-build combos now never construct;
+    # strategies WITH a jit mask still build fine on both backends
+    _cfg(backend="compiled", strategy="poc")
+    _cfg(backend="scaleout", strategy="haccs")
+
+
+def test_scaleout_backend_requires_fedavg_aggregator():
+    # rejected up front at config construction, like the strategy check
+    with pytest.raises(ValueError, match="fedavg"):
+        _cfg(backend="scaleout", aggregator="fednova")
+
+
+def test_scaleout_backend_rejects_mesh_without_pod_axis(data):
     train, test = data
-    with pytest.raises(ValueError, match="jit-compatible selection"):
-        make_engine(_cfg(backend="compiled", strategy="poc"),
-                    train, test, n_classes=10)
-    with pytest.raises(ValueError, match="client_mode"):
-        make_engine(
-            _cfg(backend="compiled", client_mode="fedprox", mu=0.1),
-            train, test, n_classes=10,
-        )
+    from repro.launch.mesh import make_host_mesh
+
+    with pytest.raises(ValueError, match="pod"):
+        make_engine(_cfg(backend="scaleout"), train, test, n_classes=10,
+                    mesh=make_host_mesh(data=1, model=1))
 
 
 # --------------------------------------------------------- legacy shim

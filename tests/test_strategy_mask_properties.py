@@ -1,0 +1,84 @@
+"""Property tests for the jit-compatible strategy masks.
+
+For random loss vectors, every strategy advertising
+``supports_compiled_selection`` must produce a ``select_mask_jax`` mask
+with exactly ``n_selected`` true entries that agrees with its numpy
+``select`` under the same inputs and rng state — the invariant the
+cross-backend conformance suite (and the mask-gated backends) rest on.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.strategies import get_strategy
+from repro.engine import mask_selection_strategies
+
+MASK_STRATEGIES = mask_selection_strategies()
+
+
+@st.composite
+def mask_case(draw):
+    """(K, m, hists, sizes, losses, seed) — planted-mode histograms so the
+    cluster-based strategies find real structure; losses drawn continuous
+    (ties are measure-zero and tie-break conventions already match)."""
+    k = draw(st.integers(6, 48))
+    m = draw(st.integers(1, k))
+    g = draw(st.integers(1, 5))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    modes = rng.dirichlet(np.ones(10) * 0.2, size=g)
+    assign = rng.integers(0, g, k)
+    hists = np.stack([rng.dirichlet(modes[a] * 200.0 + 1e-3) for a in assign])
+    sizes = rng.integers(20, 200, k).astype(np.float64)
+    losses = rng.uniform(0.1, 5.0, k).astype(np.float32)
+    return k, m, hists, sizes, losses, seed
+
+
+def _setup(name, k, m, hists, sizes, seed):
+    s = get_strategy(name, m=m)
+    s.setup(hists, sizes, seed=seed)
+    return s
+
+
+@pytest.mark.parametrize("name", MASK_STRATEGIES)
+@given(case=mask_case())
+@settings(max_examples=25, deadline=None)
+def test_mask_has_exactly_n_selected_true_entries(name, case):
+    k, m, hists, sizes, losses, seed = case
+    s = _setup(name, k, m, hists, sizes, seed)
+    mask = np.asarray(
+        s.select_mask_jax(jnp.asarray(losses), np.random.default_rng(seed))
+    )
+    assert mask.shape == (k,) and mask.dtype == bool
+    assert int(mask.sum()) == min(m, k)
+
+
+@pytest.mark.parametrize("name", MASK_STRATEGIES)
+@given(case=mask_case())
+@settings(max_examples=25, deadline=None)
+def test_mask_agrees_with_numpy_select(name, case):
+    """Two identically-seeded rng streams — one consumed by ``select``,
+    one by ``select_mask_jax`` — must yield the same participant set."""
+    k, m, hists, sizes, losses, seed = case
+    s = _setup(name, k, m, hists, sizes, seed)
+    sel = s.select(0, losses, np.random.default_rng(seed + 1))
+    mask = np.asarray(
+        s.select_mask_jax(jnp.asarray(losses), np.random.default_rng(seed + 1))
+    )
+    np.testing.assert_array_equal(np.where(mask)[0], sel)
+
+
+def test_mask_strategies_need_rng_fail_loud():
+    """Strategies with host-side per-round randomness reject rng=None
+    instead of silently desynchronizing from the host backend."""
+    rng = np.random.default_rng(0)
+    hists = rng.dirichlet(np.ones(10), size=12)
+    for name in ("poc", "clusterrandom"):
+        s = _setup(name, 12, 4, hists, np.full(12, 50.0), 0)
+        with pytest.raises(ValueError, match="rng"):
+            s.select_mask_jax(jnp.zeros(12, jnp.float32))
