@@ -47,15 +47,31 @@ def methods_for(full: bool) -> list[str]:
     return list_presets() if full else list_presets(fast_only=True)
 
 
-def run_cell(method: str, seed: int, rounds: int, n_clients: int = 100,
-             m: int = 10, data_seed: int = 0) -> dict:
+def _cell_data(cfg, data_seed: int):
+    """Task-appropriate (train, test, n_classes) for one benchmark cell:
+    Gaussian-mixture images for classification, Markov token streams for
+    the LM task (vocab taken from the preset's task model config)."""
+    if cfg.task == "lm":
+        from repro.data.synthetic import make_token_stream
+        from repro.engine.tasks import build_task
+
+        vocab = build_task(cfg).model_cfg.vocab
+        train = make_token_stream(24 * cfg.n_clients, 64, vocab, seed=data_seed)
+        test = make_token_stream(64, 64, vocab, seed=data_seed + 1)
+        return train, test, vocab
     train = make_classification(20_000, seed=data_seed)
     test = make_classification(2_000, seed=data_seed + 1)
+    return train, test, 10
+
+
+def run_cell(method: str, seed: int, rounds: int, n_clients: int = 100,
+             m: int = 10, data_seed: int = 0) -> dict:
     cfg = get_preset(method).make_config(
         n_clients=n_clients, m=m, rounds=rounds, seed=seed,
         target_hd=0.9, eval_every=5,
     )
-    engine = make_engine(cfg, train, test, n_classes=10)
+    train, test, n_classes = _cell_data(cfg, data_seed)
+    engine = make_engine(cfg, train, test, n_classes=n_classes)
     t0 = time.time()
     hist = engine.run()
     return {

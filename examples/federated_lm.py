@@ -1,115 +1,105 @@
 """Federated language-model training: FedLECC selecting over LM clients.
 
-The scale-out story of DESIGN.md §3 in miniature: K clients each hold a
-token stream with *topic skew* (distinct Markov transition tables play
+The scale-out story of DESIGN.md §3 run literally: K clients each hold
+token streams with *topic skew* (distinct Markov transition tables play
 the role of label skew); per round FedLECC clusters clients by their
 token-histogram Hellinger distances and selects the highest-loss
-clusters; selected clients run local steps on a reduced xlstm-125m.
+clusters; selected clients run local SGD on a reduced xlstm-125m.
 
-The round loop is the engine protocol in consumer form: selection goes
-through the strategy's jit-compatible ``select_mask_jax`` (the same hook
-``CompiledEngine``/``ScaleoutEngine`` call via ``MaskSelectionMixin``),
-the participation mask becomes aggregation weights via
-``selection_weights`` (exactly the vector the pod-scale mesh round feeds
-its psum), and each round is reported as a frozen ``RoundResult`` — so
-this example consumes the same records ``engine.rounds()`` streams.
+Since the ``Task`` registry axis, this is a thin ``make_engine``
+consumer — no hand-rolled round loop.  ``FLConfig(task="lm")`` selects
+the transformer LM task, and the very same config drives every backend:
 
-    PYTHONPATH=src python examples/federated_lm.py [--rounds 8]
+- ``backend="host"``     — numpy selection + vmapped selected cohort
+- ``backend="compiled"`` — jit mask selection, every client trains,
+                           mask-gated aggregation
+- ``backend="scaleout"`` — clients blocked over the ``pod`` mesh axis,
+                           aggregation as the selection-weighted psum
+
+The ground-truth topic ids are passed as the ``partition_labels`` data
+override, so the non-IID shard partition groups clients by topic and
+the planted cluster structure is what FedLECC's OPTICS sees.
+
+    PYTHONPATH=src python examples/federated_lm.py [--rounds 4]
+    PYTHONPATH=src python examples/federated_lm.py --backends host scaleout
 """
 
 import argparse
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config
-from repro.core.comm_model import CommModel, count_params
-from repro.core.selection import selection_weights
-from repro.core.strategies import get_strategy
-from repro.data.synthetic import make_token_stream
-from repro.engine import RoundResult
-from repro.federated.aggregation import fedavg
-from repro.models.transformer import init_transformer, loss_fn
+from repro.data.synthetic import Dataset, make_token_stream
+from repro.engine import FLConfig, make_engine
+
+VOCAB = 128
+SEQ_LEN = 64
+N_TOPICS = 3
+SEQS_PER_CLIENT = 16
 
 
-def main(rounds: int = 8, K: int = 12, m: int = 4, local_steps: int = 4):
-    cfg = get_config("xlstm-125m", reduced=True)
-    params = init_transformer(jax.random.PRNGKey(0), cfg)
+def build_corpus(K: int, seed: int = 0):
+    """One corpus with planted topic structure: each *client* draws a
+    topic, and all of its ``SEQS_PER_CLIENT`` sequences come from that
+    topic's Markov transition table (the LM analogue of label skew).
+    Per-topic counts are therefore multiples of the shard size, so the
+    shard partition over the returned per-sequence topic ids yields
+    topic-pure clients.  Returns (train, test, seq_topic_ids)."""
+    rng = np.random.default_rng(seed)
+    client_topics = rng.integers(0, N_TOPICS, K)
+    topics = np.repeat(client_topics, SEQS_PER_CLIENT)
+    x = np.empty((len(topics), SEQ_LEN), np.int32)
+    y = np.empty((len(topics), SEQ_LEN), np.int32)
+    for t in range(N_TOPICS):
+        s = make_token_stream(int((topics == t).sum()), SEQ_LEN, VOCAB,
+                              seed=100 + t)
+        # bijective per-topic token relabeling: every Markov table's
+        # unigram mass concentrates near token 0, so shift each topic's
+        # vocabulary to give topics distinct token histograms (the skew
+        # FedLECC clusters on) without changing learnability
+        shift = t * (VOCAB // N_TOPICS)
+        x[topics == t] = (s.x + shift) % VOCAB
+        y[topics == t] = (s.y + shift) % VOCAB
+    test = make_token_stream(32, SEQ_LEN, VOCAB, seed=999)
+    return Dataset(x=x, y=y), test, topics
 
-    # K clients, 3 "topics": clients of one topic share a Markov table
-    topics = np.random.default_rng(0).integers(0, 3, K)
-    data = [
-        make_token_stream(64, 128, cfg.vocab, seed=100 + int(t))
-        for t in topics
-    ]
-    # token histograms ≈ label distributions for clustering
-    hists = np.stack([
-        np.bincount(d.x.ravel() % 64, minlength=64) for d in data
-    ]).astype(np.float64)
-    sizes = jnp.full((K,), 64.0 * 128.0)
 
-    strat = get_strategy("fedlecc", m=m, J=3)
-    strat.setup(hists, np.full(K, 64 * 128), seed=0)
-    print(f"clusters found: {strat.n_clusters} (3 topics planted)")
+def main(rounds: int = 4, K: int = 12, m: int = 4,
+         backends: tuple[str, ...] = ("host", "compiled", "scaleout")):
+    train, test, topics = build_corpus(K)
 
-    comm = CommModel(count_params(params), K, n_classes=64)
-    comm_mb = comm.one_time_mb(strat.needs_histograms)
-
-    @jax.jit
-    def local_train(p, x, y):
-        def step(p, _):
-            def loss(q):
-                return loss_fn(q, cfg, {"tokens": x, "labels": y})[0]
-            l, g = jax.value_and_grad(loss)(p)
-            p = jax.tree.map(lambda w, gw: (w - 0.05 * gw).astype(w.dtype), p, g)
-            return p, l
-        p, losses = jax.lax.scan(step, p, None, length=local_steps)
-        return p, losses.mean()
-
-    @jax.jit
-    def eval_loss(p, x, y):
-        return loss_fn(p, cfg, {"tokens": x, "labels": y})[0]
-
-    rng = np.random.default_rng(0)
-    for rnd in range(rounds):
-        losses = np.array([
-            float(eval_loss(params, jnp.asarray(d.x[:8]), jnp.asarray(d.y[:8])))
-            for d in data
-        ])
-        # the mask-gated selection path shared with the compiled/scaleout
-        # backends: strategy mask -> aggregation weight vector
-        mask = np.asarray(strat.select_mask_jax(jnp.asarray(losses), rng))
-        sel = np.where(mask)[0]
-        w_full = selection_weights(jnp.asarray(mask), sizes)   # (K,), 0 off-mask
-        locals_, locloss = [], []
-        for i in sel:
-            d = data[int(i)]
-            b = rng.integers(0, 56)
-            p_i, l_i = local_train(params, jnp.asarray(d.x[b:b+8]), jnp.asarray(d.y[b:b+8]))
-            locals_.append(p_i)
-            locloss.append(float(l_i))
-        # the mesh round computes psum_i w_i θ_i over all K pods; here only
-        # the selected (nonzero-weight) replicas exist, same weighted sum
-        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *locals_)
-        params = fedavg(stacked, w_full[jnp.asarray(sel)])
-        comm_mb += comm.round_mb(len(sel), strat.needs_losses)
-        result = RoundResult(
-            round=rnd,
-            selected=tuple(int(i) for i in sel),
-            mean_selected_loss=float(np.mean(locloss)),
-            comm_mb=float(comm_mb),
-            test_loss=float(losses.mean()),
+    for backend in backends:
+        cfg = FLConfig(
+            task="lm",
+            # keep the reduced xlstm-125m small enough for a CPU smoke run
+            task_kwargs={"model": "xlstm-125m",
+                         "overrides": {"d_model": 64, "vocab": VOCAB}},
+            backend=backend,
+            strategy="fedlecc", strategy_kwargs={"J": N_TOPICS},
+            n_clients=K, m=m, rounds=rounds,
+            batch_size=8, eval_samples=8, eval_every=1,
+            partition="shards", target_hd=0.8, max_steps_cap=4, seed=0,
         )
-        print(f"round {result.round}: selected {list(result.selected)} "
-              f"(topics {[int(topics[i]) for i in result.selected]}) "
-              f"mean_local_loss={result.mean_selected_loss:.3f} "
-              f"global_loss={result.test_loss:.3f}")
-    print("done — global loss should be trending down across rounds")
+        # topic ids drive the non-IID split (task data override), so each
+        # client's stream is topic-pure and token histograms cluster by topic
+        engine = make_engine(cfg, train, test, n_classes=VOCAB,
+                             partition_labels=topics)
+        print(f"[{backend}] clusters found: {engine.strategy.n_clusters} "
+              f"({N_TOPICS} topics planted)")
+        for r in engine.rounds():
+            print(f"[{backend}] round {r.round}: selected {list(r.selected)} "
+                  f"mean_local_loss={r.mean_selected_loss:.3f} "
+                  f"test_loss={r.test_loss:.3f} "
+                  f"next_token_acc={r.test_acc:.3f} "
+                  f"comm={r.comm_mb:.1f}MB")
+    print("done — test_loss should trend down; all backends select "
+          "identical clients for one seed (the conformance guarantee)")
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=4)
+    ap.add_argument("--backends", nargs="+",
+                    default=["host", "compiled", "scaleout"],
+                    choices=["host", "compiled", "scaleout"])
     args = ap.parse_args()
-    main(rounds=args.rounds)
+    main(rounds=args.rounds, backends=tuple(args.backends))

@@ -1,0 +1,105 @@
+#!/usr/bin/env python
+"""Internal documentation cross-reference checker (the CI `docs` job).
+
+Three classes of reference are verified:
+
+1. ``DESIGN.md §X`` citations — anywhere in the tree (module
+   docstrings, tests, examples, benchmarks, and the root md docs) —
+   must resolve to a literal ``§X`` heading in ``DESIGN.md``.
+2. Bare ``§X`` (digit-leading) references *inside* ``DESIGN.md`` must
+   resolve to one of its own headings.
+3. Repo-relative file references in the root docs (README.md,
+   DESIGN.md, ROADMAP.md) — markdown links and backticked paths like
+   ``examples/federated_lm.py`` or ``ROADMAP.md`` — must exist.
+
+Stdlib-only; exits nonzero listing every unresolved reference.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DESIGN = ROOT / "DESIGN.md"
+ROOT_DOCS = ("README.md", "DESIGN.md", "ROADMAP.md")
+CODE_DIRS = ("src", "tests", "examples", "benchmarks", "scripts")
+
+SECTION_REF = r"§([0-9]+[a-z]?(?:\.[0-9]+)*)"
+DESIGN_REF = re.compile(r"DESIGN\.md\s*" + SECTION_REF)
+HEADING = re.compile(r"^#{1,6}\s*" + SECTION_REF, re.M)
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(?:#[^)\s]*)?\)")
+# backticked repo-relative path: at least a slash or an .md name, no
+# spaces/globs, a recognizable file extension
+TICKED_PATH = re.compile(
+    r"`([A-Za-z0-9_.\-]+(?:/[A-Za-z0-9_.\-]+)*"
+    r"\.(?:md|py|yml|yaml|json|txt|ini))`"
+)
+
+
+def design_sections() -> set[str]:
+    if not DESIGN.exists():
+        return set()
+    return set(HEADING.findall(DESIGN.read_text()))
+
+
+def iter_code_files():
+    for d in CODE_DIRS:
+        yield from (ROOT / d).rglob("*.py")
+    for name in ROOT_DOCS:
+        p = ROOT / name
+        if p.exists():
+            yield p
+
+
+def main() -> int:
+    errors: list[str] = []
+    sections = design_sections()
+    if not DESIGN.exists():
+        errors.append("DESIGN.md does not exist")
+
+    # 1. DESIGN.md §X citations, tree-wide
+    for path in iter_code_files():
+        text = path.read_text(errors="replace")
+        for sec in DESIGN_REF.findall(text):
+            if sec not in sections:
+                errors.append(
+                    f"{path.relative_to(ROOT)}: cites DESIGN.md §{sec} "
+                    f"but DESIGN.md has no §{sec} heading"
+                )
+
+    # 2. bare §X references inside DESIGN.md resolve internally
+    if DESIGN.exists():
+        for sec in re.findall(r"(?<![\w#])" + SECTION_REF, DESIGN.read_text()):
+            if sec not in sections:
+                errors.append(
+                    f"DESIGN.md: internal reference §{sec} has no heading"
+                )
+
+    # 3. file references in the root docs
+    for name in ROOT_DOCS:
+        doc = ROOT / name
+        if not doc.exists():
+            errors.append(f"{name} does not exist")
+            continue
+        text = doc.read_text()
+        refs = set(MD_LINK.findall(text)) | set(TICKED_PATH.findall(text))
+        for ref in sorted(refs):
+            if ref.startswith(("http://", "https://", "/")):
+                continue
+            if not (ROOT / ref).exists():
+                errors.append(f"{name}: references {ref!r} which does not exist")
+
+    if errors:
+        print(f"check_docs: {len(errors)} unresolved reference(s):")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    n = len(sections)
+    print(f"check_docs: OK (DESIGN.md has {n} §-headings; all references resolve)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,11 +1,13 @@
 """repro.engine — the pluggable federated engine API.
 
-One API, three orthogonal axes, three backends:
+One API, four orthogonal axes, three backends:
 
 - ``registry``     — ``@register_strategy`` / ``@register_aggregator`` /
-                     ``@register_client_mode`` decorators + lookups
-- ``config``       — ``FLConfig`` with validation, ``backend`` switch,
-                     and ``to_dict``/``from_dict`` round-tripping
+                     ``@register_client_mode`` / ``@register_task``
+                     decorators + lookups
+- ``config``       — ``FLConfig`` with validation, ``backend`` and
+                     ``task`` switches, and ``to_dict``/``from_dict``
+                     round-tripping
 - ``base``         — ``Engine`` round protocol (poll_losses → select →
                      local_train → aggregate → evaluate), streaming
                      ``rounds()`` iterator of frozen ``RoundResult``s,
@@ -21,12 +23,17 @@ One API, three orthogonal axes, three backends:
                      the production transformer mesh
 - ``aggregators``  — FedAvg / FedNova / FedDyn as stateful objects
 - ``client_modes`` — plain / FedProx / FedDyn gradient modifiers
+- ``tasks``        — the federated workload: ``classification`` (paper
+                     MLP, label histograms — the default) and ``lm``
+                     (transformer LM, token histograms); a ``Task``
+                     owns model init, loss, eval metric, and the
+                     clustering feature
 - ``presets``      — named method cells (Table II/III) via
                      ``get_preset(name).make_config(...)``
 
-Strategy × backend support matrix (mask-gated backends need a
-jit-compatible ``select_mask_jax``; FLConfig validation enforces this
-up front):
+Strategy × backend support matrix, identical for both tasks (mask-gated
+backends need a jit-compatible ``select_mask_jax``; FLConfig validation
+enforces this up front):
 
     strategy          host   compiled   scaleout
     ----------------  ----   --------   --------
@@ -53,6 +60,9 @@ Typical use::
     for result in engine.rounds():
         ...  # result: RoundResult(round, selected, losses, metrics, MB)
 
+    # federated LM: same strategies, same backends, token streams
+    cfg = FLConfig(task="lm", strategy="fedlecc", backend="scaleout")
+
 The engines are imported lazily (module ``__getattr__``) so that
 registering a component never drags in the training stack.
 """
@@ -63,14 +73,17 @@ from repro.engine.registry import (
     CLIENT_MODE_REGISTRY,
     PRESET_REGISTRY,
     STRATEGY_REGISTRY,
+    TASK_REGISTRY,
     Registry,
     list_aggregators,
     list_client_modes,
     list_strategies,
+    list_tasks,
     mask_selection_strategies,
     register_aggregator,
     register_client_mode,
     register_strategy,
+    register_task,
 )
 
 __all__ = [
@@ -80,13 +93,18 @@ __all__ = [
     "STRATEGY_REGISTRY",
     "AGGREGATOR_REGISTRY",
     "CLIENT_MODE_REGISTRY",
+    "TASK_REGISTRY",
     "PRESET_REGISTRY",
     "register_strategy",
     "register_aggregator",
     "register_client_mode",
+    "register_task",
     "list_strategies",
     "list_aggregators",
     "list_client_modes",
+    "list_tasks",
+    "Task",
+    "build_task",
     "Engine",
     "MaskSelectionMixin",
     "RoundResult",
@@ -104,6 +122,8 @@ __all__ = [
 ]
 
 _LAZY = {
+    "Task": ("repro.engine.tasks", "Task"),
+    "build_task": ("repro.engine.tasks", "build_task"),
     "Engine": ("repro.engine.base", "Engine"),
     "MaskSelectionMixin": ("repro.engine.base", "MaskSelectionMixin"),
     "RoundResult": ("repro.engine.base", "RoundResult"),
@@ -133,8 +153,23 @@ def __getattr__(name):
 
 def make_engine(cfg: FLConfig, train, test, n_classes: int, **kwargs):
     """Build the engine selected by ``cfg.backend``
-    ("host" | "compiled" | "scaleout").  Extra kwargs go to the backend
-    constructor (e.g. ``mesh=`` for the scaleout backend)."""
+    ("host" | "compiled" | "scaleout").
+
+    ``train``/``test`` are the task's datasets (``repro.data.Dataset``:
+    image features + class labels for ``task="classification"``, token /
+    next-token sequences for ``task="lm"``); ``n_classes`` is the label
+    cardinality (the vocab size for LM).
+
+    Extra kwargs pass through to the backend constructor:
+
+    - ``mesh=``             — (scaleout only) a mesh with a ``pod`` axis
+      replacing the auto-sized default
+      (``make_host_mesh(pod=...)`` / ``make_production_mesh``).
+    - ``partition_labels=`` — (all backends) task-data override: a (N,)
+      integer array the non-IID partitioner splits on instead of the
+      task's derived labels (e.g. ground-truth topic ids for LM
+      corpora — see ``examples/federated_lm.py``).
+    """
     if cfg.backend == "compiled":
         from repro.engine.compiled import CompiledEngine
 

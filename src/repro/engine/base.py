@@ -1,10 +1,17 @@
 """Backend-agnostic federated engine: the typed round protocol.
 
-``Engine`` owns everything both backends share — the non-IID partition,
-the packed client tensors, the MLP, the selection strategy, the comm
-ledger — and drives one canonical round loop:
+``Engine`` owns everything every backend shares — the non-IID partition,
+the packed client tensors, the selection strategy, the comm ledger —
+and drives one canonical round loop:
 
     poll_losses → select → local_train → aggregate → evaluate
+
+Everything *workload*-specific (model init, per-example loss, eval
+metric, the client feature used for clustering) is owned by the
+registered ``Task`` selected via ``FLConfig.task``
+(``repro.engine.tasks``): ``classification`` is the paper's MLP over
+label-skewed images, ``lm`` is a transformer language model over
+token streams with topic skew.  The engine itself never names a model.
 
 Backends implement the hooks:
 
@@ -60,8 +67,25 @@ __all__ = [
 
 @dataclass(frozen=True)
 class RoundResult:
-    """One completed federated round.  ``test_loss``/``test_acc`` are
-    ``None`` on rounds where evaluation was skipped (``eval_every``)."""
+    """One completed federated round (frozen; the streaming record type
+    of ``engine.rounds()`` on every backend and every task).
+
+    Fields:
+
+    - ``round``              — 0-based absolute round index (stable
+      across chunked ``rounds()`` calls).
+    - ``selected``           — sorted tuple of the participating client
+      indices this round.
+    - ``mean_selected_loss`` — mean *local training* loss over the
+      selected cohort (averaged over each client's executed steps).
+    - ``comm_mb``            — cumulative communication ledger in MB up
+      to and including this round (model up/down for the cohort, loss
+      polls, one-time histograms — ``repro.core.comm_model``).
+    - ``test_loss``/``test_acc`` — global-model evaluation on the held-
+      out set; the metric is task-defined (classification accuracy, or
+      next-token accuracy for the LM task).  ``None`` on rounds where
+      evaluation was skipped (``eval_every`` cadence).
+    """
 
     round: int
     selected: tuple[int, ...]
@@ -76,56 +100,79 @@ class RoundResult:
 
 
 class Engine:
-    """Shared state + the canonical round loop; backends fill in hooks."""
+    """Shared state + the canonical round loop; backends fill in hooks.
+
+    ``partition_labels`` is the task-data override threaded through
+    ``make_engine(**kwargs)``: a (N,) integer array replacing the task's
+    derived per-example partition labels (e.g. real topic ids for the
+    LM task), so callers with ground-truth skew structure control the
+    non-IID split without subclassing the task.
+    """
 
     backend = "base"
 
-    def __init__(self, cfg: FLConfig, train, test, n_classes: int):
-        from repro.data.partition import (
-            calibrate_alpha,
-            dirichlet_partition,
-            label_histograms,
-            pack_clients,
-        )
-        from repro.models.mlp import init_mlp
+    def __init__(self, cfg: FLConfig, train, test, n_classes: int,
+                 partition_labels=None):
+        from repro.data.partition import calibrate_alpha, dirichlet_partition, pack_clients
+        from repro.engine.tasks import build_task
 
         self.cfg = cfg
         self.n_classes = n_classes
         self.rng = np.random.default_rng(cfg.seed)
+        self.task = build_task(cfg)
 
-        # --- non-IID partition (calibrated to the paper's HD regime) ---
+        # --- non-IID partition (calibrated to the paper's HD regime),
+        # split on the task's per-example label axis ---
+        if partition_labels is None:
+            labels = np.asarray(self.task.partition_labels(train))
+        else:
+            labels = np.asarray(partition_labels)
+            if labels.shape != (len(train.x),):
+                raise ValueError(
+                    f"partition_labels must be ({len(train.x)},); got "
+                    f"shape {labels.shape}"
+                )
+        part_classes = self.task.partition_classes(n_classes)
+        if partition_labels is not None and (
+            labels.min() < 0 or labels.max() >= part_classes
+        ):
+            raise ValueError(
+                f"partition_labels values must lie in [0, {part_classes}) "
+                f"(the task's partition-label space); got range "
+                f"[{labels.min()}, {labels.max()}]"
+            )
         if cfg.partition == "shards":
             from repro.data.partition import calibrate_shards, shard_partition
 
-            s = calibrate_shards(train.y, cfg.n_clients, cfg.target_hd,
-                                 n_classes, seed=cfg.seed)
+            s = calibrate_shards(labels, cfg.n_clients, cfg.target_hd,
+                                 part_classes, seed=cfg.seed)
             self.alpha = float(s)  # records shards/client in the alpha slot
             self.client_idx = shard_partition(
-                train.y, cfg.n_clients, s, seed=cfg.seed
+                labels, cfg.n_clients, s, seed=cfg.seed
             )
         else:
             alpha = cfg.alpha_dirichlet
             if alpha is None:
                 alpha = calibrate_alpha(
-                    train.y, cfg.n_clients, cfg.target_hd, n_classes,
+                    labels, cfg.n_clients, cfg.target_hd, part_classes,
                     seed=cfg.seed,
                 )
             self.alpha = float(alpha)
             self.client_idx = dirichlet_partition(
-                train.y, cfg.n_clients, self.alpha, seed=cfg.seed
+                labels, cfg.n_clients, self.alpha, seed=cfg.seed
             )
-        self.hists = label_histograms(train.y, self.client_idx, n_classes)
+        self.hists = self.task.client_features(train, self.client_idx, n_classes)
         xs, ys, mask = pack_clients(train.x, train.y, self.client_idx)
         self.xs, self.ys, self.mask = (
             jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(mask),
         )
         self.sizes = np.array([len(ix) for ix in self.client_idx])
         self.test_x, self.test_y = jnp.asarray(test.x), jnp.asarray(test.y)
+        self._train_data = train  # handed to the task when building fns
 
-        # --- model / optimizer-free local SGD ---
-        feat = train.x.shape[1]
-        self.params = init_mlp(
-            jax.random.PRNGKey(cfg.seed), (feat, *cfg.hidden, n_classes)
+        # --- model (task-owned) / optimizer-free local SGD ---
+        self.params = self.task.init_params(
+            jax.random.PRNGKey(cfg.seed), train, n_classes
         )
         self.n_params = count_params(self.params)
 
@@ -148,8 +195,10 @@ class Engine:
             self.params, cfg.n_clients
         )
 
-        # --- communication ledger ---
-        self.comm = CommModel(self.n_params, cfg.n_clients, n_classes)
+        # --- communication ledger (histogram traffic is the task's
+        # clustering-feature dimension: n_classes for classification,
+        # hist_bins for the LM task) ---
+        self.comm = CommModel(self.n_params, cfg.n_clients, self.hists.shape[1])
         self.comm_mb = self.comm.one_time_mb(self.strategy.needs_histograms)
 
         self._build_shared_jits()
@@ -161,11 +210,13 @@ class Engine:
 
     # ------------------------------------------------------------------
     def _build_shared_jits(self) -> None:
-        from repro.models.mlp import accuracy, cross_entropy_loss, mlp_apply
-
         cfg = self.cfg
-        self._apply_fn, self._loss_fn = mlp_apply, cross_entropy_loss
-        apply_fn, loss_fn = self._apply_fn, self._loss_fn
+        # The task's (apply, loss, metric) triple; backends thread
+        # apply/loss into local_train unchanged.
+        apply_fn, loss_fn, metric_fn = self.task.build_fns(
+            self._train_data, self.n_classes
+        )
+        self._apply_fn, self._loss_fn = apply_fn, loss_fn
 
         def _poll_losses(params, xs, ys, mask, key):
             """Subsampled local empirical loss of the *global* model on
@@ -175,8 +226,8 @@ class Engine:
                 n = x.shape[0]
                 p = m / jnp.maximum(m.sum(), 1e-9)
                 idx = jax.random.choice(k, n, shape=(cfg.eval_samples,), p=p)
-                logits = apply_fn(params, jnp.take(x, idx, axis=0))
-                return loss_fn(logits, jnp.take(y, idx, axis=0), None)
+                out = apply_fn(params, jnp.take(x, idx, axis=0))
+                return loss_fn(out, jnp.take(y, idx, axis=0), None)
 
             keys = jax.random.split(key, xs.shape[0])
             return jax.vmap(one)(xs, ys, mask, keys)
@@ -184,8 +235,8 @@ class Engine:
         self._poll_losses = jax.jit(_poll_losses)
 
         def _evaluate(params, x, y):
-            logits = apply_fn(params, x)
-            return loss_fn(logits, y, None), accuracy(logits, y)
+            out = apply_fn(params, x)
+            return loss_fn(out, y, None), metric_fn(out, y)
 
         self._evaluate = jax.jit(_evaluate)
 

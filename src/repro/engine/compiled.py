@@ -42,8 +42,9 @@ __all__ = ["CompiledEngine", "make_scaleout_round"]
 class CompiledEngine(MaskSelectionMixin, Engine):
     backend = "compiled"
 
-    def __init__(self, cfg, train, test, n_classes: int):
-        super().__init__(cfg, train, test, n_classes)
+    def __init__(self, cfg, train, test, n_classes: int, partition_labels=None):
+        super().__init__(cfg, train, test, n_classes,
+                         partition_labels=partition_labels)
         self._check_mask_backend()
         self._taus_j = jnp.asarray(self.taus)
         self._sizes_j = jnp.asarray(self.sizes, jnp.float32)

@@ -10,11 +10,18 @@ backward compatibility) and extended with:
   gates the aggregation), or ``"scaleout"`` (the same mask-gated
   semantics driven through the shard_map mesh round: clients blocked
   over the ``pod`` axis, aggregation as the selection-weighted psum).
-- eager validation in ``__post_init__`` — component names are checked
-  against the engine registries, so a typo fails at config construction
-  rather than mid-run; mask-gated backends additionally reject
-  strategies without a jit-compatible ``select_mask_jax`` up front, with
-  an error naming the strategies that do support it.
+- ``task`` — the federated workload (fourth registry axis):
+  ``"classification"`` (the paper's MLP over label-skewed image
+  features, the default) or ``"lm"`` (transformer language model over
+  token streams with topic skew); ``task_kwargs`` parameterizes the
+  task (JSON-safe values only — e.g. the LM model name / reduced flag /
+  ``ModelConfig`` field overrides / histogram bins).
+- eager validation in ``__post_init__`` — component names (including
+  ``task``) are checked against the engine registries, so a typo fails
+  at config construction rather than mid-run; mask-gated backends
+  additionally reject strategies without a jit-compatible
+  ``select_mask_jax`` up front, with an error naming the strategies
+  that do support it.
 - ``to_dict`` / ``from_dict`` round-tripping, so benchmark caches
   (``results/fl_runs.json``) and checkpointed experiments share one
   serialized format.
@@ -84,8 +91,10 @@ class FLConfig:
     max_steps_cap: int = 50
     eval_every: int = 5
     seed: int = 0
-    hidden: tuple[int, ...] = (200, 200)   # paper MLP
+    hidden: tuple[int, ...] = (200, 200)   # paper MLP (classification task)
     backend: str = "host"          # host | compiled | scaleout
+    task: str = "classification"   # any registered task (classification | lm)
+    task_kwargs: dict = field(default_factory=dict)  # JSON-safe task params
 
     # ------------------------------------------------------------------
     def __post_init__(self) -> None:
@@ -110,23 +119,39 @@ class FLConfig:
             raise ValueError(f"eval_every must be >= 1, got {self.eval_every}")
         if not isinstance(self.strategy_kwargs, dict):
             raise ValueError("strategy_kwargs must be a dict")
+        if not isinstance(self.task_kwargs, dict):
+            raise ValueError("task_kwargs must be a dict")
         # Component names resolve against the registries (lazy provider
-        # import — this is the single lookup path for all three axes).
+        # import — this is the single lookup path for all four axes).
         from repro.engine.registry import (
             AGGREGATOR_REGISTRY,
             CLIENT_MODE_REGISTRY,
             STRATEGY_REGISTRY,
+            TASK_REGISTRY,
         )
 
         for reg, name in (
             (STRATEGY_REGISTRY, self.strategy),
             (AGGREGATOR_REGISTRY, self.aggregator),
             (CLIENT_MODE_REGISTRY, self.client_mode),
+            (TASK_REGISTRY, self.task),
         ):
             if name not in reg:
                 raise ValueError(
                     f"unknown {reg.kind} {name!r}; available: {reg.names()}"
                 )
+        # task_kwargs validate eagerly too: constructing the task is
+        # cheap (no model params are materialized), and it surfaces bad
+        # kwargs / unsupported model configs (e.g. a non-token LM) here
+        # rather than at engine build.
+        from repro.engine.tasks import build_task
+
+        try:
+            build_task(self)
+        except (TypeError, KeyError) as e:  # bad kwarg / unknown model name
+            raise ValueError(
+                f"invalid task_kwargs for task {self.task!r}: {e}"
+            ) from None
         # Mask-gated backends need a jit-compatible selection: reject the
         # combination at construction (previously this surfaced only when
         # the engine was built) with the list of strategies that qualify.

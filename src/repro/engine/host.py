@@ -3,9 +3,12 @@
 Selection is host-side numpy (K scalars per round, DESIGN.md §8.5);
 local training vmaps over just the selected cohort inside one jit.  This
 is the direct descendant of the old ``FederatedSimulation`` round loop,
-with strategy / aggregator / client-mode dispatch replaced by the
+with strategy / aggregator / client-mode / task dispatch replaced by the
 engine registries and all rule-specific state (FedDyn ``h``) owned by
-the registered components.
+the registered components.  The workload (model, loss, eval metric)
+comes entirely from the task's ``(apply_fn, loss_fn)`` pair — this
+backend runs the MLP classification task and the transformer LM task
+through the identical hooks.
 """
 
 from __future__ import annotations
@@ -23,8 +26,9 @@ __all__ = ["HostEngine"]
 class HostEngine(Engine):
     backend = "host"
 
-    def __init__(self, cfg, train, test, n_classes: int):
-        super().__init__(cfg, train, test, n_classes)
+    def __init__(self, cfg, train, test, n_classes: int, partition_labels=None):
+        super().__init__(cfg, train, test, n_classes,
+                         partition_labels=partition_labels)
         self._build_host_jits()
 
     # ------------------------------------------------------------------

@@ -1,8 +1,9 @@
 """Named experiment presets — the paper's method table as registry entries.
 
-A preset pins the three orthogonal axes (selection strategy, client
-mode, aggregator) plus their hyperparameters for one named method, so
-benchmarks, examples, and ad-hoc scripts all build identical configs:
+A preset pins the four orthogonal axes (selection strategy, client
+mode, aggregator, task) plus their hyperparameters for one named
+method, so benchmarks, examples, and ad-hoc scripts all build identical
+configs:
 
     cfg = get_preset("fedlecc").make_config(n_clients=100, rounds=150)
     engine = make_engine(cfg, train, test, n_classes=10)
@@ -38,6 +39,8 @@ class ExperimentPreset:
     aggregator: str = "fedavg"
     mu: float = 0.0
     strategy_kwargs: Mapping = field(default_factory=dict)
+    task: str = "classification"        # any registered task
+    task_kwargs: Mapping = field(default_factory=dict)
     description: str = ""
     fast: bool = False   # in the quick benchmark subset?
 
@@ -50,6 +53,8 @@ class ExperimentPreset:
             aggregator=self.aggregator,
             mu=self.mu,
             strategy_kwargs=dict(self.strategy_kwargs),
+            task=self.task,
+            task_kwargs=dict(self.task_kwargs),
         )
         base.update(overrides)
         return FLConfig(**base)
@@ -73,6 +78,7 @@ def list_presets(fast_only: bool = False) -> list[str]:
 
 def _p(**kw) -> ExperimentPreset:
     kw["strategy_kwargs"] = MappingProxyType(dict(kw.get("strategy_kwargs", {})))
+    kw["task_kwargs"] = MappingProxyType(dict(kw.get("task_kwargs", {})))
     return register_preset(ExperimentPreset(**kw))
 
 
@@ -101,3 +107,10 @@ _p(name="fedlecc", strategy="fedlecc", strategy_kwargs={"J": 10}, fast=True,
 # beyond-paper: adaptive J (the paper's stated future work)
 _p(name="fedlecc_adaptive", strategy="fedlecc_adaptive",
    description="FedLECC with per-round adaptive J (beyond-paper)")
+# beyond-paper: the LM task cell — FedLECC's histogram-Hellinger
+# clustering over token histograms, reduced xlstm-125m clients (the
+# benchmark runner swaps in token-stream data for task="lm" presets)
+_p(name="fedlecc_lm", strategy="fedlecc", task="lm",
+   strategy_kwargs={"J": 3},
+   task_kwargs={"overrides": {"d_model": 64, "vocab": 128}},
+   description="FedLECC on the federated-LM task (token-histogram clusters)")

@@ -1,8 +1,8 @@
 """Pluggable-component registries for the federated engine.
 
 One ``Registry`` per orthogonal axis of a federated experiment
-(Fu et al., 2022 — selection, aggregation, and local-objective
-modification compose freely):
+(Fu et al., 2022 — selection, aggregation, local-objective
+modification, and the task under evaluation compose freely):
 
 - **strategies**    — client-selection policies (``repro.core.strategies``)
 - **aggregators**   — server update rules as objects with
@@ -10,8 +10,11 @@ modification compose freely):
                       (``repro.engine.aggregators``)
 - **client modes**  — local-objective gradient modifiers
                       (``repro.engine.client_modes``)
-- **presets**       — named (strategy × mode × aggregator) experiment
-                      cells (``repro.engine.presets``)
+- **tasks**         — the federated workload itself: model init, loss,
+                      eval metric, and the client feature used for
+                      clustering (``repro.engine.tasks``)
+- **presets**       — named (strategy × mode × aggregator × task)
+                      experiment cells (``repro.engine.presets``)
 
 Components self-register at class-definition time via the decorators
 (``@register_strategy("fedlecc")`` etc.), so adding a new method never
@@ -34,13 +37,16 @@ __all__ = [
     "STRATEGY_REGISTRY",
     "AGGREGATOR_REGISTRY",
     "CLIENT_MODE_REGISTRY",
+    "TASK_REGISTRY",
     "PRESET_REGISTRY",
     "register_strategy",
     "register_aggregator",
     "register_client_mode",
+    "register_task",
     "list_strategies",
     "list_aggregators",
     "list_client_modes",
+    "list_tasks",
     "mask_selection_strategies",
 ]
 
@@ -49,6 +55,7 @@ _PROVIDERS: dict[str, tuple[str, ...]] = {
     "strategy": ("repro.core.strategies",),
     "aggregator": ("repro.engine.aggregators",),
     "client_mode": ("repro.engine.client_modes",),
+    "task": ("repro.engine.tasks",),
     "preset": ("repro.engine.presets",),
 }
 
@@ -152,11 +159,13 @@ class Registry(Mapping):
 STRATEGY_REGISTRY = Registry("strategy")
 AGGREGATOR_REGISTRY = Registry("aggregator")
 CLIENT_MODE_REGISTRY = Registry("client_mode")
+TASK_REGISTRY = Registry("task")
 PRESET_REGISTRY = Registry("preset")
 
 register_strategy = STRATEGY_REGISTRY.register
 register_aggregator = AGGREGATOR_REGISTRY.register
 register_client_mode = CLIENT_MODE_REGISTRY.register
+register_task = TASK_REGISTRY.register
 
 
 def list_strategies() -> list[str]:
@@ -169,6 +178,10 @@ def list_aggregators() -> list[str]:
 
 def list_client_modes() -> list[str]:
     return CLIENT_MODE_REGISTRY.names()
+
+
+def list_tasks() -> list[str]:
+    return TASK_REGISTRY.names()
 
 
 def mask_selection_strategies() -> list[str]:

@@ -52,8 +52,10 @@ class ScaleoutEngine(MaskSelectionMixin, Engine):
     backend = "scaleout"
     requires_fedavg_aggregator = True  # aggregation IS the psum
 
-    def __init__(self, cfg, train, test, n_classes: int, mesh=None):
-        super().__init__(cfg, train, test, n_classes)
+    def __init__(self, cfg, train, test, n_classes: int, mesh=None,
+                 partition_labels=None):
+        super().__init__(cfg, train, test, n_classes,
+                         partition_labels=partition_labels)
         self._check_mask_backend()
         self.mesh = mesh if mesh is not None else self._default_mesh(cfg.n_clients)
         if "pod" not in self.mesh.shape:

@@ -1,0 +1,281 @@
+"""Pluggable federated tasks — the fourth registry axis (DESIGN.md §7).
+
+A ``Task`` owns everything workload-specific that the round protocol
+needs, so ``Engine`` and its backends stay workload-agnostic:
+
+- ``partition_labels``  — the (N,) per-example label axis the non-IID
+                          partitioner splits on (class labels for
+                          classification, derived topic labels for LM)
+- ``client_features``   — the (K, D) normalized histograms clients ship
+                          the server for clustering (label histograms
+                          for classification, token histograms for LM —
+                          FedLECC's Hellinger geometry is distribution-
+                          agnostic, so the same OPTICS + Algorithm 1
+                          pipeline drives both)
+- ``init_params``       — model init from the experiment seed
+- ``build_fns``         — the ``(apply_fn, loss_fn, metric_fn)`` triple
+                          consumed by ``local_train``, the loss poll,
+                          and evaluation.  The contract is
+                          ``loss_fn(apply_fn(params, x), y, weights)``;
+                          ``apply_fn`` may return any pytree "context"
+                          (classification returns logits; LM returns
+                          ``(hidden, head)`` so the (B, S, V) logits
+                          tensor never materializes)
+
+Tasks self-register via ``@register_task``; ``FLConfig.task`` selects
+one and ``FLConfig.task_kwargs`` parameterizes it (JSON-safe values
+only, so configs keep round-tripping through ``to_dict``/``from_dict``).
+
+``classification`` is the default and reproduces the pre-task engine
+bit-for-bit (same partition, same MLP init stream, same jitted graphs).
+``lm`` wraps ``repro.models.transformer`` + ``make_token_stream`` so
+``FLConfig(task="lm", backend="host"|"compiled"|"scaleout")`` runs a
+federated language model through the identical round protocol.
+
+Imports of the training stack are lazy (method-local) so that config
+validation — which resolves ``cfg.task`` against this module — never
+drags in model code.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.engine.registry import register_task
+
+__all__ = ["Task", "ClassificationTask", "LMTask", "build_task"]
+
+
+class Task:
+    """Workload contract consumed by ``Engine``.  Subclasses register
+    with ``@register_task("name")`` and take ``(cfg, **task_kwargs)``."""
+
+    name = "base"
+
+    def __init__(self, cfg: Any):
+        self.cfg = cfg
+
+    # -- data → partition ------------------------------------------------
+    def partition_labels(self, train) -> np.ndarray:
+        """(N,) integer labels the Dirichlet/shard partitioner splits on."""
+        raise NotImplementedError
+
+    def partition_classes(self, n_classes: int) -> int:
+        """Cardinality of the partition-label space (HD calibration)."""
+        return n_classes
+
+    def client_features(self, train, client_idx, n_classes: int) -> np.ndarray:
+        """(K, D) row-normalized histograms used for client clustering."""
+        raise NotImplementedError
+
+    # -- model -----------------------------------------------------------
+    def init_params(self, key, train, n_classes: int):
+        raise NotImplementedError
+
+    def build_fns(
+        self, train, n_classes: int
+    ) -> tuple[Callable, Callable, Callable]:
+        """``(apply_fn, loss_fn, metric_fn)`` with the composition
+        contract ``loss_fn(apply_fn(params, x), y, weights)`` and
+        ``metric_fn(apply_fn(params, x), y)`` → scalar eval metric."""
+        raise NotImplementedError
+
+
+@register_task("classification")
+class ClassificationTask(Task):
+    """The paper's workload: MLP over class-conditional image features,
+    clients clustered by label histograms.  This is the pre-task-axis
+    engine behavior, hook for hook — the default-config regression test
+    pins it bit-for-bit."""
+
+    name = "classification"
+
+    def partition_labels(self, train) -> np.ndarray:
+        return np.asarray(train.y)
+
+    def client_features(self, train, client_idx, n_classes: int) -> np.ndarray:
+        from repro.data.partition import label_histograms
+
+        return label_histograms(np.asarray(train.y), client_idx, n_classes)
+
+    def init_params(self, key, train, n_classes: int):
+        from repro.models.mlp import init_mlp
+
+        feat = train.x.shape[1]
+        return init_mlp(key, (feat, *self.cfg.hidden, n_classes))
+
+    def build_fns(self, train, n_classes: int):
+        from repro.models.mlp import accuracy, cross_entropy_loss, mlp_apply
+
+        return mlp_apply, cross_entropy_loss, accuracy
+
+
+@register_task("lm")
+class LMTask(Task):
+    """Federated language modeling: each client holds token sequences;
+    the partition splits on a derived per-sequence topic label, and the
+    server clusters clients by *token histograms* — the LM analogue of
+    label-distribution skew (the histogram-Hellinger pipeline transfers
+    unchanged).
+
+    task_kwargs (all JSON-safe):
+
+    - ``model``      — registered model-config name (default
+                       ``"xlstm-125m"``); must be a token LM
+                       (``input_mode="tokens"``, no MTP head — rejected
+                       up front otherwise)
+    - ``reduced``    — use the smoke-test variant (default True)
+    - ``overrides``  — dict of ``ModelConfig`` field overrides applied
+                       after reduction (shrink further for tests, force
+                       dtype, ...).  ``dtype`` defaults to float32 so
+                       cross-backend conformance holds at f32 tolerance.
+    - ``hist_bins``  — token-histogram bins for clustering and the
+                       partition-label space (default 64; tokens are
+                       folded mod ``hist_bins``)
+    """
+
+    name = "lm"
+
+    def __init__(self, cfg: Any, model: str = "xlstm-125m",
+                 reduced: bool = True, overrides: dict | None = None,
+                 hist_bins: int = 64):
+        super().__init__(cfg)
+        import dataclasses
+
+        from repro.configs import get_config
+
+        mc = get_config(model, reduced=bool(reduced))
+        ov = {"dtype": "float32"}
+        ov.update(overrides or {})
+        mc = dataclasses.replace(mc, **ov)
+        # The federated loss covers token-LM training (next-token CE +
+        # MoE router aux); modality stubs and the MTP aux head are not
+        # wired in — reject up front rather than silently diverging
+        # from transformer.loss_fn.
+        if mc.input_mode != "tokens":
+            raise ValueError(
+                f"task='lm' supports input_mode='tokens' only; model "
+                f"{mc.name!r} has input_mode={mc.input_mode!r}"
+            )
+        if mc.mtp:
+            raise ValueError(
+                f"task='lm' does not wire the MTP aux loss into the "
+                f"federated round; disable it for model {mc.name!r} via "
+                f"task_kwargs={{'overrides': {{'mtp': False}}}}"
+            )
+        self.model_cfg = mc
+        self.hist_bins = int(hist_bins)
+
+    # -- data → partition ------------------------------------------------
+    def _fold(self, tokens: np.ndarray) -> np.ndarray:
+        return np.asarray(tokens) % self.hist_bins
+
+    def partition_labels(self, train) -> np.ndarray:
+        """Dominant (folded) token of each sequence — a cheap topic
+        proxy; callers with real topic structure pass
+        ``partition_labels=`` to ``make_engine`` instead (data
+        override, see ``Engine.__init__``)."""
+        x = self._fold(train.x)
+        labs = [np.bincount(row, minlength=self.hist_bins).argmax() for row in x]
+        return np.asarray(labs, dtype=np.int64)
+
+    def partition_classes(self, n_classes: int) -> int:
+        return self.hist_bins
+
+    def client_features(self, train, client_idx, n_classes: int) -> np.ndarray:
+        x = self._fold(train.x)
+        h = np.stack([
+            np.bincount(x[ix].ravel(), minlength=self.hist_bins)
+            for ix in client_idx
+        ]).astype(np.float64)
+        return h / np.maximum(h.sum(1, keepdims=True), 1e-12)
+
+    # -- model -----------------------------------------------------------
+    def init_params(self, key, train, n_classes: int):
+        from repro.models.transformer import init_transformer
+
+        hi = int(np.asarray(train.x).max())
+        if hi >= self.model_cfg.vocab:
+            raise ValueError(
+                f"token id {hi} out of range for model vocab "
+                f"{self.model_cfg.vocab} — regenerate the stream with "
+                f"vocab <= model vocab or override the model config"
+            )
+        return init_transformer(key, self.model_cfg)
+
+    def build_fns(self, train, n_classes: int):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.models.transformer import forward, output_head
+
+        mc = self.model_cfg
+
+        def lm_apply(params, x):
+            """Full-sequence hidden states + the output head — the
+            "logits context" (logits themselves are never (B,S,V)) —
+            plus the MoE router aux loss (0 for dense models)."""
+            h, _, aux, _ = forward(params, mc, {"tokens": x})
+            return h, output_head(params, mc), aux
+
+        def _chunk_scan(ctx, labels, per_chunk):
+            """Accumulate ``per_chunk(logits_f32, yc)`` over seq chunks of
+            ``mc.loss_chunk``; seq_len must divide evenly (or be <= it)."""
+            h, head, _ = ctx
+            s = h.shape[1]
+            c = min(mc.loss_chunk, s)
+            nc = s // c
+            assert nc * c == s, (
+                f"seq_len {s} must be a multiple of loss_chunk {c}"
+            )
+
+            def body(carry, i):
+                hc = jax.lax.dynamic_slice_in_dim(h, i * c, c, axis=1)
+                yc = jax.lax.dynamic_slice_in_dim(labels, i * c, c, axis=1)
+                logits = (hc @ head).astype(jnp.float32)
+                return carry + per_chunk(logits, yc), None
+
+            tot, _ = jax.lax.scan(body, jnp.zeros(()), jnp.arange(nc))
+            return tot, s
+
+        def lm_loss(ctx, labels, weights=None):
+            """Mean next-token CE; ``weights`` are optional per-sequence
+            weights (the mask/weights slot of the classification loss)."""
+            b = labels.shape[0]
+            w = (jnp.ones((b,), jnp.float32) if weights is None
+                 else weights.astype(jnp.float32))
+
+            def nll_sum(logits, yc):
+                logz = jax.nn.logsumexp(logits, axis=-1)
+                gold = jnp.take_along_axis(
+                    logits, yc[..., None].astype(jnp.int32), axis=-1
+                )[..., 0]
+                return jnp.sum((logz - gold) * w[:, None])
+
+            tot, s = _chunk_scan(ctx, labels, nll_sum)
+            loss = tot / jnp.maximum(w.sum() * s, 1e-9)
+            if mc.moe:  # router load-balancing term, as transformer.loss_fn
+                loss = loss + mc.moe.router_aux_weight * ctx[2]
+            return loss
+
+        def lm_metric(ctx, labels):
+            """Next-token accuracy (the ``test_acc`` slot)."""
+
+            def correct(logits, yc):
+                pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                return jnp.sum((pred == yc.astype(jnp.int32)).astype(jnp.float32))
+
+            tot, s = _chunk_scan(ctx, labels, correct)
+            return tot / (labels.shape[0] * s)
+
+        return lm_apply, lm_loss, lm_metric
+
+
+def build_task(cfg) -> Task:
+    """Instantiate ``cfg.task`` with ``cfg.task_kwargs`` (the single
+    construction path used by the engine and by config validation)."""
+    from repro.engine.registry import TASK_REGISTRY
+
+    return TASK_REGISTRY[cfg.task](cfg, **cfg.task_kwargs)

@@ -1,12 +1,20 @@
-"""Client-side local training — jit/vmap-able.
+"""Client-side local training — jit/vmap-able, task-agnostic.
 
 ``local_train`` runs ``max_steps`` minibatch-SGD steps on one client's
-(masked, padded) data, sampling batch indices from the valid region with
-replacement inside the scan (statistically equivalent to shuffled epochs
-for the paper's regime; lets every client share one static step count).
-Clients whose true step budget τ_i < max_steps freeze after τ_i steps
-(``jnp.where`` gating), which is what makes FedNova's τ-normalization
-meaningful under heterogeneous dataset sizes.
+(masked, padded) data, sampling batch (row) indices from the valid
+region with replacement inside the scan (statistically equivalent to
+shuffled epochs for the paper's regime; lets every client share one
+static step count).  Clients whose true step budget τ_i < max_steps
+freeze after τ_i steps (``jnp.where`` gating), which is what makes
+FedNova's τ-normalization meaningful under heterogeneous dataset sizes.
+
+The workload enters only through the task's ``(apply_fn, loss_fn)``
+pair (``repro.engine.tasks``) with the composition contract
+``loss_fn(apply_fn(params, batch_x), batch_y, None)`` — ``apply_fn``
+may return any pytree (MLP logits for classification; ``(hidden,
+head)`` for the transformer LM task), so this loop trains every
+registered task unchanged.  Rows are examples: feature vectors for
+classification, whole token sequences for LM.
 
 Gradient modifiers (FedProx / FedDyn / any registered client mode) plug
 in via ``mode``: the name is a static jit argument resolved against the

@@ -39,7 +39,8 @@ from repro.models.common import activation, lecun_init, rms_norm, layer_norm, ro
 
 __all__ = [
     "init_transformer", "transformer_specs", "layer_flags",
-    "forward", "loss_fn", "init_cache", "prefill", "decode_step",
+    "forward", "loss_fn", "output_head",
+    "init_cache", "prefill", "decode_step",
 ]
 
 
@@ -458,9 +459,15 @@ def forward(params, cfg, batch, mesh=None, collect_cache: bool = False):
 # ---------------------------------------------------------------------------
 
 
+def output_head(params, cfg):
+    """The (d_model, vocab) output projection — tied embedding transpose
+    or the separate head.  Public so downstream losses (e.g. the
+    federated LM task) share one untying rule with ``loss_fn``."""
+    return params["embed"].T if cfg.tie_embeddings else params["head"]
+
+
 def _logits(params, cfg, h):
-    head = params["embed"].T if cfg.tie_embeddings else params["head"]
-    return h @ head
+    return h @ output_head(params, cfg)
 
 
 def loss_fn(params, cfg, batch, mesh=None):

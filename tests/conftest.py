@@ -26,6 +26,19 @@ def data():
     return train, test
 
 
+LM_VOCAB = 32
+
+
+@pytest.fixture(scope="session")
+def lm_data():
+    """Tiny Markov token streams for the LM-task conformance grid."""
+    from repro.data.synthetic import make_token_stream
+
+    train = make_token_stream(48, 16, LM_VOCAB, seed=0)
+    test = make_token_stream(16, 16, LM_VOCAB, seed=1)
+    return train, test
+
+
 def fl_cfg(**kw):
     """The canonical tiny-task FLConfig (12 clients, m=4, 3 rounds).
     Overriding ``strategy`` without ``strategy_kwargs`` resets the
@@ -36,6 +49,31 @@ def fl_cfg(**kw):
         n_clients=12, m=4, rounds=3, strategy="fedlecc",
         strategy_kwargs={"J": 3}, hidden=(16,), eval_samples=16,
         eval_every=1, target_hd=0.8, seed=0,
+    )
+    if "strategy" in kw and "strategy_kwargs" not in kw:
+        defaults["strategy_kwargs"] = {}
+    defaults.update(kw)
+    return FLConfig(**defaults)
+
+
+def lm_fl_cfg(**kw):
+    """The canonical tiny LM-task FLConfig: a micro attention model
+    (cheap to compile — the grid builds one engine per strategy ×
+    backend cell) over ``lm_data`` token streams."""
+    from repro.engine import FLConfig
+
+    defaults = dict(
+        task="lm",
+        task_kwargs={
+            "model": "stablelm-3b",
+            "overrides": {"d_model": 32, "n_heads": 2, "n_kv_heads": 2,
+                          "head_dim": 16, "d_ff": 64, "vocab": LM_VOCAB,
+                          "loss_chunk": 16, "attn_chunk": 16, "remat": False},
+            "hist_bins": 16,
+        },
+        n_clients=8, m=3, rounds=2, strategy="fedlecc",
+        strategy_kwargs={"J": 2}, batch_size=4, eval_samples=4,
+        eval_every=1, target_hd=0.8, max_steps_cap=3, seed=0,
     )
     if "strategy" in kw and "strategy_kwargs" not in kw:
         defaults["strategy_kwargs"] = {}

@@ -1,8 +1,10 @@
 """Cross-backend conformance: every mask-capable strategy must select the
 same clients and land on (all)close final params on every backend —
-host, compiled, and scaleout — from the same seed.  Also guards the
-streaming-API contract: ``engine.rounds()`` yields frozen
-``RoundResult``s with a stable field set on all backends.
+host, compiled, and scaleout — from the same seed, for every registered
+task (the MLP classification task and the transformer LM task run the
+identical grid).  Also guards the streaming-API contract:
+``engine.rounds()`` yields frozen ``RoundResult``s with a stable field
+set on all backends.
 """
 
 import dataclasses
@@ -14,7 +16,7 @@ import jax
 import numpy as np
 import pytest
 
-from conftest import fl_cfg as _cfg
+from conftest import LM_VOCAB, fl_cfg as _cfg, lm_fl_cfg as _lm_cfg
 from repro.engine import (
     BACKENDS,
     RoundResult,
@@ -22,15 +24,23 @@ from repro.engine import (
     mask_selection_strategies,
 )
 
-ROUNDS = 3
 MASK_STRATEGIES = mask_selection_strategies()
+TASKS = ("classification", "lm")
+# LM cells build a transformer per engine; 2 rounds keeps the grid cheap
+# while still flowing aggregated params back into a second round.
+ROUNDS = {"classification": 3, "lm": 2}
+N_CLASSES = {"classification": 10, "lm": LM_VOCAB}
 
 
-def _run(strategy, backend, data):
-    train, test = data
-    engine = make_engine(_cfg(strategy=strategy, backend=backend),
-                         train, test, n_classes=10)
-    results = list(engine.rounds(ROUNDS))
+def _task_cfg(task, **kw):
+    return _lm_cfg(**kw) if task == "lm" else _cfg(**kw)
+
+
+def _run(task, strategy, backend, datasets):
+    train, test = datasets
+    engine = make_engine(_task_cfg(task, strategy=strategy, backend=backend),
+                         train, test, n_classes=N_CLASSES[task])
+    results = list(engine.rounds(ROUNDS[task]))
     return results, engine.params
 
 
@@ -42,18 +52,20 @@ def test_mask_strategy_registry_covers_issue_set():
 
 
 @pytest.mark.parametrize("strategy", MASK_STRATEGIES)
-def test_cross_backend_conformance(strategy, data):
-    """For each strategy: identical per-round selections and allclose
-    final params across host/compiled/scaleout from one seed."""
-    runs = {b: _run(strategy, b, data) for b in BACKENDS}
+@pytest.mark.parametrize("task", TASKS)
+def test_cross_backend_conformance(task, strategy, data, lm_data):
+    """For each task × strategy: identical per-round selections and
+    allclose final params across host/compiled/scaleout from one seed."""
+    datasets = lm_data if task == "lm" else data
+    runs = {b: _run(task, strategy, b, datasets) for b in BACKENDS}
     ref_results, ref_params = runs["host"]
-    assert len(ref_results) == ROUNDS
+    assert len(ref_results) == ROUNDS[task]
     for backend in ("compiled", "scaleout"):
         results, params = runs[backend]
         for a, b in zip(ref_results, results):
             assert a.selected == b.selected, (
-                f"{strategy}: host vs {backend} selected different clients "
-                f"in round {a.round}: {a.selected} vs {b.selected}"
+                f"{task}/{strategy}: host vs {backend} selected different "
+                f"clients in round {a.round}: {a.selected} vs {b.selected}"
             )
             assert a.comm_mb == pytest.approx(b.comm_mb)
             assert a.mean_selected_loss == pytest.approx(
@@ -62,7 +74,8 @@ def test_cross_backend_conformance(strategy, data):
         for x, y in zip(jax.tree.leaves(ref_params), jax.tree.leaves(params)):
             np.testing.assert_allclose(
                 np.asarray(x), np.asarray(y), atol=1e-5,
-                err_msg=f"{strategy}: host vs {backend} final params diverge",
+                err_msg=f"{task}/{strategy}: host vs {backend} final params "
+                        f"diverge",
             )
 
 
@@ -72,13 +85,18 @@ ROUND_RESULT_FIELDS = (
     "test_loss", "test_acc",
 )
 
+# every backend on the classification task + one LM cell (the LM grid
+# above already streams RoundResults on all three backends)
+_STREAM_CELLS = [("classification", b) for b in BACKENDS] + [("lm", "host")]
 
-@pytest.mark.parametrize("backend", BACKENDS)
-def test_rounds_yields_frozen_stable_round_results(backend, data):
+
+@pytest.mark.parametrize("task,backend", _STREAM_CELLS)
+def test_rounds_yields_frozen_stable_round_results(task, backend, data, lm_data):
     """Regression guard for benchmark consumers: the record type, its
-    field set, and its frozenness must not drift on any backend."""
-    train, test = data
-    engine = make_engine(_cfg(backend=backend), train, test, n_classes=10)
+    field set, and its frozenness must not drift on any backend/task."""
+    train, test = lm_data if task == "lm" else data
+    engine = make_engine(_task_cfg(task, backend=backend), train, test,
+                         n_classes=N_CLASSES[task])
     results = list(engine.rounds(2))
     assert len(results) == 2
     for r in results:
@@ -117,18 +135,64 @@ for x, y in zip(jax.tree.leaves(host.params), jax.tree.leaves(scale.params)):
 print("SCALEOUT_ENGINE_MULTIPOD_OK", scale.n_pods)
 """
 
+# LM task on a real multi-pod mesh: transformer client stacks sharded
+# P("pod"), selection-weighted psum over pods — must match host exactly.
+_LM_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np
+from repro.data.synthetic import make_token_stream
+from repro.engine import FLConfig, make_engine
+
+V = 32
+train = make_token_stream(48, 16, V, seed=0)
+test = make_token_stream(16, 16, V, seed=1)
+kw = dict(task="lm",
+          task_kwargs={"model": "stablelm-3b",
+                       "overrides": {"d_model": 32, "n_heads": 2,
+                                     "n_kv_heads": 2, "head_dim": 16,
+                                     "d_ff": 64, "vocab": V,
+                                     "loss_chunk": 16, "attn_chunk": 16,
+                                     "remat": False},
+                       "hist_bins": 16},
+          n_clients=8, m=3, rounds=2, strategy="fedlecc",
+          strategy_kwargs={"J": 2}, batch_size=4, eval_samples=4,
+          eval_every=1, target_hd=0.8, max_steps_cap=3, seed=0)
+host = make_engine(FLConfig(backend="host", **kw), train, test, V)
+scale = make_engine(FLConfig(backend="scaleout", **kw), train, test, V)
+assert scale.n_pods > 1, f"expected a multi-pod mesh, got {scale.n_pods}"
+rh, rs = list(host.rounds(2)), list(scale.rounds(2))
+for a, b in zip(rh, rs):
+    assert a.selected == b.selected, (a.selected, b.selected)
+for x, y in zip(jax.tree.leaves(host.params), jax.tree.leaves(scale.params)):
+    np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+print("SCALEOUT_LM_MULTIPOD_OK", scale.n_pods)
+"""
+
+
+def _run_subprocess(script, marker):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run(
+        [sys.executable, "-c", script], env=env, capture_output=True,
+        text=True, timeout=900,
+    )
+    assert marker in r.stdout, (
+        f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
+    )
+
 
 @pytest.mark.slow
 def test_scaleout_engine_multipod_matches_host():
     """ScaleoutEngine on a real multi-pod (virtual-device) mesh — the
     psum over a >1 pod axis — still matches the host backend.  Subprocess
     so the device-count flag doesn't leak into other tests."""
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    r = subprocess.run(
-        [sys.executable, "-c", _SCRIPT], env=env, capture_output=True,
-        text=True, timeout=900,
-    )
-    assert "SCALEOUT_ENGINE_MULTIPOD_OK" in r.stdout, (
-        f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
-    )
+    _run_subprocess(_SCRIPT, "SCALEOUT_ENGINE_MULTIPOD_OK")
+
+
+@pytest.mark.slow
+def test_scaleout_lm_multipod_matches_host():
+    """The LM task on a real multi-pod mesh: per-client transformer
+    stacks over pods, selection-weighted psum aggregation — identical
+    selections and allclose params vs the host backend."""
+    _run_subprocess(_LM_SCRIPT, "SCALEOUT_LM_MULTIPOD_OK")

@@ -6,7 +6,7 @@ import dataclasses
 import numpy as np
 import pytest
 
-from conftest import fl_cfg as _cfg
+from conftest import fl_cfg as _cfg, lm_fl_cfg as _lm_cfg
 from repro.engine import (
     FLConfig,
     Registry,
@@ -15,6 +15,7 @@ from repro.engine import (
     list_aggregators,
     list_client_modes,
     list_strategies,
+    list_tasks,
 )
 from repro.engine.aggregators import get_aggregator
 from repro.engine.presets import get_preset, list_presets
@@ -25,6 +26,7 @@ def test_registries_populated():
     assert "fedlecc" in list_strategies() and "random" in list_strategies()
     assert list_aggregators() == ["fedavg", "feddyn", "fednova"]
     assert list_client_modes() == ["feddyn", "fedprox", "plain"]
+    assert list_tasks() == ["classification", "lm"]
 
 
 def test_custom_registration_does_not_hide_builtins():
@@ -87,6 +89,10 @@ def test_flconfig_validation():
         _cfg(aggregator="nope")
     with pytest.raises(ValueError, match="unknown client_mode"):
         _cfg(client_mode="nope")
+    with pytest.raises(ValueError, match="unknown task"):
+        _cfg(task="vision")
+    with pytest.raises(ValueError, match="task_kwargs must be a dict"):
+        _cfg(task_kwargs=[1, 2])
     with pytest.raises(ValueError, match="m must be"):
         _cfg(m=50)  # > n_clients
     with pytest.raises(ValueError, match="partition"):
@@ -104,6 +110,18 @@ def test_flconfig_dict_round_trip():
     assert restored.hidden == (32, 16)
     with pytest.raises(ValueError, match="unknown FLConfig keys"):
         FLConfig.from_dict({**d, "bogus": 1})
+
+
+def test_flconfig_lm_task_round_trip():
+    """task / task_kwargs (nested dicts) survive the JSON round-trip."""
+    import json
+
+    cfg = _lm_cfg(backend="scaleout")
+    assert cfg.task == "lm"
+    d = cfg.to_dict()
+    restored = FLConfig.from_dict(json.loads(json.dumps(d)))
+    assert restored == cfg
+    assert restored.task_kwargs["overrides"]["d_model"] == 32
 
 
 # ----------------------------------------------------------------- presets
@@ -198,6 +216,74 @@ def test_aggregator_objects_standalone(data):
     cfg = _cfg(strategy="random", aggregator="fedavg")
     agg = get_aggregator("fedavg", cfg)
     assert agg.init_state(None) is None and not agg.needs_state
+
+
+# ----------------------------------------------------- task-axis engine
+# Golden values captured from the pre-task-axis engine (commit 3dcf2ea)
+# for the canonical tiny config: the default task="classification" path
+# must reproduce them exactly — the Task refactor is a pure re-plumbing.
+_GOLDEN_SELECTED = [(0, 2, 4, 5), (4, 5, 9, 10), (5, 7, 9, 10)]
+_GOLDEN_W0_ROW0 = [0.07630947977304459, -0.2940053939819336,
+                   -0.06507953256368637, -0.21803271770477295]
+
+
+def test_default_task_matches_pre_refactor_golden(data):
+    """Same selections and final params (one seed) as before the Task
+    registry axis existed — the default config is a zero-behavior-change
+    refactor."""
+    import jax
+
+    train, test = data
+    engine = make_engine(_cfg(), train, test, n_classes=10)
+    results = list(engine.rounds(3))
+    assert [r.selected for r in results] == _GOLDEN_SELECTED
+    w0 = next(np.asarray(x) for x in jax.tree.leaves(engine.params)
+              if np.asarray(x).ndim == 2)
+    np.testing.assert_allclose(w0[0, :4], _GOLDEN_W0_ROW0, atol=1e-6)
+
+
+def test_task_owns_clustering_features(data, lm_data):
+    """classification clusters on (K, n_classes) label histograms; lm
+    clusters on (K, hist_bins) token histograms — both row-normalized."""
+    train, test = data
+    eng = make_engine(_cfg(), train, test, n_classes=10)
+    assert eng.hists.shape == (12, 10)
+    lm_train, lm_test = lm_data
+    lm_eng = make_engine(_lm_cfg(), lm_train, lm_test, n_classes=32)
+    assert lm_eng.hists.shape == (8, 16)  # hist_bins=16 in the tiny cfg
+    for h in (eng.hists, lm_eng.hists):
+        np.testing.assert_allclose(h.sum(axis=1), 1.0, atol=1e-9)
+
+
+def test_lm_task_rejects_non_token_models():
+    """Modality stubs and the MTP head are not wired into the federated
+    loss — the task must fail at construction, not mid-round."""
+    with pytest.raises(ValueError, match="input_mode"):
+        _lm_cfg(task_kwargs={"model": "stablelm-3b",
+                             "overrides": {"input_mode": "frames"}})
+    with pytest.raises(ValueError, match="MTP"):
+        _lm_cfg(task_kwargs={"model": "stablelm-3b",
+                             "overrides": {"mtp": True}})
+    # unknown model names / bad kwargs surface as ValueError, keeping
+    # the fail-with-ValueError-at-construction contract
+    with pytest.raises(ValueError, match="invalid task_kwargs"):
+        _lm_cfg(task_kwargs={"model": "nope"})
+    with pytest.raises(ValueError, match="invalid task_kwargs"):
+        _lm_cfg(task_kwargs={"bogus_kwarg": 1})
+
+
+def test_partition_labels_override(data):
+    """The make_engine task-data override: a caller-provided label axis
+    drives the non-IID split instead of the task's derived labels."""
+    train, test = data
+    default = make_engine(_cfg(), train, test, n_classes=10)
+    override = make_engine(_cfg(), train, test, n_classes=10,
+                           partition_labels=np.asarray(train.y))
+    for a, b in zip(default.client_idx, override.client_idx):
+        np.testing.assert_array_equal(a, b)  # same labels → same split
+    with pytest.raises(ValueError, match="partition_labels"):
+        make_engine(_cfg(), train, test, n_classes=10,
+                    partition_labels=np.zeros(3, np.int64))
 
 
 # ------------------------------------------------- cross-backend parity
