@@ -1,19 +1,44 @@
-"""Fig 3 — learning curves / rounds-to-accuracy (the −22%-rounds claim).
+"""Round benchmarks: rounds-to-accuracy (Fig 3) and round wall-clock.
 
-Reports, per method, the first round at which each target accuracy is
-reached, and FedLECC's saving relative to FedAvg.
+Default mode — Fig 3 learning curves / rounds-to-accuracy (the
+−22%-rounds claim): reports, per method, the first round at which each
+target accuracy is reached, and FedLECC's saving relative to FedAvg.
+
+``--wallclock`` — the engine-performance trajectory (DESIGN.md §8.6):
+times the *same* canonical round on the execution variants
+
+    host             numpy selection + vmapped cohort (paper-faithful)
+    compiled_eager   legacy compiled: every client trains, mask-gated sum
+    compiled_gather  compiled + static cohort gather (trains only m)
+    fused            compiled + scan-fused round chunks, donated carry
+
+for both registered tasks and writes ``BENCH_rounds.json`` — the
+repo-root artifact the CI ``perf-smoke`` job regenerates and uploads so
+the perf trajectory is tracked per commit.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import time
+
 import numpy as np
 
-from benchmarks.fl_common import ensure_runs, methods_for
 from repro.engine import rounds_to_accuracy
 
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+BENCH_JSON = os.path.join(ROOT, "BENCH_rounds.json")
 
+VARIANTS = ("host", "compiled_eager", "compiled_gather", "fused")
+
+
+# -------------------------------------------------- fig3 (default mode)
 def main(full: bool = False, rounds: int | None = None,
          targets=(0.4, 0.5, 0.6)) -> list[tuple]:
+    from benchmarks.fl_common import ensure_runs, methods_for
+
     methods = methods_for(full)
     seeds = [0, 1] if full else [0]
     rounds = rounds or (100 if full else 60)
@@ -47,6 +72,139 @@ def main(full: bool = False, rounds: int | None = None,
     return rows
 
 
+# ------------------------------------------------------- wallclock mode
+def _engine_for(variant: str, task: str, *, n_clients: int, m: int,
+                rounds: int, smoke: bool):
+    """One engine per (variant × task) cell, sharing a single seed/data
+    regime so the timed rounds are the same federated computation."""
+    from repro.engine import FLConfig, make_engine
+
+    backend = "host" if variant == "host" else "compiled"
+    fuse = rounds if variant == "fused" else 0
+    kw = dict(
+        n_clients=n_clients, m=m, rounds=rounds, seed=0, target_hd=0.9,
+        backend=backend, fuse_rounds=fuse,
+        # evaluate only at round 0 and the final round, so the timed
+        # region measures the round loop, not the eval cadence
+        eval_every=max(rounds, 1),
+    )
+    if task == "lm":
+        from repro.data.synthetic import make_token_stream
+
+        vocab = 32
+        kw.update(
+            task="lm",
+            task_kwargs={
+                "model": "stablelm-3b",
+                "overrides": {"d_model": 32, "n_heads": 2, "n_kv_heads": 2,
+                              "head_dim": 16, "d_ff": 64, "vocab": vocab,
+                              "loss_chunk": 16, "attn_chunk": 16,
+                              "remat": False},
+                "hist_bins": 16,
+            },
+            batch_size=4, eval_samples=8, max_steps_cap=4,
+        )
+        train = make_token_stream(12 * n_clients, 16, vocab, seed=0)
+        test = make_token_stream(16, 16, vocab, seed=1)
+        n_classes = vocab
+    else:
+        from repro.data import make_classification
+
+        n = 2_000 if smoke else 20_000
+        kw.update(eval_samples=64 if not smoke else 16,
+                  hidden=(64,) if smoke else (200, 200))
+        train = make_classification(n, n_features=64, n_classes=10, seed=0)
+        test = make_classification(max(n // 10, 200), n_features=64,
+                                   n_classes=10, seed=1)
+        n_classes = 10
+    cfg = FLConfig(**kw)
+    kwargs = {"cohort_gather": False} if variant == "compiled_eager" else {}
+    return make_engine(cfg, train, test, n_classes=n_classes, **kwargs)
+
+
+def _time_rounds(engine, rounds: int) -> float:
+    """Wall-clock seconds for one ``rounds()`` call after an identical
+    warm-up call.  A same-length warm-up call reproduces the exact fused
+    chunk structure (round-0 chunk, steady-state chunks, tail), so every
+    executable the timed call dispatches is already compiled.  Streaming
+    results synchronize per round / per chunk, so the timed region
+    includes every device→host edge the round loop actually pays."""
+    for _ in engine.rounds(rounds):
+        pass
+    t0 = time.perf_counter()
+    for _ in engine.rounds(rounds):
+        pass
+    return time.perf_counter() - t0
+
+
+def wallclock_main(rounds: int, n_clients: int, m: int, tasks, smoke: bool,
+                   out: str) -> dict:
+    import jax
+
+    results = []
+    for task in tasks:
+        base = None
+        for variant in VARIANTS:
+            engine = _engine_for(variant, task, n_clients=n_clients, m=m,
+                                 rounds=rounds, smoke=smoke)
+            wall = _time_rounds(engine, rounds)
+            row = {
+                "task": task, "variant": variant,
+                "n_clients": n_clients, "m": m, "rounds": rounds,
+                "wall_s": round(wall, 4),
+                "s_per_round": round(wall / rounds, 5),
+            }
+            if variant == "compiled_eager":
+                base = wall
+            row["speedup_vs_compiled_eager"] = (
+                round(base / wall, 2) if base else None
+            )
+            results.append(row)
+            print(f"[wallclock] {task:>14s} {variant:<16s} "
+                  f"{row['s_per_round']*1e3:9.1f} ms/round "
+                  f"(x{row['speedup_vs_compiled_eager'] or '—'} vs eager)",
+                  flush=True)
+        del base
+    payload = {
+        "benchmark": "bench_rounds --wallclock",
+        "smoke": smoke,
+        "jax": jax.__version__,
+        "device": str(jax.devices()[0].platform),
+        "results": results,
+    }
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {out}")
+    return payload
+
+
+def _parse_args(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--wallclock", action="store_true",
+                   help="time the execution variants instead of fig3")
+    p.add_argument("--full", action="store_true", help="(fig3) full grid")
+    p.add_argument("--rounds", type=int, default=None)
+    p.add_argument("--n-clients", type=int, default=100)
+    p.add_argument("--m", type=int, default=10)
+    p.add_argument("--tasks", nargs="+", default=["classification", "lm"],
+                   choices=["classification", "lm"])
+    p.add_argument("--smoke", action="store_true",
+                   help="(wallclock) tiny CI config: 12 clients, small "
+                        "model/data — trajectory tracking, not absolute "
+                        "numbers")
+    p.add_argument("--out", default=BENCH_JSON)
+    return p.parse_args(argv)
+
+
 if __name__ == "__main__":
-    for r in main():
-        print(",".join(str(x) for x in r))
+    args = _parse_args()
+    if args.wallclock:
+        if args.smoke:
+            args.n_clients, args.m = 12, 4
+            args.rounds = args.rounds or 4
+        wallclock_main(args.rounds or 10, args.n_clients, args.m,
+                       args.tasks, args.smoke, args.out)
+    else:
+        for r in main(full=args.full, rounds=args.rounds):
+            print(",".join(str(x) for x in r))

@@ -6,11 +6,17 @@ and loss values".  This module is the exact bytes ledger used both by the
 simulation (``repro.federated.simulation``) and by the Table III
 benchmark:
 
-  per round:  m * P * bytes_per_param   (model download to selected)
-            + m * P * bytes_per_param   (update upload from selected)
+  per round:  m * P * bytes_per_param          (model download to selected)
+            + m * P * upload_bytes_per_param   (update upload from selected)
             + K * 4                     (loss scalars, if the strategy polls)
   one-time:   K * C * 4                 (label histograms, if used)
             + K * 4                     (cluster assignments pushed back)
+
+``upload_bytes_per_param`` defaults to ``bytes_per_param`` (fp32 both
+ways); quantized-delta uploads (``FLConfig.compress_bits``,
+``repro.federated.compression``) set it to ``bits / 8`` — per-leaf
+quantization scales are a handful of floats per client and are omitted
+as negligible next to the parameter payload.
 
 FedLECC's saving in the paper comes from a small, well-chosen ``m`` —
 the protocol overhead (histograms once + K loss floats/round) is
@@ -40,6 +46,11 @@ class CommModel:
     K: int
     n_classes: int
     bytes_per_param: int = 4
+    upload_bytes_per_param: float | None = None  # None → bytes_per_param
+
+    def __post_init__(self) -> None:
+        if self.upload_bytes_per_param is None:
+            self.upload_bytes_per_param = float(self.bytes_per_param)
 
     def model_mb(self) -> float:
         return self.n_params * self.bytes_per_param / _MB
@@ -52,7 +63,9 @@ class CommModel:
         return (hist + assignments) / _MB
 
     def round_mb(self, m_selected: int, needs_losses: bool) -> float:
-        model_traffic = 2 * m_selected * self.n_params * self.bytes_per_param
+        model_traffic = m_selected * self.n_params * (
+            self.bytes_per_param + self.upload_bytes_per_param
+        )
         loss_poll = self.K * 4 if needs_losses else 0
         return (model_traffic + loss_poll) / _MB
 

@@ -33,7 +33,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["fedlecc_select", "fedlecc_select_jax", "selection_weights"]
+__all__ = [
+    "fedlecc_select",
+    "fedlecc_select_jax",
+    "selection_weights",
+    "cohort_indices",
+]
 
 
 def fedlecc_select(
@@ -165,3 +170,17 @@ def selection_weights(
     mask = jnp.asarray(selected_mask)
     gated = jnp.where(mask, sizes, 0.0)
     return gated / jnp.maximum(gated.sum(), 1e-12)
+
+
+def cohort_indices(selected_mask: jax.Array, m: int) -> jax.Array:
+    """(m,) sorted client indices of the participation mask, computable
+    inside jit (``m`` is static, so the shape is static and the gather
+    that consumes it never retraces — DESIGN.md §8.6).
+
+    Matches ``np.where(mask)[0]`` for the masks strategies produce
+    (exactly ``m`` true entries, the property-tested invariant); if a
+    mask ever carried fewer, the tail pads with index 0.
+    """
+    return jnp.nonzero(
+        jnp.asarray(selected_mask), size=m, fill_value=0
+    )[0].astype(jnp.int32)

@@ -27,6 +27,18 @@ segment reductions) so the mask can live inside a compiled round.
 ``select`` and ``select_mask_jax`` must agree exactly for the same
 inputs and rng state — the property suite asserts this.
 
+A third, stricter tier powers the fused execution mode
+(``FLConfig.fuse_rounds``, DESIGN.md §8.6): strategies whose per-round
+decision can run *fully traced* — no host-side numpy in the round path,
+any randomness drawn from a JAX PRNG key — expose
+``select_mask_traced(losses, key) -> (K,) bool mask`` and set
+``supports_traced_selection``.  For strategies deterministic given
+losses (``fedlecc``, ``lossonly``, ``haccs``) the traced mask equals the
+``select_mask_jax`` mask exactly; ``clusterrandom`` moves its random
+draws onto the JAX stream (key-derived scores through the same
+Algorithm 1 core), so its fused selections are a different — but equally
+uniform — sequence than the host numpy stream.
+
 All are host-side numpy: K scalars/vectors per round (DESIGN.md §8.5).
 """
 
@@ -56,6 +68,7 @@ class SelectionStrategy:
     needs_losses: bool = False          # does the server poll all clients for loss?
     needs_histograms: bool = False      # one-time label-histogram upload?
     supports_compiled_selection = False  # has a jit-compatible select_mask_jax?
+    supports_traced_selection = False    # has a fully-traced select_mask_traced?
     K: int = field(default=0, init=False)
     client_sizes: np.ndarray | None = field(default=None, init=False)
 
@@ -88,6 +101,7 @@ class FedLECC(SelectionStrategy):
     needs_losses: bool = True
     needs_histograms: bool = True
     supports_compiled_selection = True
+    supports_traced_selection = True
     labels: np.ndarray | None = field(default=None, init=False)
     n_clusters: int = field(default=0, init=False)
     cluster_method: str = field(default="optics", init=False)
@@ -123,6 +137,21 @@ class FedLECC(SelectionStrategy):
         import jax.numpy as jnp
 
         J = max(1, min(self._round_J(np.asarray(losses)), self.n_clusters))
+        return fedlecc_select_jax(
+            jnp.asarray(self.labels), jnp.asarray(losses, jnp.float32),
+            m=min(self.m, self.K), J=J, n_clusters=self.n_clusters,
+        )
+
+    def select_mask_traced(self, losses, key):
+        """(K,) mask with ``losses`` a *traced* array (inside a scanned
+        round chunk, DESIGN.md §8.6).  FedLECC's J is loss-independent
+        (``fedlecc_adaptive``, whose J is data-dependent and enters
+        ``fedlecc_select_jax`` as a static argument, opts out), so the
+        traced mask is exactly the ``select_mask_jax`` mask."""
+        import jax.numpy as jnp
+
+        del key  # deterministic given losses
+        J = max(1, min(self.J, self.n_clusters))
         return fedlecc_select_jax(
             jnp.asarray(self.labels), jnp.asarray(losses, jnp.float32),
             m=min(self.m, self.K), J=J, n_clusters=self.n_clusters,
@@ -194,6 +223,7 @@ class HACCS(SelectionStrategy):
     name: str = "haccs"
     needs_histograms: bool = True
     supports_compiled_selection = True
+    supports_traced_selection = True
     labels: np.ndarray | None = field(default=None, init=False)
     latency: np.ndarray | None = field(default=None, init=False)
     n_clusters: int = field(default=0, init=False)
@@ -243,6 +273,12 @@ class HACCS(SelectionStrategy):
             : min(self.m, self.K)
         ]
         return jnp.zeros((self.K,), jnp.bool_).at[take].set(True)
+
+    def select_mask_traced(self, losses, key):
+        """Latency-driven selection ignores both losses and randomness,
+        so the traced mask is a constant folded at trace time."""
+        del losses, key
+        return self.select_mask_jax(None, None)
 
 
 @register_strategy("fedcls")
@@ -328,6 +364,7 @@ class LossOnly(SelectionStrategy):
     name: str = "lossonly"
     needs_losses: bool = True
     supports_compiled_selection = True
+    supports_traced_selection = True
 
     def select(self, rnd, losses, rng) -> np.ndarray:
         # float32 to match select_mask_jax exactly (same ordering + ties)
@@ -343,6 +380,10 @@ class LossOnly(SelectionStrategy):
             jnp.asarray(losses, jnp.float32), min(self.m, self.K)
         )  # ties -> lowest index, matching the stable numpy argsort
         return jnp.zeros((self.K,), jnp.bool_).at[top].set(True)
+
+    def select_mask_traced(self, losses, key):
+        del key  # deterministic given losses
+        return self.select_mask_jax(losses, None)
 
 
 @register_strategy("clusterrandom")
@@ -404,6 +445,32 @@ class ClusterRandom(FedLECC):
             n_clusters=self.n_clusters,
         )
 
+    def select_mask_traced(self, losses, key):
+        """Fused-mode selection: the cluster/client permutations move
+        from the host numpy stream onto the JAX PRNG stream (same
+        integer-score composition, same Algorithm 1 core), so the whole
+        draw lives inside the scanned round chunk.  Equally uniform over
+        clusters and members, but a *different* random sequence than
+        ``select``/``select_mask_jax`` for the same seed — fused
+        clusterrandom runs are self-consistent, not host-lockstep."""
+        import jax
+        import jax.numpy as jnp
+
+        del losses
+        k_cluster, k_client = jax.random.split(key)
+        labels = jnp.asarray(self.labels)
+        cluster_rank = jax.random.permutation(k_cluster, self.n_clusters)
+        client_rank = jax.random.permutation(k_client, self.K)
+        scores = (
+            (self.n_clusters - cluster_rank[labels]) * (self.K + 1)
+            + (self.K - client_rank)
+        ).astype(jnp.float32)
+        return fedlecc_select_jax(
+            labels, scores, m=min(self.m, self.K),
+            J=max(1, min(self.J, self.n_clusters)),
+            n_clusters=self.n_clusters,
+        )
+
 
 @register_strategy("fedlecc_adaptive")
 @dataclass
@@ -419,6 +486,9 @@ class FedLECCAdaptive(FedLECC):
     """
 
     name: str = "fedlecc_adaptive"
+    # J is data-dependent but enters fedlecc_select_jax as a *static*
+    # argument, so the selection cannot run fully traced.
+    supports_traced_selection = False
 
     def _round_J(self, losses: np.ndarray) -> int:
         clusters = np.unique(self.labels)

@@ -16,7 +16,12 @@ One API, four orthogonal axes, three backends:
 - ``host``         — ``HostEngine``: numpy selection + vmapped cohort
 - ``compiled``     — ``CompiledEngine``: jitted selection/round with the
                      participation mask gating aggregation (scale-out
-                     semantics on one device)
+                     semantics on one device); trains only the gathered
+                     m-client cohort (static shapes via ``jnp.take``)
+- ``fused``        — ``FusedEngine``: the compiled semantics with whole
+                     round chunks as one donated ``lax.scan``
+                     (``FLConfig.fuse_rounds > 0``; selection fully
+                     traced via ``select_mask_traced``)
 - ``scaleout``     — ``ScaleoutEngine``: the mesh round (clients blocked
                      over the ``pod`` axis, shard_map + selection-
                      weighted psum), plus ``make_scaleout_round`` for
@@ -32,24 +37,26 @@ One API, four orthogonal axes, three backends:
                      ``get_preset(name).make_config(...)``
 
 Strategy × backend support matrix, identical for both tasks (mask-gated
-backends need a jit-compatible ``select_mask_jax``; FLConfig validation
-enforces this up front):
+backends need a jit-compatible ``select_mask_jax``; ``fuse_rounds > 0``
+additionally needs a fully-traced ``select_mask_traced``; FLConfig
+validation enforces both up front):
 
-    strategy          host   compiled   scaleout
-    ----------------  ----   --------   --------
-    fedlecc            ✓        ✓          ✓
-    fedlecc_adaptive   ✓        ✓          ✓
-    poc                ✓        ✓          ✓
-    lossonly           ✓        ✓          ✓
-    clusterrandom      ✓        ✓          ✓
-    haccs              ✓        ✓          ✓
-    random             ✓        —          —
-    fedcls             ✓        —          —
-    fedcor             ✓        —          —
+    strategy          host   compiled   scaleout   fuse_rounds
+    ----------------  ----   --------   --------   -----------
+    fedlecc            ✓        ✓          ✓            ✓
+    fedlecc_adaptive   ✓        ✓          ✓            —
+    poc                ✓        ✓          ✓            —
+    lossonly           ✓        ✓          ✓            ✓
+    clusterrandom      ✓        ✓          ✓            ✓ (jax rng)
+    haccs              ✓        ✓          ✓            ✓
+    random             ✓        —          —            —
+    fedcls             ✓        —          —            —
+    fedcor             ✓        —          —            —
 
 (``compiled``/``scaleout`` additionally require ``client_mode="plain"``;
-``scaleout`` aggregates inside the mesh round, so ``aggregator`` must be
-``"fedavg"``.)
+``scaleout`` aggregates inside the mesh round and ``fuse_rounds``/
+``compress_bits`` aggregate inside the compiled round, so those three
+require ``aggregator="fedavg"``.)
 
 Typical use::
 
@@ -112,6 +119,7 @@ __all__ = [
     "rounds_to_accuracy",
     "HostEngine",
     "CompiledEngine",
+    "FusedEngine",
     "ScaleoutEngine",
     "make_scaleout_round",
     "ExperimentPreset",
@@ -130,6 +138,7 @@ _LAZY = {
     "rounds_to_accuracy": ("repro.engine.base", "rounds_to_accuracy"),
     "HostEngine": ("repro.engine.host", "HostEngine"),
     "CompiledEngine": ("repro.engine.compiled", "CompiledEngine"),
+    "FusedEngine": ("repro.engine.fused", "FusedEngine"),
     "ScaleoutEngine": ("repro.engine.scaleout", "ScaleoutEngine"),
     "make_scaleout_round": ("repro.engine.scaleout", "make_scaleout_round"),
     "ExperimentPreset": ("repro.engine.presets", "ExperimentPreset"),
@@ -169,8 +178,21 @@ def make_engine(cfg: FLConfig, train, test, n_classes: int, **kwargs):
       integer array the non-IID partitioner splits on instead of the
       task's derived labels (e.g. ground-truth topic ids for LM
       corpora — see ``examples/federated_lm.py``).
+    - ``cohort_gather=``    — (compiled only) ``False`` restores the
+      legacy every-client-trains path (the scale-out-semantics
+      reference); the default gathers and trains just the m-client
+      cohort.  Ignored when ``cfg.fuse_rounds > 0`` (fused chunks
+      always gather).
+
+    ``cfg.fuse_rounds > 0`` selects the scan-fused execution mode of the
+    compiled backend (``FusedEngine``, DESIGN.md §8.6).
     """
     if cfg.backend == "compiled":
+        if cfg.fuse_rounds > 0:
+            from repro.engine.fused import FusedEngine
+
+            kwargs.pop("cohort_gather", None)  # fused always gathers
+            return FusedEngine(cfg, train, test, n_classes, **kwargs)
         from repro.engine.compiled import CompiledEngine
 
         return CompiledEngine(cfg, train, test, n_classes, **kwargs)

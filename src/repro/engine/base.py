@@ -24,6 +24,10 @@ Backends implement the hooks:
 - ``ScaleoutEngine`` (``repro.engine.scaleout``) — the same mask-gated
   semantics at mesh scale: clients sharded over the ``pod`` axis via
   shard_map, aggregation as the selection-weighted psum.
+- ``FusedEngine``    (``repro.engine.fused``)    — the compiled
+  semantics with whole round *chunks* device-resident: one scanned jit
+  per chunk, selection fully traced (``FLConfig.fuse_rounds``,
+  DESIGN.md §8.6).
 
 ``CompiledEngine`` and ``ScaleoutEngine`` share one selection path,
 ``MaskSelectionMixin`` — strategy-produced jit-compatible masks
@@ -63,6 +67,13 @@ __all__ = [
     "mask_selection_strategies",
     "rounds_to_accuracy",
 ]
+
+
+def _mean_loss(sel_losses) -> float:
+    """Mean local-training loss over the cohort; ``nan`` (without numpy's
+    ``RuntimeWarning``) when a strategy selected nobody this round."""
+    ls = np.asarray(sel_losses)
+    return float(ls.mean()) if ls.size else float("nan")
 
 
 @dataclass(frozen=True)
@@ -197,12 +208,19 @@ class Engine:
 
         # --- communication ledger (histogram traffic is the task's
         # clustering-feature dimension: n_classes for classification,
-        # hist_bins for the LM task) ---
-        self.comm = CommModel(self.n_params, cfg.n_clients, self.hists.shape[1])
+        # hist_bins for the LM task; quantized uploads shrink the
+        # per-round upload bytes) ---
+        self.comm = CommModel(
+            self.n_params, cfg.n_clients, self.hists.shape[1],
+            upload_bytes_per_param=(
+                cfg.compress_bits / 8.0 if cfg.compress_bits else None
+            ),
+        )
         self.comm_mb = self.comm.one_time_mb(self.strategy.needs_histograms)
 
         self._build_shared_jits()
         self._round = 0
+        self._key = None  # the rounds() PRNG carry, persisted across calls
         self.history: dict[str, list] = {
             "round": [], "test_acc": [], "test_loss": [], "comm_mb": [],
             "mean_selected_loss": [], "selected": [],
@@ -276,6 +294,21 @@ class Engine:
         tl, ta = self._evaluate(self.params, self.test_x, self.test_y)
         return float(tl), float(ta)
 
+    def _carry_key(self) -> jax.Array:
+        """The persisted ``rounds()`` PRNG carry.  The stream from round
+        0 is unchanged from the pre-persistence implementation (one
+        3-way split per round off ``PRNGKey(seed + 17)``); persisting the
+        carried key just removes the O(rounds) re-split replay a resumed
+        ``rounds()`` call used to pay, and lets the fused backend thread
+        the same carry through its scanned chunks."""
+        if self._key is None:
+            self._key = jax.random.PRNGKey(self.cfg.seed + 17)
+            # legacy resume (a deserialized engine with _round planted
+            # but no stored key): replay the per-round splits once
+            for _ in range(self._round):
+                self._key, _, _ = jax.random.split(self._key, 3)
+        return self._key
+
     # -- the canonical round loop --------------------------------------
     def rounds(
         self,
@@ -285,10 +318,7 @@ class Engine:
         """Stream ``RoundResult`` records, one per federated round."""
         cfg = self.cfg
         n_rounds = n_rounds or cfg.rounds
-        key = jax.random.PRNGKey(cfg.seed + 17)
-        # resume key stream where a previous rounds()/run() call stopped
-        for _ in range(self._round):
-            key, _, _ = jax.random.split(key, 3)
+        key = self._carry_key()
 
         start = self._round
         for rnd in range(start, start + n_rounds):
@@ -310,10 +340,11 @@ class Engine:
                 test_loss, test_acc = self.evaluate()
 
             self._round = rnd + 1
+            self._key = key
             result = RoundResult(
                 round=rnd,
                 selected=tuple(int(i) for i in sel),
-                mean_selected_loss=float(np.mean(np.asarray(sel_losses))),
+                mean_selected_loss=_mean_loss(sel_losses),
                 comm_mb=float(self.comm_mb),
                 test_loss=test_loss,
                 test_acc=test_acc,

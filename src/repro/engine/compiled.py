@@ -1,18 +1,39 @@
 """CompiledEngine — selection inside the compiled computation.
 
-Mirrors the scale-out mesh round (``repro.federated.scaleout``): every
-client runs local training every round — as pods on the production mesh
-always do — and *selection enters as a weight vector*: the FedLECC mask
-(``fedlecc_select_jax``) is turned into aggregation weights
+Mirrors the scale-out mesh round (``repro.federated.scaleout``):
+*selection enters as a weight vector* — the strategy's jit-compatible
+mask (``select_mask_jax``) is turned into aggregation weights
 (``selection_weights``) that zero out unselected clients, exactly the
-mask-gated psum of DESIGN.md §3b, here realized as a mask-gated weighted
-sum over the stacked client axis.
+mask-gated psum of DESIGN.md §3b realized on one device.
+
+Per-round compute is proportional to the **cohort**, not the
+population: since ``cfg.m`` is static, the round gathers the m selected
+client stacks with ``jnp.take`` (static shapes — the traced values are
+just the indices, so nothing retraces), trains only those m clients,
+and aggregates the cohort stack with the cohort slice of the mask-gated
+weight vector.  Unselected clients contribute exactly what they did in
+the ungathered all-K path — zero-weighted terms — so the result is
+numerically identical (the conformance suite locks it against the host
+and scaleout backends); what changes is that their ~(K−m)/K share of
+the training FLOPs is no longer spent.  ``cohort_gather=False``
+(``make_engine`` passthrough) keeps the legacy every-client-trains
+path, retained as the scale-out-semantics reference and as the
+benchmark baseline (``benchmarks/bench_rounds.py --wallclock``).
 
 Because per-client PRNG keys are derived by client index (``fold_in``,
-see ``Engine._client_keys``) and zero-weight clients contribute exact
-zeros to the aggregation, a ``CompiledEngine`` round is numerically
-identical to the ``HostEngine`` round for the same config — the
-cross-backend equivalence test asserts this.
+see ``Engine._client_keys``), a client's local-training stream is
+identical whichever cohort it runs in, and a ``CompiledEngine`` round is
+numerically identical to the ``HostEngine`` round for the same config —
+the cross-backend equivalence test asserts this.
+
+``FLConfig.compress_bits > 0`` swaps the fedavg aggregation for
+``compressed_fedavg`` (``repro.federated.compression``): each selected
+client's delta is stochastically quantized to ``compress_bits`` before
+the weighted reduce, modeling the quantized upload counted by the
+``CommModel`` ledger.  The quantization PRNG stream derives from the
+round's train key (``fold_in(key, K)`` — client fold_ins use 0..K−1,
+so the tag never collides), which keeps it reproducible and shared with
+the fused backend.
 
 Requirements: the strategy must provide a jit-compatible selection
 (``supports_compiled_selection``), and ``client_mode`` must be
@@ -28,6 +49,8 @@ compatibility.
 
 from __future__ import annotations
 
+from functools import partial
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -42,10 +65,12 @@ __all__ = ["CompiledEngine", "make_scaleout_round"]
 class CompiledEngine(MaskSelectionMixin, Engine):
     backend = "compiled"
 
-    def __init__(self, cfg, train, test, n_classes: int, partition_labels=None):
+    def __init__(self, cfg, train, test, n_classes: int, partition_labels=None,
+                 cohort_gather: bool = True):
         super().__init__(cfg, train, test, n_classes,
                          partition_labels=partition_labels)
         self._check_mask_backend()
+        self.cohort_gather = bool(cohort_gather)
         self._taus_j = jnp.asarray(self.taus)
         self._sizes_j = jnp.asarray(self.sizes, jnp.float32)
         self._build_compiled_jits()
@@ -71,13 +96,54 @@ class CompiledEngine(MaskSelectionMixin, Engine):
 
         self._train_all = jax.jit(_train_all)
 
+        def _cohort_train(params, idx, key):
+            """Train just the m-client cohort: ``idx`` is traced but its
+            shape is static (m = cfg.m), so the gathers and the vmap keep
+            one compiled graph across rounds — the no-retrace guard test
+            pins this."""
+            keys = self._client_keys(key, idx)
+            return vmapped(
+                params,
+                jnp.take(self.xs, idx, axis=0),
+                jnp.take(self.ys, idx, axis=0),
+                jnp.take(self.mask, idx, axis=0),
+                jnp.take(self._taus_j, idx),
+                keys,
+            )
+
+        # raw body reused inside the fused round chunk (repro.engine.fused)
+        self._cohort_train_raw = _cohort_train
+        self._train_cohort = jax.jit(_cohort_train)
+
         def _masked_weights(mask):
             return selection_weights(mask, self._sizes_j)
 
         self._masked_weights = jax.jit(_masked_weights)
 
+        if cfg.compress_bits:
+            from repro.federated.compression import compressed_fedavg
+
+            self._compressed_agg = jax.jit(
+                partial(compressed_fedavg, bits=cfg.compress_bits)
+            )
+        self.last_quant_error: float | None = None
+
+    @staticmethod
+    def _quant_key(train_key: jax.Array, n_clients: int) -> jax.Array:
+        """The stochastic-rounding stream for compressed aggregation —
+        derived from the round's train key with tag K (client fold_ins
+        use 0..K−1, so this never collides with a client stream)."""
+        return jax.random.fold_in(train_key, n_clients)
+
     # -- hooks (select comes from MaskSelectionMixin) --------------------
     def local_train(self, rnd: int, sel: np.ndarray, key: jax.Array):
+        if self.cfg.compress_bits:
+            self._qkey = self._quant_key(key, self.cfg.n_clients)
+        if self.cohort_gather:
+            stacked, losses = self._train_cohort(
+                self.params, jnp.asarray(sel, jnp.int32), key
+            )
+            return stacked, np.asarray(losses)
         stacked, losses = self._train_all(
             self.params, self.xs, self.ys, self.mask, self._taus_j, key
         )
@@ -85,13 +151,35 @@ class CompiledEngine(MaskSelectionMixin, Engine):
 
     def aggregate(self, rnd: int, sel: np.ndarray, payload) -> None:
         stacked = payload
-        mask = jnp.zeros((self.cfg.n_clients,), jnp.bool_).at[
-            jnp.asarray(sel)
-        ].set(True)
-        w = self._masked_weights(mask)
+        sel_j = jnp.asarray(sel)
+        mask = jnp.zeros((self.cfg.n_clients,), jnp.bool_).at[sel_j].set(True)
+        w_full = self._masked_weights(mask)
+
+        if self.cfg.compress_bits:
+            # Quantization models the *cohort's* upload, so the reduce
+            # always runs over the m selected stacks (extracted from the
+            # all-K payload when cohort_gather is off).
+            if self.cohort_gather:
+                cohort = stacked
+            else:
+                cohort = jax.tree.map(
+                    lambda s: jnp.take(s, sel_j, axis=0), stacked
+                )
+            new_params, qerr = self._compressed_agg(
+                cohort, self.params, jnp.take(w_full, sel_j), self._qkey
+            )
+            self.last_quant_error = float(qerr)
+            self.params = new_params
+            return
+
+        if self.cohort_gather:
+            w = jnp.take(w_full, sel_j)
+            taus = jnp.asarray(self.taus[sel], jnp.float32)
+        else:
+            w = w_full
+            taus = jnp.asarray(self.taus, jnp.float32)
         new_params = self.aggregator.aggregate(
-            stacked, self.params, w, jnp.asarray(self.taus, jnp.float32),
-            self.agg_state, n_selected=len(sel),
+            stacked, self.params, w, taus, self.agg_state, n_selected=len(sel),
         )
         self.agg_state = self.aggregator.update_state(
             self.agg_state, stacked, self.params, w, n_selected=len(sel)

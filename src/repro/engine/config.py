@@ -16,6 +16,17 @@ backward compatibility) and extended with:
   token streams with topic skew); ``task_kwargs`` parameterizes the
   task (JSON-safe values only — e.g. the LM model name / reduced flag /
   ``ModelConfig`` field overrides / histogram bins).
+- ``fuse_rounds`` — device-resident fused execution (DESIGN.md §8.6):
+  when > 0, the compiled backend runs chunks of up to that many rounds
+  as one jitted ``lax.scan`` with a donated ``(params, key)`` carry —
+  selection must then run fully traced, so the strategy needs
+  ``select_mask_traced`` (``supports_traced_selection``); requires
+  ``backend="compiled"`` and ``aggregator="fedavg"``.
+- ``compress_bits`` — int8-style delta quantization of the cohort
+  upload inside the mask-gated aggregation (0 = off, 8 = int8;
+  ``repro.federated.compression``); requires ``backend="compiled"``
+  and ``aggregator="fedavg"``, and is counted in the ``CommModel``
+  upload ledger.
 - eager validation in ``__post_init__`` — component names (including
   ``task``) are checked against the engine registries, so a typo fails
   at config construction rather than mid-run; mask-gated backends
@@ -68,6 +79,42 @@ def mask_backend_aggregator_error(aggregator: str) -> str:
     )
 
 
+def fused_strategy_error(strategy: str) -> str:
+    from repro.engine.registry import traced_selection_strategies
+
+    return (
+        f"fuse_rounds > 0 runs selection fully traced inside one scanned "
+        f"round chunk, which strategy {strategy!r} does not support "
+        f"(no select_mask_traced); set fuse_rounds=0 or use one of: "
+        f"{traced_selection_strategies()}"
+    )
+
+
+def fused_backend_error(backend: str) -> str:
+    return (
+        f"fuse_rounds > 0 is a compiled-backend execution mode (the round "
+        f"chunk is one jitted lax.scan); got backend={backend!r} — use "
+        f"backend='compiled' or set fuse_rounds=0"
+    )
+
+
+def fused_aggregator_error(aggregator: str) -> str:
+    return (
+        "fuse_rounds > 0 aggregates inside the scanned round chunk "
+        f"(mask-gated fedavg semantics); got aggregator={aggregator!r} — "
+        "use aggregator='fedavg' or set fuse_rounds=0"
+    )
+
+
+def compress_backend_error(backend: str, aggregator: str) -> str:
+    return (
+        "compress_bits > 0 quantizes cohort deltas inside the compiled "
+        "mask-gated fedavg aggregation; it requires backend='compiled' "
+        f"and aggregator='fedavg' (got backend={backend!r}, "
+        f"aggregator={aggregator!r})"
+    )
+
+
 @dataclass
 class FLConfig:
     n_clients: int = 100
@@ -95,6 +142,8 @@ class FLConfig:
     backend: str = "host"          # host | compiled | scaleout
     task: str = "classification"   # any registered task (classification | lm)
     task_kwargs: dict = field(default_factory=dict)  # JSON-safe task params
+    fuse_rounds: int = 0           # >0: scan-fuse round chunks (compiled only)
+    compress_bits: int = 0         # >0: quantized cohort-delta aggregation
 
     # ------------------------------------------------------------------
     def __post_init__(self) -> None:
@@ -167,6 +216,33 @@ class FLConfig:
                 )
         if self.backend == "scaleout" and self.aggregator != "fedavg":
             raise ValueError(mask_backend_aggregator_error(self.aggregator))
+        # Fused execution: round chunks run as one scanned jit, so the
+        # strategy's per-round decision must itself be traceable and the
+        # aggregation must be the in-chunk mask-gated fedavg.
+        if self.fuse_rounds < 0:
+            raise ValueError(
+                f"fuse_rounds must be >= 0 (0 = off), got {self.fuse_rounds}"
+            )
+        if self.fuse_rounds > 0:
+            if self.backend != "compiled":
+                raise ValueError(fused_backend_error(self.backend))
+            if not getattr(
+                STRATEGY_REGISTRY[self.strategy],
+                "supports_traced_selection", False,
+            ):
+                raise ValueError(fused_strategy_error(self.strategy))
+            if self.aggregator != "fedavg":
+                raise ValueError(fused_aggregator_error(self.aggregator))
+        if self.compress_bits:
+            if not 2 <= self.compress_bits <= 8:
+                raise ValueError(
+                    f"compress_bits must be 0 (off) or in [2, 8], got "
+                    f"{self.compress_bits}"
+                )
+            if self.backend != "compiled" or self.aggregator != "fedavg":
+                raise ValueError(
+                    compress_backend_error(self.backend, self.aggregator)
+                )
 
     # ------------------------------------------------------------------
     def to_dict(self) -> dict:

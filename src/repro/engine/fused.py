@@ -1,0 +1,212 @@
+"""FusedEngine — whole round chunks device-resident (DESIGN.md §8.6).
+
+The eager round loop — even fully compiled — pays per-round host costs:
+poll losses to numpy, run the strategy, re-upload the mask, dispatch
+three separate jits, and copy the params pytree on every aggregation.
+``FLConfig.fuse_rounds > 0`` removes all of it for the compiled backend:
+chunks of up to ``fuse_rounds`` rounds run as **one** jitted
+``lax.scan`` whose carry is ``(params, prng_key)`` and whose per-step
+body is the canonical round —
+
+    poll_losses → select_mask_traced → cohort gather+train → fedavg
+
+with selection *fully traced*: the strategy's ``select_mask_traced``
+hook (``supports_traced_selection``) expresses the per-round decision in
+jax ops, drawing any randomness from the JAX PRNG stream, so no host
+synchronization happens between rounds.  The carry arguments are
+**donated** (``donate_argnums``), so the params pytree is updated in
+place across the chunk instead of being copied once per round.
+
+Chunk boundaries respect the absolute ``eval_every`` cadence: a chunk
+always ends at an evaluation round (and at the final round of the
+call), so evaluation sees exactly the params the eager loop would have
+evaluated — ``rounds()`` still streams one frozen ``RoundResult`` per
+round by unpacking the scanned per-round outputs (masks + cohort
+losses), and chunked ``rounds()`` calls stay equivalent to one
+contiguous call.  Each distinct chunk length compiles once and is
+cached; with an aligned ``fuse_rounds``/``eval_every`` there are at most
+three lengths in play (the round-0 chunk, the steady-state chunk, the
+tail).
+
+PRNG discipline is unchanged (§8.3): the carry key splits 3-ways per
+scan step exactly like the eager loop, and per-client training keys are
+``fold_in``-derived by client index — so for strategies whose selection
+is deterministic given losses (``fedlecc``, ``lossonly``, ``haccs``)
+a fused run reproduces the eager compiled run round for round.
+``clusterrandom`` draws its random scores from a key folded off the
+poll key (a stream the eager path never consumes), making fused runs
+self-consistent but intentionally not host-lockstep.
+
+Consumption contract: state (params, round counter, comm ledger, PRNG
+carry) commits at *chunk* granularity — abandoning the ``rounds()``
+iterator mid-chunk leaves the engine at the chunk boundary, not at the
+last yielded round.  Donation has teeth: every chunk *consumes* the
+buffers behind ``engine.params`` and the PRNG carry, so (1) a reference
+to ``engine.params`` taken before a ``rounds()`` call raises ``Array
+has been deleted`` on first access afterwards — snapshot with
+``jax.device_get(engine.params)`` (or ``jax.tree.map(jnp.copy, ...)``)
+instead of aliasing; (2) an exception that lands between a chunk
+dispatch and its commit (e.g. ``KeyboardInterrupt``) can leave the
+engine's params already donated — treat an interrupted fused engine as
+dead and rebuild it.  The eager backends share neither hazard.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.selection import cohort_indices, selection_weights
+from repro.engine.base import RoundResult, _mean_loss
+from repro.engine.compiled import CompiledEngine
+from repro.engine.config import fused_aggregator_error, fused_strategy_error
+
+__all__ = ["FusedEngine"]
+
+
+class FusedEngine(CompiledEngine):
+    """CompiledEngine semantics with scan-fused, donated round chunks."""
+
+    backend = "compiled"  # fused is an execution mode of the compiled backend
+
+    def __init__(self, cfg, train, test, n_classes: int, partition_labels=None):
+        super().__init__(cfg, train, test, n_classes,
+                         partition_labels=partition_labels,
+                         cohort_gather=True)
+        # defense in depth behind the up-front FLConfig validation
+        if not getattr(self.strategy, "supports_traced_selection", False):
+            raise ValueError(fused_strategy_error(cfg.strategy))
+        if cfg.aggregator != "fedavg":
+            raise ValueError(fused_aggregator_error(cfg.aggregator))
+        self._chunk_cache: dict[int, Callable] = {}
+        self._build_fused_round_body()
+
+    # ------------------------------------------------------------------
+    def _build_fused_round_body(self) -> None:
+        from repro.federated.aggregation import fedavg
+
+        cfg = self.cfg
+        K = cfg.n_clients
+        m = min(cfg.m, K)
+        strategy = self.strategy
+        needs_losses = strategy.needs_losses
+        sizes = self._sizes_j
+        xs, ys, dmask = self.xs, self.ys, self.mask
+        poll = self._poll_losses
+        cohort_train = self._cohort_train_raw
+        compress = cfg.compress_bits
+        if compress:
+            from functools import partial
+
+            from repro.federated.compression import compressed_fedavg
+
+            compressed = partial(compressed_fedavg, bits=compress)
+
+        def _round_body(carry, _):
+            params, key = carry
+            # identical key discipline to Engine.rounds(): one 3-way
+            # split per round off the persisted carry
+            key, k_poll, k_train = jax.random.split(key, 3)
+            if needs_losses:
+                losses = poll(params, xs, ys, dmask, k_poll)
+            else:
+                losses = jnp.zeros((K,), jnp.float32)
+            # selection randomness rides a stream the eager path never
+            # consumes (fold tag K ≥ any client index), so deterministic
+            # strategies stay bit-compatible with the eager loop
+            mask = strategy.select_mask_traced(
+                losses, jax.random.fold_in(k_poll, K)
+            )
+            idx = cohort_indices(mask, m)
+            w = jnp.take(selection_weights(mask, sizes), idx)
+            stacked, sel_losses = cohort_train(params, idx, k_train)
+            if compress:
+                new_params, _ = compressed(
+                    stacked, params, w, self._quant_key(k_train, K)
+                )
+            else:
+                new_params = fedavg(stacked, w)
+            return (new_params, key), (mask, sel_losses)
+
+        self._round_body = _round_body
+
+    def _chunk_step(self, length: int) -> Callable:
+        """The jitted chunk runner for one static chunk length — compiled
+        once per distinct length, carry buffers donated."""
+        fn = self._chunk_cache.get(length)
+        if fn is None:
+            body = self._round_body
+
+            def run(params, key):
+                (params, key), (masks, sel_losses) = jax.lax.scan(
+                    body, (params, key), None, length=length
+                )
+                return params, key, masks, sel_losses
+
+            fn = jax.jit(run, donate_argnums=(0, 1))
+            self._chunk_cache[length] = fn
+        return fn
+
+    def _chunk_len(self, rnd: int, end: int) -> int:
+        """Rounds to fuse starting at absolute round ``rnd``: capped by
+        ``fuse_rounds`` and clipped so the chunk ends exactly at the next
+        ``eval_every``-cadence round or at the call's final round —
+        evaluation therefore always sees chunk-boundary params."""
+        ev = self.cfg.eval_every
+        next_eval = rnd if rnd % ev == 0 else (rnd // ev + 1) * ev
+        boundary = min(next_eval, end - 1)
+        return max(1, min(self.cfg.fuse_rounds, boundary - rnd + 1))
+
+    # -- the fused round loop ------------------------------------------
+    def rounds(
+        self,
+        n_rounds: int | None = None,
+        callback=None,
+    ) -> Iterator[RoundResult]:
+        """Stream one ``RoundResult`` per round, computed chunk-at-a-time
+        on device.  Same record semantics as ``Engine.rounds()``; state
+        commits per chunk (see module docstring)."""
+        cfg = self.cfg
+        n_rounds = n_rounds or cfg.rounds
+        key = self._carry_key()
+        start = self._round
+        end = start + n_rounds
+        rnd = start
+        while rnd < end:
+            length = self._chunk_len(rnd, end)
+            params, key, masks, sel_losses = self._chunk_step(length)(
+                self.params, key
+            )
+            # commit the chunk before yielding anything from it
+            self.params, self._key = params, key
+            self._round = rnd + length
+            masks = np.asarray(masks)
+            sel_losses = np.asarray(sel_losses)
+            results = []
+            for i in range(length):
+                r = rnd + i
+                sel = np.where(masks[i])[0]
+                self.comm_mb += self.comm.round_mb(
+                    len(sel), self.strategy.needs_losses
+                )
+                test_loss = test_acc = None
+                if i == length - 1 and (
+                    r % cfg.eval_every == 0 or r == end - 1
+                ):
+                    test_loss, test_acc = self.evaluate()
+                results.append(RoundResult(
+                    round=r,
+                    selected=tuple(int(j) for j in sel),
+                    mean_selected_loss=_mean_loss(sel_losses[i]),
+                    comm_mb=float(self.comm_mb),
+                    test_loss=test_loss,
+                    test_acc=test_acc,
+                ))
+            rnd += length
+            for result in results:
+                if callback is not None:
+                    callback(result)
+                yield result

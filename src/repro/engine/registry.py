@@ -48,6 +48,7 @@ __all__ = [
     "list_client_modes",
     "list_tasks",
     "mask_selection_strategies",
+    "traced_selection_strategies",
 ]
 
 # Modules whose import populates each registry (decorator side-effects).
@@ -192,4 +193,14 @@ def mask_selection_strategies() -> list[str]:
     return [
         n for n in STRATEGY_REGISTRY.names()
         if getattr(STRATEGY_REGISTRY[n], "supports_compiled_selection", False)
+    ]
+
+
+def traced_selection_strategies() -> list[str]:
+    """Names of strategies whose per-round selection runs fully traced
+    (``select_mask_traced`` — randomness on the JAX PRNG stream), the
+    requirement for ``FLConfig.fuse_rounds > 0`` (DESIGN.md §8.6)."""
+    return [
+        n for n in STRATEGY_REGISTRY.names()
+        if getattr(STRATEGY_REGISTRY[n], "supports_traced_selection", False)
     ]

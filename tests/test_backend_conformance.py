@@ -79,6 +79,38 @@ def test_cross_backend_conformance(task, strategy, data, lm_data):
             )
 
 
+# ------------------------------------------- compressed-aggregation cell
+@pytest.mark.parametrize("task", TASKS)
+def test_compressed_aggregation_close_to_exact(task, data, lm_data):
+    """ROADMAP item (f): the conformance grid as the harness for the
+    compressed-aggregation engine mode.  ``compress_bits=8`` stochastic-
+    rounds each selected client's delta to int8 before the weighted
+    reduce, so the compiled trajectory must stay allclose to the exact
+    host trajectory at a loosened tolerance — and the upload ledger must
+    actually shrink."""
+    datasets = lm_data if task == "lm" else data
+    train, test = datasets
+    exact = make_engine(
+        _task_cfg(task, backend="host"), train, test,
+        n_classes=N_CLASSES[task],
+    )
+    quant = make_engine(
+        _task_cfg(task, backend="compiled", compress_bits=8), train, test,
+        n_classes=N_CLASSES[task],
+    )
+    re_, rq = list(exact.rounds(ROUNDS[task])), list(quant.rounds(ROUNDS[task]))
+    # round 0 selects from identical initial params: must agree exactly
+    assert re_[0].selected == rq[0].selected
+    # int8 uploads: strictly less traffic than the fp32 ledger
+    assert rq[-1].comm_mb < re_[-1].comm_mb
+    for x, y in zip(jax.tree.leaves(exact.params), jax.tree.leaves(quant.params)):
+        np.testing.assert_allclose(
+            np.asarray(x), np.asarray(y), atol=5e-3,
+            err_msg=f"{task}: compressed aggregation drifted beyond the "
+                    f"quantization-error budget",
+        )
+
+
 # ------------------------------------------------- streaming API contract
 ROUND_RESULT_FIELDS = (
     "round", "selected", "mean_selected_loss", "comm_mb",

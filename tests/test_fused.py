@@ -1,0 +1,254 @@
+"""Fused execution mode (``FLConfig.fuse_rounds``, DESIGN.md §8.6) and
+the static cohort gather of the compiled backend:
+
+- config validation of ``fuse_rounds`` / ``compress_bits``
+- fused-vs-eager equivalence (deterministic traced strategies)
+- chunked-vs-contiguous ``rounds()`` equivalence for ``fuse_rounds > 0``
+- the no-retrace guard: the cohort train step and each fused chunk
+  length compile exactly once across 3+ rounds
+- cohort gather vs the legacy ungathered mask-gated path
+- the empty-selection ``mean_selected_loss`` regression guard
+"""
+
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import fl_cfg as _cfg
+from repro.engine import FLConfig, make_engine
+from repro.engine.registry import traced_selection_strategies
+
+TRACED = traced_selection_strategies()
+
+
+def _max_err(a, b):
+    return max(
+        float(np.max(np.abs(np.asarray(x) - np.asarray(y))))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+
+
+# ------------------------------------------------------------- validation
+def test_traced_strategy_registry():
+    """The traced-selection surface fuse_rounds promises (and the one
+    documented exclusion: fedlecc_adaptive's J is a static argument)."""
+    assert {"fedlecc", "lossonly", "clusterrandom", "haccs"} <= set(TRACED)
+    assert "fedlecc_adaptive" not in TRACED
+    assert "poc" not in TRACED  # host-side candidate draw
+
+
+def test_fuse_rounds_validation():
+    with pytest.raises(ValueError, match="fuse_rounds must be >= 0"):
+        _cfg(backend="compiled", fuse_rounds=-1)
+    with pytest.raises(ValueError, match="backend='compiled'"):
+        _cfg(backend="host", fuse_rounds=2)
+    with pytest.raises(ValueError, match="select_mask_traced") as ei:
+        _cfg(backend="compiled", strategy="poc", fuse_rounds=2)
+    for name in TRACED:  # actionable: the error names every traced strategy
+        assert name in str(ei.value)
+    with pytest.raises(ValueError, match="fedavg"):
+        _cfg(backend="compiled", fuse_rounds=2, aggregator="fednova")
+    # a valid fused config constructs and round-trips (new fields included)
+    cfg = _cfg(backend="compiled", fuse_rounds=3, compress_bits=8)
+    restored = FLConfig.from_dict(cfg.to_dict())
+    assert restored.fuse_rounds == 3 and restored.compress_bits == 8
+
+
+def test_compress_bits_validation():
+    with pytest.raises(ValueError, match="compress_bits"):
+        _cfg(backend="compiled", compress_bits=9)
+    with pytest.raises(ValueError, match="compress_bits"):
+        _cfg(backend="compiled", compress_bits=1)
+    with pytest.raises(ValueError, match="backend='compiled'"):
+        _cfg(backend="host", compress_bits=8)
+    with pytest.raises(ValueError, match="fedavg"):
+        _cfg(backend="compiled", compress_bits=8, aggregator="fednova")
+
+
+# ---------------------------------------------------- fused ≡ eager loop
+@pytest.mark.parametrize("strategy", ["fedlecc", "lossonly", "haccs"])
+def test_fused_matches_eager_compiled(strategy, data):
+    """For strategies deterministic given losses, the scanned fused
+    chunks must reproduce the eager compiled loop round for round —
+    identical selections and (all)close params."""
+    train, test = data
+    kw = dict(strategy=strategy, rounds=6, eval_every=2)
+    if strategy == "fedlecc":
+        kw["strategy_kwargs"] = {"J": 3}
+    eager = make_engine(_cfg(backend="compiled", **kw), train, test, 10)
+    fused = make_engine(_cfg(backend="compiled", fuse_rounds=3, **kw),
+                        train, test, 10)
+    re_, rf = list(eager.rounds(6)), list(fused.rounds(6))
+    assert len(rf) == 6
+    for a, b in zip(re_, rf):
+        assert a.round == b.round
+        assert a.selected == b.selected
+        assert a.comm_mb == pytest.approx(b.comm_mb)
+        assert a.mean_selected_loss == pytest.approx(b.mean_selected_loss,
+                                                     rel=1e-5)
+        assert a.evaluated == b.evaluated  # same absolute eval cadence
+    assert _max_err(eager.params, fused.params) < 1e-6
+
+
+def test_fused_chunked_vs_contiguous_rounds(data):
+    """rounds(3)+rounds(3) through the fused engine must land on the
+    same trajectory as one contiguous rounds(6) call (the chunk-resume
+    contract: persisted PRNG carry + absolute eval cadence)."""
+    train, test = data
+    mk = lambda: make_engine(
+        _cfg(backend="compiled", fuse_rounds=3, rounds=6, eval_every=2),
+        train, test, 10,
+    )
+    contiguous, chunked = mk(), mk()
+    ra = list(contiguous.rounds(6))
+    rb = list(chunked.rounds(3)) + list(chunked.rounds(3))
+    assert [r.selected for r in ra] == [r.selected for r in rb]
+    assert [r.round for r in rb] == list(range(6))
+    # cadence: the chunked call additionally evaluates its own last round
+    assert {r.round for r in ra if r.evaluated} <= {
+        r.round for r in rb if r.evaluated
+    }
+    assert _max_err(contiguous.params, chunked.params) < 1e-6
+    assert ra[-1].comm_mb == pytest.approx(rb[-1].comm_mb)
+
+
+def test_fused_matches_host_end_to_end(data):
+    """The full chain host → fused: fold_in client keys + traced
+    selection + cohort gather + in-scan fedavg land on the host
+    trajectory."""
+    train, test = data
+    host = make_engine(_cfg(backend="host", rounds=4), train, test, 10)
+    fused = make_engine(_cfg(backend="compiled", fuse_rounds=4, rounds=4),
+                        train, test, 10)
+    rh, rf = list(host.rounds(4)), list(fused.rounds(4))
+    for a, b in zip(rh, rf):
+        assert a.selected == b.selected
+    assert _max_err(host.params, fused.params) < 1e-5
+
+
+def test_fused_clusterrandom_self_consistent(data):
+    """clusterrandom's fused selection rides the JAX PRNG stream: it is
+    deterministic per seed, uniform-valid (exactly m selected), but not
+    host-lockstep (documented deviation)."""
+    train, test = data
+    kw = dict(strategy="clusterrandom", strategy_kwargs={"J": 3},
+              rounds=4, eval_every=2)
+    a = make_engine(_cfg(backend="compiled", fuse_rounds=2, **kw),
+                    train, test, 10)
+    b = make_engine(_cfg(backend="compiled", fuse_rounds=2, **kw),
+                    train, test, 10)
+    ra, rb = list(a.rounds(4)), list(b.rounds(4))
+    assert [r.selected for r in ra] == [r.selected for r in rb]
+    assert all(len(r.selected) == 4 for r in ra)
+    assert _max_err(a.params, b.params) == 0.0
+
+
+# --------------------------------------------------------- no-retrace
+def test_cohort_train_compiles_once_across_rounds(data):
+    """The static-shape cohort gather must not retrace as the selected
+    cohort changes round to round (m is static; indices are traced)."""
+    train, test = data
+    engine = make_engine(_cfg(backend="compiled", rounds=4), train, test, 10)
+    results = list(engine.rounds(4))
+    assert len({r.selected for r in results}) > 1  # cohorts actually moved
+    assert engine._train_cohort._cache_size() == 1
+
+
+def test_fused_chunk_compiles_once_per_length(data):
+    """Each distinct chunk length compiles exactly once; repeated
+    steady-state chunks reuse the cached executable."""
+    train, test = data
+    engine = make_engine(
+        _cfg(backend="compiled", fuse_rounds=2, rounds=7, eval_every=100),
+        train, test, 10,
+    )
+    list(engine.rounds(7))  # chunks: [0], [1,2], [3,4], [5,6]
+    assert sorted(engine._chunk_cache) == [1, 2]
+    for fn in engine._chunk_cache.values():
+        assert fn._cache_size() == 1
+
+
+# ------------------------------------------------ cohort gather parity
+def test_cohort_gather_matches_ungathered_mask_path(data):
+    """Training just the gathered cohort must reproduce the legacy
+    every-client-trains mask-gated path (zero-weight clients only ever
+    contributed zeros)."""
+    train, test = data
+    gathered = make_engine(_cfg(backend="compiled", rounds=3),
+                           train, test, 10)
+    ungathered = make_engine(_cfg(backend="compiled", rounds=3),
+                             train, test, 10, cohort_gather=False)
+    assert gathered.cohort_gather and not ungathered.cohort_gather
+    rg, ru = list(gathered.rounds(3)), list(ungathered.rounds(3))
+    for a, b in zip(rg, ru):
+        assert a.selected == b.selected
+        assert a.mean_selected_loss == pytest.approx(b.mean_selected_loss,
+                                                     rel=1e-5)
+    assert _max_err(gathered.params, ungathered.params) < 1e-6
+
+
+def test_compressed_fused_matches_compressed_eager(data):
+    """The quantization stream (fold_in(k_train, K)) is shared between
+    the eager compiled aggregation and the fused in-scan aggregation."""
+    train, test = data
+    kw = dict(backend="compiled", compress_bits=8, rounds=3, eval_every=1)
+    eager = make_engine(_cfg(**kw), train, test, 10)
+    fused = make_engine(_cfg(fuse_rounds=3, **kw), train, test, 10)
+    re_, rf = list(eager.rounds(3)), list(fused.rounds(3))
+    for a, b in zip(re_, rf):
+        assert a.selected == b.selected
+    assert _max_err(eager.params, fused.params) < 1e-6
+
+
+# ------------------------------------------- empty-selection regression
+def test_empty_selection_mean_loss_is_nan_without_warning(data):
+    """A strategy returning an empty selection used to trip numpy's
+    ``RuntimeWarning: Mean of empty slice`` via ``np.mean([])``; the
+    guard returns a clean nan instead."""
+    train, test = data
+    engine = make_engine(_cfg(rounds=1), train, test, 10)
+    engine.select = lambda rnd, losses: np.array([], dtype=np.int64)
+    engine.local_train = lambda rnd, sel, key: (None, np.array([], np.float32))
+    engine.aggregate = lambda rnd, sel, payload: None
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # any RuntimeWarning would raise
+        (result,) = list(engine.rounds(1))
+    assert np.isnan(result.mean_selected_loss)
+    assert result.selected == ()
+
+
+# ------------------------------------------------- donation contract
+def test_fused_donation_invalidates_stale_param_aliases(data):
+    """Fused chunks donate the params buffers: an unobserved pre-run
+    alias of ``engine.params`` dies with the first chunk (the documented
+    hazard — snapshot with ``jax.device_get`` / ``jnp.copy`` instead of
+    aliasing; an existing zero-copy host view also happens to pin the
+    buffer on CPU, so the alias here is deliberately never read before
+    the run)."""
+    train, test = data
+    engine = make_engine(_cfg(backend="compiled", fuse_rounds=2, rounds=2),
+                         train, test, 10)
+    stale = engine.params  # aliased device buffers, never materialized
+    list(engine.rounds(2))
+    with pytest.raises(RuntimeError, match="deleted"):
+        np.asarray(jax.tree.leaves(stale)[0])
+    # the engine's own params were re-bound to the chunk result
+    assert all(np.isfinite(np.asarray(x)).all()
+               for x in jax.tree.leaves(engine.params))
+
+
+# ----------------------------------------------- PRNG carry persistence
+def test_rounds_resume_does_not_replay_key_stream(data):
+    """The carried key persists across chunked rounds() calls (the
+    O(rounds) re-split replay is gone) without changing the stream: a
+    resumed engine matches a contiguous run bit for bit."""
+    train, test = data
+    a = make_engine(_cfg(rounds=6), train, test, 10)
+    b = make_engine(_cfg(rounds=6), train, test, 10)
+    ra = list(a.rounds(6))
+    rb = list(b.rounds(2)) + list(b.rounds(2)) + list(b.rounds(2))
+    assert [r.selected for r in ra] == [r.selected for r in rb]
+    assert _max_err(a.params, b.params) == 0.0
+    assert b._key is not None  # the persisted carry
