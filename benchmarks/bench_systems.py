@@ -1,0 +1,238 @@
+"""Time-to-accuracy under the systems model (``repro.systems``,
+DESIGN.md §10).
+
+Runs the selection-strategy grid (fedlecc vs random vs poc vs haccs)
+under the ``mobile_mix`` device profile and compares, per strategy,
+
+- the **no-deadline baseline** (the server waits for every reachable
+  client — each round costs the slowest dispatched device), against
+- **deadline + over-selection** configurations (dispatch
+  ``ceil(m·over_select)`` clients, drop stragglers past the deadline,
+  reweight the survivors),
+
+in *simulated wall-clock to the target accuracy* — the currency
+cross-device FL actually optimizes — plus bytes-to-target from the
+``CommModel`` ledger.  The deadline is derived from the profile itself
+(a percentile of the jitter-free per-client round times), so one flag
+scales across profile presets and model sizes.
+
+This also exercises HACCS's profile-derived latency tiebreak: under a
+systems config its per-cluster "fastest device first" rank comes from
+the actual ``mobile_mix`` round times rather than the legacy lognormal
+placeholder.
+
+Writes ``BENCH_systems.json`` (repo root; the CI ``perf-smoke`` job
+regenerates and uploads the ``--smoke`` config per commit).  The
+summary block records, per strategy, the best deadline configuration's
+speedup over the no-deadline baseline — the acceptance bar is that at
+least one configuration reaches the target in less simulated time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+BENCH_JSON = os.path.join(ROOT, "BENCH_systems.json")
+
+STRATEGIES = ("fedlecc", "random", "poc", "haccs")
+STRATEGY_KWARGS = {"fedlecc": {"J": 3}}
+
+
+def _cfg(strategy: str, systems: dict | None, *, smoke: bool, rounds: int,
+         n_clients: int, m: int, seed: int):
+    from repro.engine import FLConfig
+
+    return FLConfig(
+        n_clients=n_clients, m=m, rounds=rounds, seed=seed,
+        strategy=strategy,
+        strategy_kwargs=dict(STRATEGY_KWARGS.get(strategy, {})),
+        hidden=(64,) if smoke else (200, 200),
+        eval_samples=16 if smoke else 64,
+        eval_every=1 if smoke else 2,
+        target_hd=0.8 if smoke else 0.9,
+        systems=systems,
+    )
+
+
+def _systems(deadline_s: float | None, over_select: float) -> dict:
+    return dict(
+        profile="mobile_mix",
+        availability="markov",
+        availability_kwargs={"p_drop": 0.1, "p_join": 0.5},
+        jitter_sigma=0.2,
+        deadline_s=deadline_s,
+        over_select=over_select,
+    )
+
+
+def _run(cfg, data):
+    from repro.engine import make_engine
+
+    train, test = data
+    engine = make_engine(cfg, train, test, n_classes=10)
+    results = list(engine.rounds())
+    return engine, results
+
+
+def _time_to(results, target: float):
+    """(round, sim_clock, comm_mb) at the first evaluated round reaching
+    the target accuracy, or None."""
+    for r in results:
+        if r.test_acc is not None and r.test_acc >= target:
+            return r.round, r.sim_clock, r.comm_mb
+    return None
+
+
+def main(args) -> dict:
+    from repro.data import make_classification
+
+    n = 2_000 if args.smoke else 20_000
+    data = (
+        make_classification(n, n_features=64, n_classes=10, seed=0),
+        make_classification(max(n // 10, 200), n_features=64, n_classes=10,
+                            seed=1),
+    )
+    run_kw = dict(smoke=args.smoke, rounds=args.rounds,
+                  n_clients=args.n_clients, m=args.m, seed=args.seed)
+
+    # Derive the deadline from the profile: a percentile of the
+    # jitter-free per-client round times.  The clock is fully determined
+    # at engine construction (profile + steps + payload — no training
+    # needed), so the probe engine never runs a round.
+    from repro.engine import make_engine
+
+    probe = make_engine(
+        _cfg("random", _systems(None, 1.0), **{**run_kw, "rounds": 1}),
+        data[0], data[1], n_classes=10,
+    )
+    base_times = probe._systems.clock.base_times()
+    deadline = float(np.percentile(base_times, args.deadline_pct))
+
+    scenarios = [("no_deadline", _systems(None, 1.0))]
+    for os_f in args.over_select:
+        scenarios.append(
+            (f"deadline_p{args.deadline_pct}_os{os_f}",
+             _systems(deadline, float(os_f)))
+        )
+
+    rows, curves = [], {}
+    for strategy in args.strategies:
+        for name, sysd in scenarios:
+            engine, results = _run(_cfg(strategy, dict(sysd), **run_kw), data)
+            evald = [r for r in results if r.test_acc is not None]
+            curves[(strategy, name)] = results
+            rows.append({
+                "strategy": strategy,
+                "scenario": name,
+                "deadline_s": sysd["deadline_s"],
+                "over_select": sysd["over_select"],
+                "rounds": args.rounds,
+                "final_acc": round(evald[-1].test_acc, 4),
+                "best_acc": round(max(r.test_acc for r in evald), 4),
+                "total_sim_s": round(results[-1].sim_clock, 2),
+                "total_comm_mb": round(results[-1].comm_mb, 3),
+                "mean_dropped_per_round": round(
+                    float(np.mean([r.n_dropped for r in results])), 2
+                ),
+            })
+            print(f"[systems] {strategy:<8s} {name:<22s} "
+                  f"acc={rows[-1]['final_acc']:.3f} "
+                  f"sim={rows[-1]['total_sim_s']:8.1f}s "
+                  f"drop/rnd={rows[-1]['mean_dropped_per_round']:.1f}",
+                  flush=True)
+
+    # Per strategy: common reachable target, then time/bytes to it.
+    summary = []
+    for strategy in args.strategies:
+        per = {n: curves[(strategy, n)] for n, _ in scenarios}
+        target = args.target or 0.95 * min(
+            max(r.test_acc for r in rs if r.test_acc is not None)
+            for rs in per.values()
+        )
+        reach = {n: _time_to(rs, target) for n, rs in per.items()}
+        base = reach["no_deadline"]
+        best_name, best = None, None
+        for n, hit in reach.items():
+            if n == "no_deadline" or hit is None:
+                continue
+            if best is None or hit[1] < best[1]:
+                best_name, best = n, hit
+        for row in rows:
+            if row["strategy"] == strategy:
+                hit = reach[row["scenario"]]
+                row["target_acc"] = round(target, 4)
+                row["rounds_to_target"] = None if hit is None else hit[0]
+                row["sim_s_to_target"] = None if hit is None else round(hit[1], 2)
+                row["comm_mb_to_target"] = None if hit is None else round(hit[2], 3)
+        summary.append({
+            "strategy": strategy,
+            "target_acc": round(target, 4),
+            "no_deadline_sim_s": None if base is None else round(base[1], 2),
+            "best_deadline_scenario": best_name,
+            "best_deadline_sim_s": None if best is None else round(best[1], 2),
+            "speedup": (
+                None if base is None or best is None
+                else round(base[1] / best[1], 2)
+            ),
+        })
+        print(f"[systems] {strategy:<8s} target={target:.3f} "
+              f"no-deadline={summary[-1]['no_deadline_sim_s']}s "
+              f"best={best_name}={summary[-1]['best_deadline_sim_s']}s "
+              f"(x{summary[-1]['speedup']})", flush=True)
+
+    import jax
+
+    payload = {
+        "benchmark": "bench_systems",
+        "smoke": args.smoke,
+        "jax": jax.__version__,
+        "device": str(jax.devices()[0].platform),
+        "profile": "mobile_mix",
+        "deadline_s": round(deadline, 2),
+        "deadline_pct": args.deadline_pct,
+        "results": rows,
+        "summary": summary,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {args.out}")
+    return payload
+
+
+def _parse_args(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--strategies", nargs="+", default=list(STRATEGIES),
+                   choices=list(STRATEGIES))
+    p.add_argument("--rounds", type=int, default=None)
+    p.add_argument("--n-clients", type=int, default=100)
+    p.add_argument("--m", type=int, default=10)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--deadline-pct", type=float, default=60.0,
+                   help="deadline = this percentile of the profile's "
+                        "jitter-free per-client round times")
+    p.add_argument("--over-select", nargs="+", type=float,
+                   default=[1.0, 1.3, 1.6])
+    p.add_argument("--target", type=float, default=None,
+                   help="explicit target accuracy; default: 95%% of the "
+                        "worst scenario's best accuracy, per strategy")
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny CI config: 12 clients, small model/data — "
+                        "trajectory tracking, not absolute numbers")
+    p.add_argument("--out", default=BENCH_JSON)
+    args = p.parse_args(argv)
+    if args.smoke:
+        args.n_clients, args.m = 12, 4
+        args.rounds = args.rounds or 10
+    else:
+        args.rounds = args.rounds or 60
+    return args
+
+
+if __name__ == "__main__":
+    main(_parse_args())

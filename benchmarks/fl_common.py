@@ -28,7 +28,10 @@ RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "fl_runs.json
 # Bump whenever the simulator's numerics change so stale cached cells are
 # re-run instead of silently mixed with new ones.  2 = engine API PR:
 # per-client PRNG keys moved from cohort split to fold_in-by-client-index.
-CACHE_VERSION = 2
+# 3 = systems PR: the `random` strategy's draw moved from rng.choice to
+# host-drawn uniform scores (jit-maskable), changing its selection
+# sequence for a given seed (uniformity unchanged).
+CACHE_VERSION = 3
 
 # Deprecated compat views over the preset registry, preserving the old
 # METHODS value shape — name → (strategy, client_mode, aggregator, mu,

@@ -62,9 +62,17 @@ class CommModel:
         assignments = self.K * 4
         return (hist + assignments) / _MB
 
-    def round_mb(self, m_selected: int, needs_losses: bool) -> float:
-        model_traffic = m_selected * self.n_params * (
-            self.bytes_per_param + self.upload_bytes_per_param
+    def round_mb(self, m_selected: int, needs_losses: bool,
+                 m_uploaded: int | None = None) -> float:
+        """Bytes of one round.  ``m_uploaded`` (default: ``m_selected``)
+        counts the updates that actually arrived — under a systems
+        deadline (``repro.systems``, DESIGN.md §10) dropped stragglers
+        paid the download but never completed the upload."""
+        if m_uploaded is None:
+            m_uploaded = m_selected
+        model_traffic = self.n_params * (
+            m_selected * self.bytes_per_param
+            + m_uploaded * self.upload_bytes_per_param
         )
         loss_poll = self.K * 4 if needs_losses else 0
         return (model_traffic + loss_poll) / _MB

@@ -56,8 +56,18 @@ def fedlecc_select(
     J = max(1, min(int(J), clusters.size))
     z = math.ceil(m / J)
 
-    # Mean loss per cluster, clusters ranked descending.
-    mean_loss = np.array([losses[cluster_labels == c].mean() for c in clusters])
+    # Mean loss per cluster, clusters ranked descending.  Unavailable
+    # clients enter as -inf (the engine's availability gate, DESIGN.md
+    # §10): they are excluded from the cluster mean — one offline member
+    # must not sink its whole cluster to rank-last — and the descending
+    # within-cluster sort already visits them dead last, so they are
+    # picked only when the available supply runs out.
+    def _cluster_mean(c):
+        member_losses = losses[cluster_labels == c]
+        finite = member_losses > -np.inf
+        return member_losses[finite].mean() if finite.any() else -np.inf
+
+    mean_loss = np.array([_cluster_mean(c) for c in clusters])
     ranked = clusters[np.argsort(-mean_loss, kind="stable")]
 
     selected: list[int] = []
@@ -120,10 +130,16 @@ def fedlecc_select_jax(
     z = -(-m // J)  # ceil
 
     onehot = jax.nn.one_hot(labels, n_clusters, dtype=jnp.float32)   # (K, C)
-    counts = jnp.maximum(onehot.sum(0), 1e-9)                        # (C,)
-    mean_loss = (onehot * losses[:, None]).sum(0) / counts           # (C,)
-    # Empty clusters must rank last.
-    present = onehot.sum(0) > 0
+    # Cluster means over *available* members only: -inf entries are the
+    # engine's availability gate (DESIGN.md §10) and must neither poison
+    # the sum (0 · -inf = nan) nor sink their cluster to rank-last.
+    # With no -inf present this reduces bit-for-bit to the plain mean.
+    valid = (losses > -jnp.inf).astype(jnp.float32)                  # (K,)
+    counts = jnp.maximum((onehot * valid[:, None]).sum(0), 1e-9)     # (C,)
+    gated = jnp.where(valid > 0, losses, 0.0)
+    mean_loss = (onehot * gated[:, None]).sum(0) / counts            # (C,)
+    # Empty clusters (no members, or no available members) rank last.
+    present = (onehot * valid[:, None]).sum(0) > 0
     mean_loss = jnp.where(present, mean_loss, -jnp.inf)
     # rank r(c): 0 = highest mean loss.  argsort of argsort gives ranks.
     order = jnp.argsort(-mean_loss, stable=True)

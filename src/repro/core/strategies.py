@@ -7,11 +7,28 @@ aggregation rule, implemented in ``repro.optim`` / ``repro.federated``).
 
 Every strategy implements:
 
-    setup(hists, client_sizes, seed)  — one-time server-side state
-                                        (clustering etc.)
+    setup(hists, client_sizes, seed, latency=None)
+                                      — one-time server-side state
+                                        (clustering etc.); ``latency``
+                                        is the optional profile-derived
+                                        per-client round time from the
+                                        systems layer (DESIGN.md §10),
+                                        consumed by latency-aware
+                                        strategies (HACCS)
     select(rnd, losses, rng) -> (m,) int indices of selected clients
     extra_upload_bytes_per_round()    — selection-protocol overhead used
                                         by ``CommModel`` (Table III)
+
+Availability enters every selection path the same way: when a systems
+availability model is active, the engine gates the polled loss vector
+to ``-inf`` for offline clients *before* calling ``select`` /
+``select_mask_jax`` / ``select_mask_traced``.  Loss-ranked strategies
+then avoid offline clients for free; strategies that ignore losses
+(random, clusterrandom, haccs) read the ``-inf`` entries as an
+exclusion mask and push those clients to the back of their own
+ordering.  An offline client is therefore only ever dispatched when
+the available supply runs out — and the systems layer drops it (zero
+aggregation weight) even then.
 
 Strategies register themselves into the engine registry at definition
 time (``@register_strategy``); ``repro.engine`` builds them by name, so
@@ -34,10 +51,13 @@ any randomness drawn from a JAX PRNG key — expose
 ``select_mask_traced(losses, key) -> (K,) bool mask`` and set
 ``supports_traced_selection``.  For strategies deterministic given
 losses (``fedlecc``, ``lossonly``, ``haccs``) the traced mask equals the
-``select_mask_jax`` mask exactly; ``clusterrandom`` moves its random
-draws onto the JAX stream (key-derived scores through the same
-Algorithm 1 core), so its fused selections are a different — but equally
-uniform — sequence than the host numpy stream.
+``select_mask_jax`` mask exactly; the randomized ones move their draws
+onto the JAX stream — ``clusterrandom`` key-derives its scores through
+the same Algorithm 1 core, ``random`` key-derives its uniform scores,
+and ``poc`` replaces the host candidate draw with Gumbel-top-k over the
+size weights (the exponential-race equivalence of weighted sampling
+without replacement) — so their fused selections are a different, but
+equally distributed, sequence than the host numpy stream.
 
 All are host-side numpy: K scalars/vectors per round (DESIGN.md §8.5).
 """
@@ -58,10 +78,17 @@ __all__ = ["SelectionStrategy", "get_strategy", "STRATEGIES"]
 _FLOAT_BYTES = 4
 
 
-@register_strategy("random")
 @dataclass
 class SelectionStrategy:
-    """Base: uniform random sampling (what FedAvg/FedProx/... use)."""
+    """Extension base: shared setup state + uniform random ``select``.
+
+    External strategies subclass this and override ``select`` (and opt
+    *in* to the jit/traced tiers by implementing ``select_mask_jax`` /
+    ``select_mask_traced`` and flipping the ``supports_*`` flags — they
+    default to False here so a plain subclass is host-only, and the
+    mask-gated backends reject it at config construction instead of
+    silently running the wrong selection).  The registered ``random``
+    strategy is the ``UniformRandom`` subclass below."""
 
     m: int
     name: str = "random"
@@ -71,17 +98,91 @@ class SelectionStrategy:
     supports_traced_selection = False    # has a fully-traced select_mask_traced?
     K: int = field(default=0, init=False)
     client_sizes: np.ndarray | None = field(default=None, init=False)
+    profile_latency: np.ndarray | None = field(default=None, init=False)
 
-    def setup(self, hists: np.ndarray, client_sizes: np.ndarray, seed: int = 0) -> None:
+    def setup(self, hists: np.ndarray, client_sizes: np.ndarray,
+              seed: int = 0, latency: np.ndarray | None = None) -> None:
         self.K = len(client_sizes)
         self.client_sizes = np.asarray(client_sizes)
+        self.profile_latency = (
+            None if latency is None else np.asarray(latency, np.float64)
+        )
+
+    @staticmethod
+    def _gate_scores(scores: np.ndarray, losses) -> np.ndarray:
+        """Push offline clients (-inf loss entries, the engine's
+        availability gate) to the back of a float32 score ranking."""
+        scores = np.asarray(scores, np.float32)
+        if losses is None:
+            return scores
+        offline = np.asarray(losses, np.float32) == -np.inf
+        return np.where(offline, np.float32(-np.inf), scores)
+
+    @staticmethod
+    def _gate_scores_traced(scores, losses):
+        """The traced twin of ``_gate_scores`` (jnp, inside a scanned
+        round chunk): offline clients' scores become -inf."""
+        import jax.numpy as jnp
+
+        if losses is None:
+            return scores
+        return jnp.where(
+            jnp.asarray(losses, jnp.float32) == -jnp.inf, -jnp.inf, scores
+        )
 
     def select(self, rnd: int, losses: np.ndarray, rng: np.random.Generator) -> np.ndarray:
-        return np.sort(rng.choice(self.K, size=min(self.m, self.K), replace=False))
+        gated = self._gate_scores(rng.random(self.K), losses)
+        # float32 + stable argsort to match UniformRandom's jax mask
+        return np.sort(np.argsort(-gated, kind="stable")[: min(self.m, self.K)])
 
     def extra_upload_bytes_per_round(self) -> float:
         # Loss scalars polled from all clients each round, if used.
         return float(self.K * _FLOAT_BYTES) if self.needs_losses else 0.0
+
+
+@register_strategy("random")
+@dataclass
+class UniformRandom(SelectionStrategy):
+    """Uniform random sampling (what FedAvg/FedProx/... use).
+
+    Implemented as top-m over host-drawn uniform scores so the numpy
+    ``select`` and the jax ``select_mask_jax`` consume the identical
+    rng draws and agree exactly (the ``rng.choice`` draw of the
+    pre-systems implementation had no jit analog, so the rng sequence
+    for a given seed changed once at this migration — uniformity is
+    unchanged).  ``select_mask_traced`` moves the score draw onto the
+    JAX PRNG stream (key-derived uniforms + ``lax.top_k``) so random
+    selection also runs inside fused round chunks — self-consistent,
+    not host-lockstep, like clusterrandom.  Scores of ``-inf``-gated
+    (offline) clients are themselves gated to ``-inf``."""
+
+    name: str = "random"
+    supports_compiled_selection = True
+    supports_traced_selection = True
+
+    def select_mask_jax(self, losses, rng=None):
+        import jax
+        import jax.numpy as jnp
+
+        if rng is None:
+            raise ValueError("random selection draws scores host-side; pass rng")
+        gated = jnp.asarray(self._gate_scores(rng.random(self.K), losses))
+        _, top = jax.lax.top_k(gated, min(self.m, self.K))  # ties -> lowest index
+        return jnp.zeros((self.K,), jnp.bool_).at[top].set(True)
+
+    def select_mask_traced(self, losses, key):
+        """Fused-mode selection: uniform scores from the JAX PRNG stream
+        (a different — but equally uniform — sequence than the host rng
+        for the same seed; fused random runs are self-consistent, not
+        host-lockstep)."""
+        import jax
+        import jax.numpy as jnp
+
+        scores = self._gate_scores_traced(
+            jax.random.uniform(key, (self.K,)), losses
+        )
+        _, top = jax.lax.top_k(scores, min(self.m, self.K))
+        return jnp.zeros((self.K,), jnp.bool_).at[top].set(True)
 
 
 @register_strategy("fedlecc")
@@ -106,8 +207,8 @@ class FedLECC(SelectionStrategy):
     n_clusters: int = field(default=0, init=False)
     cluster_method: str = field(default="optics", init=False)
 
-    def setup(self, hists, client_sizes, seed: int = 0) -> None:
-        super().setup(hists, client_sizes, seed)
+    def setup(self, hists, client_sizes, seed: int = 0, latency=None) -> None:
+        super().setup(hists, client_sizes, seed, latency=latency)
         if self.cluster == "auto":
             from repro.core.clustering import best_clustering
 
@@ -167,17 +268,31 @@ class PowerOfChoice(SelectionStrategy):
     stream); the top-m ranking over the gated loss vector is jax
     ``top_k`` in ``select_mask_jax``, so the mask jits cleanly.  Ties are
     broken by lowest client index in both implementations.
+
+    ``select_mask_traced`` (the fused tier, ROADMAP (j)) replaces the
+    host-side candidate draw with Gumbel-top-k: adding i.i.d. Gumbel
+    noise to ``log p_i`` and keeping the top d is exactly weighted
+    sampling without replacement ~ p_i (the exponential-race
+    equivalence), and it is pure jax ops on the JAX PRNG stream — so
+    the whole per-round decision lives inside a scanned round chunk.
+    Fused poc runs are self-consistent, not host-lockstep (the
+    candidate sequence differs from the numpy stream), like
+    clusterrandom.
     """
 
     d: int = 0  # candidate-set size; 0 -> max(2m, K//5)
     name: str = "poc"
     needs_losses: bool = True
     supports_compiled_selection = True
+    supports_traced_selection = True
+
+    def _d(self) -> int:
+        d = self.d or max(2 * self.m, self.K // 5)
+        return min(max(d, self.m), self.K)
 
     def _candidate_mask(self, rng: np.random.Generator) -> np.ndarray:
         """(K,) bool — the d-candidate set drawn ~ p_i without replacement."""
-        d = self.d or max(2 * self.m, self.K // 5)
-        d = min(max(d, self.m), self.K)
+        d = self._d()
         p = self.client_sizes / self.client_sizes.sum()
         cand = rng.choice(self.K, size=d, replace=False, p=p)
         mask = np.zeros(self.K, bool)
@@ -201,12 +316,32 @@ class PowerOfChoice(SelectionStrategy):
         _, top = jax.lax.top_k(gated, min(self.m, self.K))  # ties -> lowest index
         return jnp.zeros((self.K,), jnp.bool_).at[top].set(True)
 
+    def select_mask_traced(self, losses, key):
+        """Gumbel-top-k candidate draw on the JAX PRNG stream (weighted
+        sampling without replacement ~ p_i), then the usual top-m over
+        the candidate-gated losses — fully traced (ROADMAP (j))."""
+        import jax
+        import jax.numpy as jnp
+
+        p = jnp.asarray(
+            self.client_sizes / self.client_sizes.sum(), jnp.float32
+        )
+        race = jnp.log(jnp.maximum(p, 1e-30)) + jax.random.gumbel(key, (self.K,))
+        _, cand_idx = jax.lax.top_k(race, self._d())
+        cand = jnp.zeros((self.K,), jnp.bool_).at[cand_idx].set(True)
+        gated = jnp.where(cand, jnp.asarray(losses, jnp.float32), -jnp.inf)
+        _, top = jax.lax.top_k(gated, min(self.m, self.K))
+        return jnp.zeros((self.K,), jnp.bool_).at[top].set(True)
+
 
 @register_strategy("haccs")
 @dataclass
 class HACCS(SelectionStrategy):
     """HACCS (Wolfrath et al., 2022): histogram clusters; latency-efficient
-    pick per cluster.  Device latency is a simulated static attribute.
+    pick per cluster.  Device latency is the profile-derived expected
+    round time when the systems layer is active (``setup``'s ``latency``
+    hint, DESIGN.md §10); without a systems config it falls back to the
+    legacy simulated static lognormal attribute.
 
     Selection is cluster-quota: proportional slots per cluster (>=1 for
     the largest), fastest devices first within each cluster, then trim /
@@ -228,12 +363,20 @@ class HACCS(SelectionStrategy):
     latency: np.ndarray | None = field(default=None, init=False)
     n_clusters: int = field(default=0, init=False)
 
-    def setup(self, hists, client_sizes, seed: int = 0) -> None:
-        super().setup(hists, client_sizes, seed)
+    def setup(self, hists, client_sizes, seed: int = 0, latency=None) -> None:
+        super().setup(hists, client_sizes, seed, latency=latency)
         self.labels, _ = cluster_label_histograms(hists, min_samples=self.min_samples)
         self.n_clusters = int(self.labels.max()) + 1
-        # Simulated heterogeneous device latency (lognormal, fixed per client).
-        self.latency = np.random.default_rng(seed).lognormal(0.0, 0.5, size=self.K)
+        if self.profile_latency is not None:
+            # Profile-derived expected round seconds (repro.systems).
+            self.latency = self.profile_latency
+        else:
+            # Simulated heterogeneous device latency (lognormal, fixed
+            # per client) — the placeholder used when no systems profile
+            # is configured.
+            self.latency = np.random.default_rng(seed).lognormal(
+                0.0, 0.5, size=self.K
+            )
 
     def _selection_keys(self) -> np.ndarray:
         """(K,) int sort key: ascending order visits clients exactly as the
@@ -261,24 +404,36 @@ class HACCS(SelectionStrategy):
         key0 = crank[self.labels] * self.K + q       # < K*K by construction
         return np.where(in_quota, key0, self.K * self.K + g)
 
+    # Offline clients are pushed past every online key (quota keys < K²,
+    # fill keys < K²+K; the offset clears both) while keeping their
+    # relative order, so they are dispatched only when the available
+    # supply runs out.
+    def _offline_offset(self) -> int:
+        return 2 * self.K * self.K
+
     def select(self, rnd, losses, rng) -> np.ndarray:
         keys = self._selection_keys()
+        if losses is not None:
+            offline = np.asarray(losses, np.float32) == -np.inf
+            keys = np.where(offline, keys + self._offline_offset(), keys)
         return np.sort(np.argsort(keys, kind="stable")[: min(self.m, self.K)])
 
     def select_mask_jax(self, losses, rng=None):
         import jax.numpy as jnp
 
-        del losses, rng  # latency-driven: deterministic given setup
-        take = jnp.argsort(jnp.asarray(self._selection_keys()), stable=True)[
-            : min(self.m, self.K)
-        ]
+        del rng  # latency-driven: deterministic given setup + availability
+        keys = jnp.asarray(self._selection_keys())
+        if losses is not None:
+            offline = jnp.asarray(losses, jnp.float32) == -jnp.inf
+            keys = jnp.where(offline, keys + self._offline_offset(), keys)
+        take = jnp.argsort(keys, stable=True)[: min(self.m, self.K)]
         return jnp.zeros((self.K,), jnp.bool_).at[take].set(True)
 
     def select_mask_traced(self, losses, key):
-        """Latency-driven selection ignores both losses and randomness,
-        so the traced mask is a constant folded at trace time."""
-        del losses, key
-        return self.select_mask_jax(None, None)
+        """Latency-driven selection ignores randomness; the only traced
+        input is the availability gate riding the loss vector."""
+        del key
+        return self.select_mask_jax(losses, None)
 
 
 @register_strategy("fedcls")
@@ -290,22 +445,31 @@ class FedCLS(SelectionStrategy):
     presence_threshold: float = 0.05
     name: str = "fedcls"
     needs_histograms: bool = True
+    supports_compiled_selection = False  # greedy host loop, no jit mask
+    supports_traced_selection = False
     presence: np.ndarray | None = field(default=None, init=False)
 
-    def setup(self, hists, client_sizes, seed: int = 0) -> None:
-        super().setup(hists, client_sizes, seed)
+    def setup(self, hists, client_sizes, seed: int = 0, latency=None) -> None:
+        super().setup(hists, client_sizes, seed, latency=latency)
         h = np.asarray(hists, np.float64)
         h = h / np.maximum(h.sum(1, keepdims=True), 1e-12)
         self.presence = (h >= self.presence_threshold).astype(np.int64)  # (K, C)
 
     def select(self, rnd, losses, rng) -> np.ndarray:
         # Greedy max-coverage with random tie-break (Hamming gain).
+        # Offline clients (-inf loss gate) score below every online gain
+        # (gains are >= 0), so they are picked only as a last resort.
+        offline = (
+            np.asarray(losses, np.float32) == -np.inf
+            if losses is not None else np.zeros(self.K, bool)
+        )
         covered = np.zeros(self.presence.shape[1], dtype=np.int64)
         remaining = list(range(self.K))
         selected: list[int] = []
         for _ in range(min(self.m, self.K)):
             gains = np.array(
-                [np.sum(self.presence[i] & (1 - covered)) for i in remaining]
+                [-1 if offline[i] else np.sum(self.presence[i] & (1 - covered))
+                 for i in remaining]
             )
             best = np.flatnonzero(gains == gains.max())
             pick = remaining[int(rng.choice(best))]
@@ -329,10 +493,12 @@ class FedCor(SelectionStrategy):
     name: str = "fedcor"
     needs_losses: bool = True
     needs_histograms: bool = True
+    supports_compiled_selection = False  # iterative GP conditioning, host-only
+    supports_traced_selection = False
     Kmat: np.ndarray | None = field(default=None, init=False)
 
-    def setup(self, hists, client_sizes, seed: int = 0) -> None:
-        super().setup(hists, client_sizes, seed)
+    def setup(self, hists, client_sizes, seed: int = 0, latency=None) -> None:
+        super().setup(hists, client_sizes, seed, latency=latency)
         d = np.asarray(hellinger_matrix(np.asarray(hists)))
         self.Kmat = np.exp(-(d**2) / (2 * self.length_scale**2))
 
@@ -340,12 +506,18 @@ class FedCor(SelectionStrategy):
         # Greedy D-optimal style: repeatedly pick the client with the
         # largest posterior variance, conditioning the GP on each pick.
         # Loss magnitudes weight the prior variance (informativeness).
+        # Offline clients (-inf loss gate) enter the GP with loss 0 (no
+        # informativeness) and are ranked behind every online client.
+        losses = np.asarray(losses, np.float64)
+        offline = losses == -np.inf
+        losses = np.where(offline, 0.0, losses)
         prior = self.Kmat * np.outer(losses, losses) / max(losses.max() ** 2, 1e-12)
         var = np.diag(prior).copy()
         cov = prior.copy()
         selected: list[int] = []
         for _ in range(min(self.m, self.K)):
-            cand = np.argsort(-var, kind="stable")
+            ranked = np.where(offline, -np.inf, var)
+            cand = np.argsort(-ranked, kind="stable")
             pick = next(int(i) for i in cand if int(i) not in selected)
             selected.append(pick)
             denom = cov[pick, pick] + self.noise
@@ -423,23 +595,23 @@ class ClusterRandom(FedLECC):
         ).astype(np.float64)
 
     def select(self, rnd, losses, rng) -> np.ndarray:
-        del losses
+        scores = self._gate_scores(self._random_scores(rng), losses)
         return fedlecc_select(
-            self.labels, self._random_scores(rng), m=self.m,
+            self.labels, scores, m=self.m,
             J=min(self.J, self.n_clusters),
         )
 
     def select_mask_jax(self, losses, rng=None):
         import jax.numpy as jnp
 
-        del losses
         if rng is None:
             raise ValueError(
                 "clusterrandom draws its random scores host-side; pass rng"
             )
+        scores = self._gate_scores(self._random_scores(rng), losses)
         return fedlecc_select_jax(
             jnp.asarray(self.labels),
-            jnp.asarray(self._random_scores(rng), jnp.float32),
+            jnp.asarray(scores, jnp.float32),
             m=min(self.m, self.K),
             J=max(1, min(self.J, self.n_clusters)),
             n_clusters=self.n_clusters,
@@ -456,15 +628,17 @@ class ClusterRandom(FedLECC):
         import jax
         import jax.numpy as jnp
 
-        del losses
         k_cluster, k_client = jax.random.split(key)
         labels = jnp.asarray(self.labels)
         cluster_rank = jax.random.permutation(k_cluster, self.n_clusters)
         client_rank = jax.random.permutation(k_client, self.K)
-        scores = (
-            (self.n_clusters - cluster_rank[labels]) * (self.K + 1)
-            + (self.K - client_rank)
-        ).astype(jnp.float32)
+        scores = self._gate_scores_traced(
+            (
+                (self.n_clusters - cluster_rank[labels]) * (self.K + 1)
+                + (self.K - client_rank)
+            ).astype(jnp.float32),
+            losses,
+        )
         return fedlecc_select_jax(
             labels, scores, m=min(self.m, self.K),
             J=max(1, min(self.J, self.n_clusters)),
@@ -492,7 +666,15 @@ class FedLECCAdaptive(FedLECC):
 
     def _round_J(self, losses: np.ndarray) -> int:
         clusters = np.unique(self.labels)
-        means = np.array([losses[self.labels == c].mean() for c in clusters])
+        # availability-gated (-inf) members are excluded from the
+        # dispersion estimate; clusters with nobody online drop out
+        means = []
+        for c in clusters:
+            ls = losses[self.labels == c]
+            ls = ls[ls > -np.inf]
+            if ls.size:
+                means.append(ls.mean())
+        means = np.asarray(means)
         if means.size <= 1:
             return 1
         thr = means.min() + 0.5 * (means.max() - means.min())

@@ -45,11 +45,11 @@ validation enforces both up front):
     ----------------  ----   --------   --------   -----------
     fedlecc            ✓        ✓          ✓            ✓
     fedlecc_adaptive   ✓        ✓          ✓            —
-    poc                ✓        ✓          ✓            —
+    poc                ✓        ✓          ✓            ✓ (jax rng)
     lossonly           ✓        ✓          ✓            ✓
     clusterrandom      ✓        ✓          ✓            ✓ (jax rng)
     haccs              ✓        ✓          ✓            ✓
-    random             ✓        —          —            —
+    random             ✓        ✓          ✓            ✓ (jax rng)
     fedcls             ✓        —          —            —
     fedcor             ✓        —          —            —
 
@@ -57,6 +57,19 @@ validation enforces both up front):
 ``scaleout`` aggregates inside the mesh round and ``fuse_rounds``/
 ``compress_bits`` aggregate inside the compiled round, so those three
 require ``aggregator="fedavg"``.)
+
+The systems axis (``FLConfig.systems``, ``repro.systems``, DESIGN.md
+§10) is orthogonal to all of the above: a ``SystemsConfig`` adds device
+profiles, an availability trace, simulated wall-clock per round
+(``RoundResult.sim_time``/``sim_clock``), and deadline/over-selection
+semantics (stragglers dropped, survivors reweighted) on every backend::
+
+    from repro.engine import FLConfig, SystemsConfig, make_engine
+
+    cfg = FLConfig(strategy="fedlecc", backend="compiled",
+                   systems=SystemsConfig(profile="mobile_mix",
+                                         availability="markov",
+                                         deadline_s=30.0, over_select=1.3))
 
 Typical use::
 
@@ -127,6 +140,7 @@ __all__ = [
     "list_presets",
     "register_preset",
     "make_engine",
+    "SystemsConfig",
 ]
 
 _LAZY = {
@@ -141,6 +155,7 @@ _LAZY = {
     "FusedEngine": ("repro.engine.fused", "FusedEngine"),
     "ScaleoutEngine": ("repro.engine.scaleout", "ScaleoutEngine"),
     "make_scaleout_round": ("repro.engine.scaleout", "make_scaleout_round"),
+    "SystemsConfig": ("repro.systems.config", "SystemsConfig"),
     "ExperimentPreset": ("repro.engine.presets", "ExperimentPreset"),
     "get_preset": ("repro.engine.presets", "get_preset"),
     "list_presets": ("repro.engine.presets", "list_presets"),

@@ -96,6 +96,18 @@ class RoundResult:
       out set; the metric is task-defined (classification accuracy, or
       next-token accuracy for the LM task).  ``None`` on rounds where
       evaluation was skipped (``eval_every`` cadence).
+    - ``sim_time``/``sim_clock`` — simulated wall-clock seconds of this
+      round / cumulative since round 0, from the systems layer
+      (``FLConfig.systems``, DESIGN.md §10).  0.0 when no systems
+      config is active (the frictionless engine has no clock).
+    - ``n_dropped``          — dispatched-but-not-aggregated clients
+      this round (offline at dispatch, or stragglers past the systems
+      deadline).  ``selected`` always lists the *survivors* — the
+      clients whose updates were actually aggregated.
+    - ``metrics``            — optional task-defined extra evaluation
+      metrics (e.g. the LM task's held-out perplexity, total and per
+      topic cluster); ``None`` on unevaluated rounds and for tasks
+      without extras.
     """
 
     round: int
@@ -104,6 +116,10 @@ class RoundResult:
     comm_mb: float
     test_loss: float | None = None
     test_acc: float | None = None
+    sim_time: float = 0.0
+    sim_clock: float = 0.0
+    n_dropped: int = 0
+    metrics: dict | None = None
 
     @property
     def evaluated(self) -> bool:
@@ -180,6 +196,7 @@ class Engine:
         self.sizes = np.array([len(ix) for ix in self.client_idx])
         self.test_x, self.test_y = jnp.asarray(test.x), jnp.asarray(test.y)
         self._train_data = train  # handed to the task when building fns
+        self._test_data = test    # handed to the task for extra eval metrics
 
         # --- model (task-owned) / optimizer-free local SGD ---
         self.params = self.task.init_params(
@@ -194,11 +211,39 @@ class Engine:
         self.taus = np.maximum(taus, 1)
         self.max_steps = int(min(cfg.max_steps_cap, self.taus.max()))
 
+        # --- systems layer (device profiles / wall clock / deadline,
+        # DESIGN.md §10).  None = the frictionless engine; with a config,
+        # the strategy dispatches the over-selected cohort (m_eff) and
+        # the deadline policy drops stragglers down to the survivors. ---
+        if cfg.systems is not None:
+            from repro.systems.runtime import SystemsRuntime
+
+            self._systems = SystemsRuntime(
+                cfg.systems,
+                n_clients=cfg.n_clients,
+                steps=np.minimum(self.taus, self.max_steps),
+                n_params=self.n_params,
+                upload_bytes_per_param=(
+                    cfg.compress_bits / 8.0 if cfg.compress_bits else 4.0
+                ),
+                seed=cfg.seed,
+            )
+            self.m_eff = cfg.systems.m_effective(cfg.m, cfg.n_clients)
+        else:
+            self._systems = None
+            self.m_eff = cfg.m
+        self.sim_clock = 0.0
+
         # --- pluggable components, all via the registries ---
         self.strategy = STRATEGY_REGISTRY.build(
-            cfg.strategy, m=cfg.m, **cfg.strategy_kwargs
+            cfg.strategy, m=self.m_eff, **cfg.strategy_kwargs
         )
-        self.strategy.setup(self.hists, self.sizes, seed=cfg.seed)
+        if self._systems is None:
+            # legacy setup signature kept working for external strategies
+            self.strategy.setup(self.hists, self.sizes, seed=cfg.seed)
+        else:
+            self.strategy.setup(self.hists, self.sizes, seed=cfg.seed,
+                                latency=self._systems.latency_hint())
         self.aggregator = get_aggregator(cfg.aggregator, cfg)
         self.agg_state = self.aggregator.init_state(self.params)
         self.client_mode = get_client_mode(cfg.client_mode)
@@ -258,6 +303,13 @@ class Engine:
 
         self._evaluate = jax.jit(_evaluate)
 
+        # Task-defined extra evaluation metrics (None for tasks without
+        # any): e.g. the LM task's held-out perplexity, total and per
+        # topic cluster (ROADMAP (h)).
+        self._eval_extra = self.task.build_eval_extra(
+            self._test_data, self.n_classes
+        )
+
     @staticmethod
     def _client_keys(key: jax.Array, indices) -> jax.Array:
         """Per-client PRNG keys derived by client index (``fold_in``), so
@@ -280,19 +332,37 @@ class Engine:
         """Sorted indices of this round's participants."""
         raise NotImplementedError
 
-    def local_train(self, rnd: int, sel: np.ndarray, key: jax.Array):
+    def local_train(self, rnd: int, sel: np.ndarray, key: jax.Array,
+                    survivors: np.ndarray | None = None):
         """Run local training.  Returns ``(payload, sel_losses)`` where
         ``payload`` is backend-opaque (threaded into ``aggregate``) and
-        ``sel_losses`` is a (len(sel),) array of local training losses."""
+        ``sel_losses`` is a (len(sel),) array of local training losses.
+        ``survivors`` (systems runs only) is the subset of ``sel`` whose
+        update will actually arrive — backends that aggregate inside the
+        round (scaleout's psum) weight by it; the others may ignore it
+        (dropped clients still *train*, they just miss the upload)."""
         raise NotImplementedError
 
-    def aggregate(self, rnd: int, sel: np.ndarray, payload) -> None:
-        """Fold the payload into ``self.params`` (and any server state)."""
+    def aggregate(self, rnd: int, sel: np.ndarray, payload,
+                  survivors: np.ndarray | None = None) -> None:
+        """Fold the payload into ``self.params`` (and any server state).
+        ``survivors`` (systems runs only, a subset of ``sel``) restricts
+        the aggregation to the updates that beat the deadline — weights
+        renormalize over the surviving mass; ``None`` means everyone
+        arrived (the frictionless call shape, unchanged from before the
+        systems axis)."""
         raise NotImplementedError
 
     def evaluate(self) -> tuple[float, float]:
         tl, ta = self._evaluate(self.params, self.test_x, self.test_y)
         return float(tl), float(ta)
+
+    def eval_metrics(self) -> dict | None:
+        """Task-defined extra metrics on the held-out set (None when the
+        task has none) — computed on the ``eval_every`` cadence only."""
+        if self._eval_extra is None:
+            return None
+        return self._eval_extra(self.params, self.test_x, self.test_y)
 
     def _carry_key(self) -> jax.Array:
         """The persisted ``rounds()`` PRNG carry.  The stream from round
@@ -325,29 +395,64 @@ class Engine:
             key, k_poll, k_train = jax.random.split(key, 3)
 
             losses = self.poll_losses(rnd, k_poll)
+            # systems availability gate (DESIGN.md §10): offline clients
+            # enter every selection path as -inf before select is called
+            if self._systems is not None:
+                losses = np.where(
+                    self._systems.available(rnd), losses, -np.inf
+                ).astype(np.float32)
             sel = np.asarray(self.select(rnd, losses))
-            payload, sel_losses = self.local_train(rnd, sel, k_train)
-            self.aggregate(rnd, sel, payload)
 
-            self.comm_mb += self.comm.round_mb(
-                len(sel), self.strategy.needs_losses
-            )
-            test_loss = test_acc = None
+            # deadline / availability outcome of the dispatched cohort:
+            # survivors keep their aggregation weight, dropped clients
+            # (offline, or stragglers past the deadline) are zeroed
+            if self._systems is not None:
+                outcome = self._systems.outcome(rnd, sel)
+                surv = outcome.survivors
+                payload, sel_losses = self.local_train(
+                    rnd, sel, k_train, survivors=surv
+                )
+                self.aggregate(rnd, sel, payload, survivors=surv)
+                # the server observes survivor losses only
+                keep = np.isin(sel, surv)
+                mean_loss = _mean_loss(np.asarray(sel_losses)[keep])
+                self.comm_mb += self.comm.round_mb(
+                    outcome.n_reached, self.strategy.needs_losses,
+                    m_uploaded=len(surv),
+                )
+                self.sim_clock += outcome.sim_time
+                sim_time, n_dropped = outcome.sim_time, outcome.n_dropped
+            else:
+                surv = sel
+                payload, sel_losses = self.local_train(rnd, sel, k_train)
+                self.aggregate(rnd, sel, payload)
+                mean_loss = _mean_loss(sel_losses)
+                self.comm_mb += self.comm.round_mb(
+                    len(sel), self.strategy.needs_losses
+                )
+                sim_time, n_dropped = 0.0, 0
+
+            test_loss = test_acc = metrics = None
             # absolute cadence, so chunked rounds() calls evaluate on the
             # same schedule as one contiguous call (each call additionally
             # evaluates its own final round)
             if rnd % cfg.eval_every == 0 or rnd == start + n_rounds - 1:
                 test_loss, test_acc = self.evaluate()
+                metrics = self.eval_metrics()
 
             self._round = rnd + 1
             self._key = key
             result = RoundResult(
                 round=rnd,
-                selected=tuple(int(i) for i in sel),
-                mean_selected_loss=_mean_loss(sel_losses),
+                selected=tuple(int(i) for i in surv),
+                mean_selected_loss=mean_loss,
                 comm_mb=float(self.comm_mb),
                 test_loss=test_loss,
                 test_acc=test_acc,
+                sim_time=float(sim_time),
+                sim_clock=float(self.sim_clock),
+                n_dropped=int(n_dropped),
+                metrics=metrics,
             )
             if callback is not None:
                 callback(result)
@@ -365,6 +470,16 @@ class Engine:
             self.history["comm_mb"].append(r.comm_mb)
             self.history["mean_selected_loss"].append(r.mean_selected_loss)
             self.history["selected"].append(list(r.selected))
+            # systems runs gain the simulated clock (time-to-accuracy)
+            # and the cumulative drop count; tasks with extra eval
+            # metrics (LM perplexity) surface them under their own keys.
+            # Keys appear only when active, so the legacy history shape
+            # is unchanged for plain runs.
+            if self._systems is not None:
+                self.history.setdefault("sim_clock", []).append(r.sim_clock)
+                self.history.setdefault("n_dropped", []).append(r.n_dropped)
+            for k, v in (r.metrics or {}).items():
+                self.history.setdefault(k, []).append(v)
             if log_every and (r.round % log_every == 0):
                 print(
                     f"[{self.cfg.strategy}] round {r.round:4d} "

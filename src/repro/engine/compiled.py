@@ -136,7 +136,9 @@ class CompiledEngine(MaskSelectionMixin, Engine):
         return jax.random.fold_in(train_key, n_clients)
 
     # -- hooks (select comes from MaskSelectionMixin) --------------------
-    def local_train(self, rnd: int, sel: np.ndarray, key: jax.Array):
+    def local_train(self, rnd: int, sel: np.ndarray, key: jax.Array,
+                    survivors: np.ndarray | None = None):
+        del survivors  # static-shape cohort always trains; drops are zeroed
         if self.cfg.compress_bits:
             self._qkey = self._quant_key(key, self.cfg.n_clients)
         if self.cohort_gather:
@@ -149,10 +151,20 @@ class CompiledEngine(MaskSelectionMixin, Engine):
         )
         return stacked, np.asarray(losses)[sel]
 
-    def aggregate(self, rnd: int, sel: np.ndarray, payload) -> None:
+    def aggregate(self, rnd: int, sel: np.ndarray, payload,
+                  survivors: np.ndarray | None = None) -> None:
         stacked = payload
         sel_j = jnp.asarray(sel)
-        mask = jnp.zeros((self.cfg.n_clients,), jnp.bool_).at[sel_j].set(True)
+        # The weight mask carries only the *survivors* (systems deadline
+        # drops, DESIGN.md §10): dropped cohort members keep their static
+        # payload slot but aggregate with exact weight zero — the same
+        # mask-gating mechanism that makes unselected clients free.
+        weight_idx = sel if survivors is None else survivors
+        if survivors is not None and len(survivors) == 0:
+            return  # nobody uploaded: the global model stands still
+        mask = jnp.zeros((self.cfg.n_clients,), jnp.bool_).at[
+            jnp.asarray(weight_idx)
+        ].set(True)
         w_full = self._masked_weights(mask)
 
         if self.cfg.compress_bits:
@@ -178,11 +190,12 @@ class CompiledEngine(MaskSelectionMixin, Engine):
         else:
             w = w_full
             taus = jnp.asarray(self.taus, jnp.float32)
+        n_agg = len(weight_idx)
         new_params = self.aggregator.aggregate(
-            stacked, self.params, w, taus, self.agg_state, n_selected=len(sel),
+            stacked, self.params, w, taus, self.agg_state, n_selected=n_agg,
         )
         self.agg_state = self.aggregator.update_state(
-            self.agg_state, stacked, self.params, w, n_selected=len(sel)
+            self.agg_state, stacked, self.params, w, n_selected=n_agg
         )
         self.params = new_params
 

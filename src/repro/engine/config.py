@@ -27,6 +27,12 @@ backward compatibility) and extended with:
   ``repro.federated.compression``); requires ``backend="compiled"``
   and ``aggregator="fedavg"``, and is counted in the ``CommModel``
   upload ledger.
+- ``systems`` — the cross-device realism axis (DESIGN.md §10,
+  ``repro.systems``): a ``SystemsConfig`` (or its dict form) selecting
+  a device profile, an availability trace, a per-round wall-clock
+  deadline, and an over-selection factor.  ``None`` (the default) is
+  the frictionless engine — bit-identical to the systems-free round
+  loop.  Validated and JSON-round-tripping like ``task_kwargs``.
 - eager validation in ``__post_init__`` — component names (including
   ``task``) are checked against the engine registries, so a typo fails
   at config construction rather than mid-run; mask-gated backends
@@ -144,6 +150,7 @@ class FLConfig:
     task_kwargs: dict = field(default_factory=dict)  # JSON-safe task params
     fuse_rounds: int = 0           # >0: scan-fuse round chunks (compiled only)
     compress_bits: int = 0         # >0: quantized cohort-delta aggregation
+    systems: object | None = None  # SystemsConfig | dict | None (repro.systems)
 
     # ------------------------------------------------------------------
     def __post_init__(self) -> None:
@@ -233,6 +240,19 @@ class FLConfig:
                 raise ValueError(fused_strategy_error(self.strategy))
             if self.aggregator != "fedavg":
                 raise ValueError(fused_aggregator_error(self.aggregator))
+        # Systems axis: normalize the dict form (from_dict / JSON caches)
+        # to a validated SystemsConfig; SystemsConfig.__post_init__ does
+        # the name/range validation itself.
+        if self.systems is not None:
+            from repro.systems.config import SystemsConfig
+
+            if isinstance(self.systems, dict):
+                self.systems = SystemsConfig.from_dict(self.systems)
+            elif not isinstance(self.systems, SystemsConfig):
+                raise ValueError(
+                    f"systems must be a SystemsConfig, its dict form, or "
+                    f"None; got {type(self.systems).__name__}"
+                )
         if self.compress_bits:
             if not 2 <= self.compress_bits <= 8:
                 raise ValueError(

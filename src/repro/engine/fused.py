@@ -90,13 +90,14 @@ class FusedEngine(CompiledEngine):
 
         cfg = self.cfg
         K = cfg.n_clients
-        m = min(cfg.m, K)
+        m = min(self.m_eff, K)
         strategy = self.strategy
         needs_losses = strategy.needs_losses
         sizes = self._sizes_j
         xs, ys, dmask = self.xs, self.ys, self.mask
         poll = self._poll_losses
         cohort_train = self._cohort_train_raw
+        systems = self._systems is not None
         compress = cfg.compress_bits
         if compress:
             from functools import partial
@@ -105,7 +106,7 @@ class FusedEngine(CompiledEngine):
 
             compressed = partial(compressed_fedavg, bits=compress)
 
-        def _round_body(carry, _):
+        def _round_body(carry, inputs):
             params, key = carry
             # identical key discipline to Engine.rounds(): one 3-way
             # split per round off the persisted carry
@@ -114,14 +115,23 @@ class FusedEngine(CompiledEngine):
                 losses = poll(params, xs, ys, dmask, k_poll)
             else:
                 losses = jnp.zeros((K,), jnp.float32)
+            if systems:
+                # the availability / deadline traces are exogenous
+                # host-precomputed scan inputs (DESIGN.md §10): the -inf
+                # gate below is the same one the eager loop applies
+                avail, arrived = inputs
+                losses = jnp.where(avail, losses, -jnp.inf)
             # selection randomness rides a stream the eager path never
             # consumes (fold tag K ≥ any client index), so deterministic
             # strategies stay bit-compatible with the eager loop
             mask = strategy.select_mask_traced(
                 losses, jax.random.fold_in(k_poll, K)
             )
+            # survivors: offline-at-dispatch and past-deadline clients
+            # keep their static cohort slot but aggregate at weight zero
+            final = mask & avail & arrived if systems else mask
             idx = cohort_indices(mask, m)
-            w = jnp.take(selection_weights(mask, sizes), idx)
+            w = jnp.take(selection_weights(final, sizes), idx)
             stacked, sel_losses = cohort_train(params, idx, k_train)
             if compress:
                 new_params, _ = compressed(
@@ -129,22 +139,39 @@ class FusedEngine(CompiledEngine):
                 )
             else:
                 new_params = fedavg(stacked, w)
-            return (new_params, key), (mask, sel_losses)
+            if systems:
+                # nobody uploaded → the global model stands still (the
+                # all-zero weight vector would otherwise zero the params)
+                any_up = final.any()
+                new_params = jax.tree.map(
+                    lambda n, o: jnp.where(any_up, n, o), new_params, params
+                )
+            return (new_params, key), (mask, final, sel_losses)
 
         self._round_body = _round_body
 
     def _chunk_step(self, length: int) -> Callable:
         """The jitted chunk runner for one static chunk length — compiled
-        once per distinct length, carry buffers donated."""
+        once per distinct length, carry buffers donated.  With a systems
+        config the chunk additionally takes the (length, K) availability
+        and deadline-arrival traces as (undonated) scan inputs — their
+        shapes depend only on the chunk length, so the cache key is
+        unchanged and nothing retraces."""
         fn = self._chunk_cache.get(length)
         if fn is None:
             body = self._round_body
-
-            def run(params, key):
-                (params, key), (masks, sel_losses) = jax.lax.scan(
-                    body, (params, key), None, length=length
-                )
-                return params, key, masks, sel_losses
+            if self._systems is not None:
+                def run(params, key, avail, arrived):
+                    (params, key), out = jax.lax.scan(
+                        body, (params, key), (avail, arrived), length=length
+                    )
+                    return params, key, *out
+            else:
+                def run(params, key):
+                    (params, key), out = jax.lax.scan(
+                        body, (params, key), None, length=length
+                    )
+                    return params, key, *out
 
             fn = jax.jit(run, donate_argnums=(0, 1))
             self._chunk_cache[length] = fn
@@ -177,33 +204,67 @@ class FusedEngine(CompiledEngine):
         rnd = start
         while rnd < end:
             length = self._chunk_len(rnd, end)
-            params, key, masks, sel_losses = self._chunk_step(length)(
-                self.params, key
-            )
+            step = self._chunk_step(length)
+            if self._systems is not None:
+                # exogenous availability / deadline-arrival traces for
+                # the chunk (host-deterministic per round, so the fused
+                # run sees exactly what the eager backends see)
+                avail = np.stack(
+                    [self._systems.available(rnd + i) for i in range(length)]
+                )
+                arrived = np.stack(
+                    [self._systems.arrived(rnd + i) for i in range(length)]
+                )
+                params, key, masks, finals, sel_losses = step(
+                    self.params, key, jnp.asarray(avail), jnp.asarray(arrived)
+                )
+            else:
+                params, key, masks, finals, sel_losses = step(self.params, key)
             # commit the chunk before yielding anything from it
             self.params, self._key = params, key
             self._round = rnd + length
             masks = np.asarray(masks)
+            finals = np.asarray(finals)
             sel_losses = np.asarray(sel_losses)
             results = []
             for i in range(length):
                 r = rnd + i
                 sel = np.where(masks[i])[0]
-                self.comm_mb += self.comm.round_mb(
-                    len(sel), self.strategy.needs_losses
-                )
-                test_loss = test_acc = None
+                surv = np.where(finals[i])[0]
+                if self._systems is not None:
+                    # same accounting core as the eager loop's outcome()
+                    out = self._systems.outcome_from_mask(r, masks[i])
+                    self.comm_mb += self.comm.round_mb(
+                        out.n_reached, self.strategy.needs_losses,
+                        m_uploaded=len(surv),
+                    )
+                    self.sim_clock += out.sim_time
+                    sim_time, n_dropped = out.sim_time, out.n_dropped
+                    keep = finals[i][sel]  # survivor slots in cohort order
+                    mean_loss = _mean_loss(sel_losses[i][keep])
+                else:
+                    self.comm_mb += self.comm.round_mb(
+                        len(sel), self.strategy.needs_losses
+                    )
+                    sim_time, n_dropped = 0.0, 0
+                    mean_loss = _mean_loss(sel_losses[i])
+                test_loss = test_acc = metrics = None
                 if i == length - 1 and (
                     r % cfg.eval_every == 0 or r == end - 1
                 ):
                     test_loss, test_acc = self.evaluate()
+                    metrics = self.eval_metrics()
                 results.append(RoundResult(
                     round=r,
-                    selected=tuple(int(j) for j in sel),
-                    mean_selected_loss=_mean_loss(sel_losses[i]),
+                    selected=tuple(int(j) for j in surv),
+                    mean_selected_loss=mean_loss,
                     comm_mb=float(self.comm_mb),
                     test_loss=test_loss,
                     test_acc=test_acc,
+                    sim_time=float(sim_time),
+                    sim_clock=float(self.sim_clock),
+                    n_dropped=int(n_dropped),
+                    metrics=metrics,
                 ))
             rnd += length
             for result in results:

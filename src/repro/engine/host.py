@@ -52,7 +52,9 @@ class HostEngine(Engine):
     def select(self, rnd: int, losses: np.ndarray) -> np.ndarray:
         return self.strategy.select(rnd, losses, self.rng)
 
-    def local_train(self, rnd: int, sel: np.ndarray, key: jax.Array):
+    def local_train(self, rnd: int, sel: np.ndarray, key: jax.Array,
+                    survivors: np.ndarray | None = None):
+        del survivors  # everyone selected trains; drops happen at aggregation
         sel_j = jnp.asarray(sel)
         keys = self._client_keys(key, sel)
         h_sel = (
@@ -67,8 +69,21 @@ class HostEngine(Engine):
         )
         return (stacked, h_sel), np.asarray(local_losses)
 
-    def aggregate(self, rnd: int, sel: np.ndarray, payload) -> None:
+    def aggregate(self, rnd: int, sel: np.ndarray, payload,
+                  survivors: np.ndarray | None = None) -> None:
         stacked, h_sel = payload
+        if survivors is not None and len(survivors) != len(sel):
+            # systems deadline/availability drop: only the surviving
+            # uploads reach the server — reweight over them (the
+            # dropped clients trained locally, but nothing arrived).
+            if len(survivors) == 0:
+                return  # nobody uploaded: the global model stands still
+            keep = np.flatnonzero(np.isin(sel, survivors))
+            rows = jnp.asarray(keep)
+            stacked = jax.tree.map(lambda a: a[rows], stacked)
+            if h_sel is not None:
+                h_sel = jax.tree.map(lambda a: a[rows], h_sel)
+            sel = np.asarray(sel)[keep]
         w = self.sizes[sel] / self.sizes[sel].sum()
         w_j = jnp.asarray(w, jnp.float32)
         taus_j = jnp.asarray(self.taus[sel], jnp.float32)

@@ -131,13 +131,17 @@ class ScaleoutEngine(MaskSelectionMixin, Engine):
         ))
 
     # -- hooks (select comes from MaskSelectionMixin) --------------------
-    def local_train(self, rnd: int, sel: np.ndarray, key: jax.Array):
+    def local_train(self, rnd: int, sel: np.ndarray, key: jax.Array,
+                    survivors: np.ndarray | None = None):
         """One fused mesh round: every client trains from its stack row;
         the selection-weighted psum aggregates in the same compiled call.
-        Returns the aggregated params as the payload."""
+        Returns the aggregated params as the payload.  Under a systems
+        deadline the psum weights carry only the *survivors* — dropped
+        cohort members contribute exact zeros, like unselected clients."""
         K = self.cfg.n_clients
         keys = self._client_keys(key, jnp.arange(K))
-        mask = jnp.zeros((K,), jnp.bool_).at[jnp.asarray(sel)].set(True)
+        weight_idx = sel if survivors is None else survivors
+        mask = jnp.zeros((K,), jnp.bool_).at[jnp.asarray(weight_idx)].set(True)
         w = selection_weights(mask, self._sizes_j)
         new_params, losses = self._round_fn(
             self._stack_for_clients(self.params, K),
@@ -145,10 +149,13 @@ class ScaleoutEngine(MaskSelectionMixin, Engine):
         )
         return new_params, np.asarray(losses)[sel]
 
-    def aggregate(self, rnd: int, sel: np.ndarray, payload) -> None:
+    def aggregate(self, rnd: int, sel: np.ndarray, payload,
+                  survivors: np.ndarray | None = None) -> None:
         # Aggregation already happened inside the mesh round (the psum);
         # install the replicated result.  Pull to host so downstream jits
         # (poll/evaluate) never mix mesh-committed and uncommitted args.
+        if survivors is not None and len(survivors) == 0:
+            return  # all-zero psum (nobody uploaded): keep the old model
         self.params = jax.device_get(payload)
 
 

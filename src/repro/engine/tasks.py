@@ -82,6 +82,15 @@ class Task:
         ``metric_fn(apply_fn(params, x), y)`` → scalar eval metric."""
         raise NotImplementedError
 
+    def build_eval_extra(self, test, n_classes: int) -> Callable | None:
+        """Optional extra held-out metrics: ``None`` (the default), or a
+        callable ``(params, test_x, test_y) -> dict`` of JSON-safe
+        values, surfaced as ``RoundResult.metrics`` on evaluated rounds
+        (and as extra ``history`` keys by ``Engine.run``).  The LM task
+        reports held-out perplexity, total and per topic cluster."""
+        del test, n_classes
+        return None
+
 
 @register_task("classification")
 class ClassificationTask(Task):
@@ -271,6 +280,64 @@ class LMTask(Task):
             return tot / (labels.shape[0] * s)
 
         return lm_apply, lm_loss, lm_metric
+
+    def build_eval_extra(self, test, n_classes: int):
+        """Held-out perplexity, total and per topic cluster (ROADMAP
+        (h)): the LM analogue of Table II's per-class accuracy — it
+        makes selection gains measurable per data mode.  Per-sequence
+        NLL is one jitted chunk-scan (logits stay (B, c, V) per chunk,
+        never (B, S, V)); topics are the task's derived per-sequence
+        partition labels, so the clusters match the axis the non-IID
+        split skews on."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.models.transformer import forward, output_head
+
+        mc = self.model_cfg
+        topics = np.asarray(self.partition_labels(test))
+        topic_ids = np.unique(topics)
+
+        def _per_seq_nll(params, x, y):
+            """(B,) mean next-token NLL per sequence — the per-sequence
+            variant of ``_chunk_scan``'s chunked NLL (same chunking
+            contract, vector carry instead of scalar)."""
+            h, _, _, _ = forward(params, mc, {"tokens": x})
+            head = output_head(params, mc)
+            s = h.shape[1]
+            c = min(mc.loss_chunk, s)
+            nc = s // c
+            assert nc * c == s, (
+                f"seq_len {s} must be a multiple of loss_chunk {c}"
+            )
+
+            def body(carry, i):
+                hc = jax.lax.dynamic_slice_in_dim(h, i * c, c, axis=1)
+                yc = jax.lax.dynamic_slice_in_dim(y, i * c, c, axis=1)
+                logits = (hc @ head).astype(jnp.float32)
+                logz = jax.nn.logsumexp(logits, axis=-1)
+                gold = jnp.take_along_axis(
+                    logits, yc[..., None].astype(jnp.int32), axis=-1
+                )[..., 0]
+                return carry + jnp.sum(logz - gold, axis=1), None
+
+            tot, _ = jax.lax.scan(
+                body, jnp.zeros((x.shape[0],), jnp.float32), jnp.arange(nc)
+            )
+            return tot / (nc * c)
+
+        per_seq_nll = jax.jit(_per_seq_nll)
+
+        def compute(params, test_x, test_y) -> dict:
+            nll = np.asarray(per_seq_nll(params, test_x, test_y))
+            out = {"ppl": float(np.exp(nll.mean()))}
+            out["ppl_per_cluster"] = {
+                str(int(t)): float(np.exp(nll[topics == t].mean()))
+                for t in topic_ids
+            }
+            return out
+
+        return compute
 
 
 def build_task(cfg) -> Task:

@@ -1,0 +1,65 @@
+"""repro.systems — cross-device realism for the federated engine.
+
+The engine's round protocol simulates a frictionless world: every client
+is always online, trains instantly, and never misses a deadline, so
+"rounds-to-accuracy" is the only currency the benchmarks can report.
+This package adds the systems axis (DESIGN.md §10) that cross-device FL
+actually runs under (Fu et al., 2022 treat availability, stragglers and
+deadline-based over-selection as first-class selection inputs):
+
+- ``profiles``  — per-client ``DeviceProfile`` (compute speed, up/down
+                  bandwidth, device tier) with registered generator
+                  presets (``uniform``, ``zipf_compute``, ``mobile_mix``)
+                  and trace-driven availability models (``always``,
+                  ``bernoulli``, ``markov`` on–off states, seeded on a
+                  dedicated child of the engine seed so every backend
+                  sees the identical trace).
+- ``clock``     — ``RoundClock`` turns each round into simulated
+                  wall-clock seconds (download + local steps /
+                  compute_speed + upload over the ``CommModel`` byte
+                  ledger) and ``round_outcome`` applies the deadline
+                  policy: stragglers past the deadline are dropped and
+                  aggregation reweights the survivors.
+- ``config``    — ``SystemsConfig``, the JSON-safe, validated slot
+                  behind ``FLConfig.systems`` (deadline, over-selection
+                  factor, profile / availability presets).
+- ``runtime``   — ``SystemsRuntime``, the per-engine object the round
+                  loop consults: availability mask per round, per-client
+                  round times, and the dispatched-cohort outcome.
+
+Selection stays static-shaped on every backend: the strategy selects
+``ceil(m · over_select)`` clients, and dropped clients (offline or past
+the deadline) are zeroed in ``selection_weights`` — exactly the
+mask-gating mechanism the compiled / fused paths already rely on, so
+the no-retrace guarantees carry over unchanged.
+"""
+
+from repro.systems.clock import RoundClock, RoundOutcome, round_outcome
+from repro.systems.config import SystemsConfig
+from repro.systems.profiles import (
+    AVAILABILITY_PRESETS,
+    PROFILE_PRESETS,
+    AvailabilityModel,
+    DeviceProfile,
+    list_availability_models,
+    list_profiles,
+    make_availability,
+    make_profile,
+)
+from repro.systems.runtime import SystemsRuntime
+
+__all__ = [
+    "AVAILABILITY_PRESETS",
+    "PROFILE_PRESETS",
+    "AvailabilityModel",
+    "DeviceProfile",
+    "RoundClock",
+    "RoundOutcome",
+    "SystemsConfig",
+    "SystemsRuntime",
+    "list_availability_models",
+    "list_profiles",
+    "make_availability",
+    "make_profile",
+    "round_outcome",
+]

@@ -1,0 +1,91 @@
+"""``SystemsRuntime`` — the per-engine systems state the round loop
+consults (DESIGN.md §10).
+
+Built once in ``Engine.__init__`` from the validated ``SystemsConfig``
+plus the engine-derived quantities (executed local steps per client,
+model payload bytes, the experiment seed).  The round loop asks it
+three things:
+
+- ``available(t)``   — the (K,) availability mask at round ``t``
+                       (gates the loss vector to ``-inf`` before every
+                       selection call, on every backend);
+- ``times(t)``       — the (K,) simulated per-client round durations;
+- ``outcome(t, sel)`` / ``outcome_from_mask(t, mask)`` — the deadline
+                       policy applied to the dispatched cohort: the
+                       surviving participants, the drop count, and the
+                       round's simulated duration.  The index and mask
+                       entry points share one core, so the eager
+                       backends and the fused scan unpacker account
+                       rounds identically.
+
+Everything is deterministic per (seed, round): host, compiled,
+scaleout, and fused runs of one config see bit-identical availability
+traces and round times.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.systems.clock import RoundClock, RoundOutcome, round_outcome
+from repro.systems.config import SystemsConfig
+from repro.systems.profiles import make_availability, make_profile
+
+__all__ = ["SystemsRuntime"]
+
+_MB = 1024.0 * 1024.0
+
+
+class SystemsRuntime:
+    def __init__(self, cfg: SystemsConfig, *, n_clients: int,
+                 steps: np.ndarray, n_params: int,
+                 download_bytes_per_param: float = 4.0,
+                 upload_bytes_per_param: float = 4.0, seed: int = 0):
+        self.cfg = cfg
+        self.profile = make_profile(
+            cfg.profile, n_clients, seed=seed, **cfg.profile_kwargs
+        )
+        self.availability = make_availability(
+            cfg.availability, n_clients, seed=seed, **cfg.availability_kwargs
+        )
+        self.clock = RoundClock(
+            self.profile,
+            download_mb=n_params * download_bytes_per_param / _MB,
+            upload_mb=n_params * upload_bytes_per_param / _MB,
+            steps=steps,
+            jitter_sigma=cfg.jitter_sigma,
+            seed=seed,
+        )
+
+    # ------------------------------------------------------------------
+    def available(self, t: int) -> np.ndarray:
+        """(K,) bool online states at round ``t``."""
+        return self.availability.mask(t)
+
+    def times(self, t: int) -> np.ndarray:
+        """(K,) simulated per-client round durations at round ``t``."""
+        return self.clock.times(t)
+
+    def arrived(self, t: int) -> np.ndarray:
+        """(K,) bool — would a client's update beat the deadline this
+        round?  All-true when no deadline is set.  (The fused backend
+        feeds whole chunks of this into its scanned round.)"""
+        if self.cfg.deadline_s is None:
+            return np.ones(self.profile.n_clients, bool)
+        return self.times(t) <= self.cfg.deadline_s
+
+    def latency_hint(self) -> np.ndarray:
+        """(K,) expected round seconds — the profile-derived latency
+        handed to latency-aware strategies (HACCS) at setup."""
+        return self.clock.base_times()
+
+    # ------------------------------------------------------------------
+    def outcome(self, t: int, sel: np.ndarray) -> RoundOutcome:
+        """Deadline/availability outcome for the dispatched index list."""
+        return round_outcome(
+            sel, self.available(t), self.times(t), self.cfg.deadline_s
+        )
+
+    def outcome_from_mask(self, t: int, sel_mask: np.ndarray) -> RoundOutcome:
+        """Same, from a (K,) participation mask (the fused scan output)."""
+        return self.outcome(t, np.where(np.asarray(sel_mask, bool))[0])

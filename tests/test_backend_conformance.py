@@ -115,6 +115,9 @@ def test_compressed_aggregation_close_to_exact(task, data, lm_data):
 ROUND_RESULT_FIELDS = (
     "round", "selected", "mean_selected_loss", "comm_mb",
     "test_loss", "test_acc",
+    # systems axis (PR 5): simulated wall clock + deadline drops; task
+    # extras (LM perplexity).  Defaults keep systems-free runs identical.
+    "sim_time", "sim_clock", "n_dropped", "metrics",
 )
 
 # every backend on the classification task + one LM cell (the LM grid

@@ -33,10 +33,12 @@ def _max_err(a, b):
 # ------------------------------------------------------------- validation
 def test_traced_strategy_registry():
     """The traced-selection surface fuse_rounds promises (and the one
-    documented exclusion: fedlecc_adaptive's J is a static argument)."""
-    assert {"fedlecc", "lossonly", "clusterrandom", "haccs"} <= set(TRACED)
+    documented exclusion: fedlecc_adaptive's J is a static argument).
+    poc joined via the Gumbel-top-k candidate draw and random via
+    key-derived uniform scores (ROADMAP (j) / (g))."""
+    assert {"fedlecc", "lossonly", "clusterrandom", "haccs",
+            "poc", "random"} <= set(TRACED)
     assert "fedlecc_adaptive" not in TRACED
-    assert "poc" not in TRACED  # host-side candidate draw
 
 
 def test_fuse_rounds_validation():
@@ -45,7 +47,7 @@ def test_fuse_rounds_validation():
     with pytest.raises(ValueError, match="backend='compiled'"):
         _cfg(backend="host", fuse_rounds=2)
     with pytest.raises(ValueError, match="select_mask_traced") as ei:
-        _cfg(backend="compiled", strategy="poc", fuse_rounds=2)
+        _cfg(backend="compiled", strategy="fedlecc_adaptive", fuse_rounds=2)
     for name in TRACED:  # actionable: the error names every traced strategy
         assert name in str(ei.value)
     with pytest.raises(ValueError, match="fedavg"):
@@ -128,13 +130,17 @@ def test_fused_matches_host_end_to_end(data):
     assert _max_err(host.params, fused.params) < 1e-5
 
 
-def test_fused_clusterrandom_self_consistent(data):
-    """clusterrandom's fused selection rides the JAX PRNG stream: it is
+@pytest.mark.parametrize("strategy", ["clusterrandom", "poc", "random"])
+def test_fused_randomized_strategies_self_consistent(strategy, data):
+    """The randomized strategies' fused selection rides the JAX PRNG
+    stream (clusterrandom: key-derived Algorithm 1 scores; poc:
+    Gumbel-top-k candidate draw; random: key-derived uniform scores):
     deterministic per seed, uniform-valid (exactly m selected), but not
     host-lockstep (documented deviation)."""
     train, test = data
-    kw = dict(strategy="clusterrandom", strategy_kwargs={"J": 3},
-              rounds=4, eval_every=2)
+    kw = dict(strategy=strategy, rounds=4, eval_every=2)
+    if strategy == "clusterrandom":
+        kw["strategy_kwargs"] = {"J": 3}
     a = make_engine(_cfg(backend="compiled", fuse_rounds=2, **kw),
                     train, test, 10)
     b = make_engine(_cfg(backend="compiled", fuse_rounds=2, **kw),

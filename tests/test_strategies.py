@@ -40,6 +40,24 @@ def test_poc_prefers_high_loss(rng):
     assert losses[sel].mean() > losses.mean()  # biased toward high loss
 
 
+def test_plain_subclass_of_base_stays_host_only():
+    """The extension-base contract: subclassing SelectionStrategy and
+    overriding only select() must NOT inherit the jit/traced selection
+    flags — otherwise a mask-gated backend would silently run the base
+    mask instead of the subclass's selection logic (the registered
+    `random` strategy opts in via the UniformRandom subclass)."""
+    from repro.core.strategies import SelectionStrategy, UniformRandom
+
+    class Mine(SelectionStrategy):
+        def select(self, rnd, losses, rng):
+            return np.arange(self.m)
+
+    assert not Mine.supports_compiled_selection
+    assert not Mine.supports_traced_selection
+    assert UniformRandom.supports_compiled_selection
+    assert STRATEGY_REGISTRY["random"] is UniformRandom
+
+
 def test_unknown_strategy_raises():
     with pytest.raises(KeyError):
         get_strategy("nope", m=3)

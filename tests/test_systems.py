@@ -1,0 +1,443 @@
+"""The systems axis (``FLConfig.systems``, ``repro.systems``, DESIGN.md
+§10): device profiles, availability traces, the wall-clock round
+simulation, and deadline/over-selection semantics.
+
+Covers the PR's acceptance surface:
+
+- ``systems=None`` (the default) stays bit-identical to the
+  frictionless engine, and an *inert* systems config (uniform profile,
+  everyone always on, no deadline, over_select=1) matches it too;
+- availability-gated masks are identical across host / compiled / fused
+  backends (one shared exogenous trace);
+- deadline drops reweight the survivors to a unit-sum weight vector;
+- a deadline + over-selection configuration reaches the target accuracy
+  in less simulated wall-clock than the no-deadline baseline;
+- the compiled cohort train and the fused chunks keep their
+  no-retrace guarantees with systems enabled;
+- HACCS's latency tiebreak consumes the profile-derived latency;
+- the LM task surfaces held-out perplexity (total and per topic
+  cluster) in ``RoundResult.metrics`` and the run history.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import LM_VOCAB, fl_cfg as _cfg, lm_fl_cfg as _lm_cfg
+from repro.core.selection import selection_weights
+from repro.engine import FLConfig, SystemsConfig, make_engine
+from repro.systems import (
+    RoundClock,
+    list_availability_models,
+    list_profiles,
+    make_availability,
+    make_profile,
+    round_outcome,
+)
+
+
+def _max_err(a, b):
+    return max(
+        float(np.max(np.abs(np.asarray(x) - np.asarray(y))))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+
+
+# ------------------------------------------------------------- config
+def test_systems_config_validation_and_round_trip():
+    with pytest.raises(ValueError, match="unknown device profile"):
+        SystemsConfig(profile="datacenter")
+    with pytest.raises(ValueError, match="unknown availability model"):
+        SystemsConfig(availability="solar_flare")
+    with pytest.raises(ValueError, match="over_select"):
+        SystemsConfig(over_select=0.5)
+    with pytest.raises(ValueError, match="deadline_s"):
+        SystemsConfig(deadline_s=0.0)
+    with pytest.raises(ValueError, match="jitter_sigma"):
+        SystemsConfig(jitter_sigma=-1.0)
+    with pytest.raises(ValueError, match="unknown SystemsConfig keys"):
+        SystemsConfig.from_dict({"profile": "uniform", "bogus": 1})
+    with pytest.raises(ValueError, match="systems must be"):
+        _cfg(systems=42)
+
+    import json
+
+    cfg = _cfg(systems=SystemsConfig(
+        profile="mobile_mix", availability="markov",
+        availability_kwargs={"p_drop": 0.2, "p_join": 0.6},
+        deadline_s=30.0, over_select=1.3, jitter_sigma=0.2,
+    ))
+    d = json.loads(json.dumps(cfg.to_dict()))
+    assert isinstance(d["systems"], dict)  # JSON-safe nested form
+    restored = FLConfig.from_dict(d)
+    assert restored == cfg and isinstance(restored.systems, SystemsConfig)
+    # the frictionless default serializes as null and restores as None
+    assert _cfg().to_dict()["systems"] is None
+    assert FLConfig.from_dict(_cfg().to_dict()).systems is None
+
+
+def test_systems_config_m_effective():
+    sc = SystemsConfig(over_select=1.3)
+    assert sc.m_effective(10, 100) == 13
+    assert sc.m_effective(10, 12) == 12           # clipped to the population
+    assert SystemsConfig().m_effective(10, 100) == 10
+
+
+# ------------------------------------------------------------ profiles
+def test_profile_presets_registered_and_shaped():
+    assert {"uniform", "zipf_compute", "mobile_mix"} <= set(list_profiles())
+    assert {"always", "bernoulli", "markov"} <= set(list_availability_models())
+    for name in ("uniform", "zipf_compute", "mobile_mix"):
+        p = make_profile(name, 40, seed=0)
+        assert p.n_clients == 40
+        for arr in (p.compute_speed, p.down_mbps, p.up_mbps):
+            assert arr.shape == (40,) and (arr > 0).all()
+    # deterministic per seed, different across seeds
+    a, b = make_profile("mobile_mix", 40, seed=0), make_profile("mobile_mix", 40, seed=0)
+    np.testing.assert_array_equal(a.compute_speed, b.compute_speed)
+    c = make_profile("mobile_mix", 40, seed=1)
+    assert not np.array_equal(a.compute_speed, c.compute_speed)
+    # uniform really is uniform; the mixes really spread
+    u = make_profile("uniform", 40)
+    assert np.ptp(u.compute_speed) == 0.0
+    assert np.ptp(make_profile("zipf_compute", 40).compute_speed) > 0
+    with pytest.raises(ValueError, match="unknown device profile"):
+        make_profile("nope", 4)
+
+
+def test_availability_traces_deterministic():
+    for name, kw in (("always", {}), ("bernoulli", {"p": 0.7}),
+                     ("markov", {"p_drop": 0.3, "p_join": 0.5})):
+        a = make_availability(name, 50, seed=3, **kw)
+        b = make_availability(name, 50, seed=3, **kw)
+        for t in (0, 5, 2):  # out-of-order access must not change the trace
+            np.testing.assert_array_equal(a.mask(t), b.mask(t))
+            assert a.mask(t).shape == (50,) and a.mask(t).dtype == bool
+    assert make_availability("always", 8).mask(123).all()
+    bern = make_availability("bernoulli", 2000, seed=0, p=0.7)
+    assert abs(bern.mask(0).mean() - 0.7) < 0.05
+    mark = make_availability("markov", 2000, seed=0, p_drop=0.1, p_join=0.4)
+    # stationary on-fraction = p_join / (p_join + p_drop) = 0.8
+    assert abs(np.mean([mark.mask(t).mean() for t in range(10)]) - 0.8) < 0.05
+    with pytest.raises(ValueError, match="p_drop"):
+        make_availability("markov", 4, p_drop=1.5)
+
+
+# --------------------------------------------------------------- clock
+def test_round_clock_and_deadline_outcome():
+    prof = make_profile("zipf_compute", 8, seed=0)
+    clock = RoundClock(prof, download_mb=10.0, upload_mb=10.0,
+                       steps=np.full(8, 20), jitter_sigma=0.0, seed=0)
+    base = clock.base_times()
+    assert (base > 0).all()
+    np.testing.assert_array_equal(clock.times(0), clock.times(1))  # no jitter
+    jittered = RoundClock(prof, 10.0, 10.0, np.full(8, 20),
+                          jitter_sigma=0.3, seed=0)
+    assert not np.array_equal(jittered.times(0), jittered.times(1))
+    np.testing.assert_array_equal(jittered.times(4), jittered.times(4))
+
+    sel = np.arange(6)
+    avail = np.ones(8, bool)
+    # no deadline: everyone reachable arrives; round takes the slowest
+    out = round_outcome(sel, avail, base, None)
+    assert out.n_dropped == 0 and out.sim_time == base[sel].max()
+    np.testing.assert_array_equal(out.survivors, sel)
+    # a deadline between the fastest and slowest drops the stragglers
+    # and caps the round at the deadline
+    d = float(np.median(base[sel]))
+    out = round_outcome(sel, avail, base, d)
+    assert 0 < out.n_dropped < len(sel)
+    assert out.sim_time == d
+    assert (base[out.survivors] <= d).all()
+    # offline clients are dropped at dispatch and pay nothing
+    avail[sel[0]] = False
+    out2 = round_outcome(sel, avail, base, None)
+    assert sel[0] not in out2.survivors and out2.n_reached == len(sel) - 1
+
+
+def test_deadline_drop_reweighting_sums_to_one_over_survivors():
+    """The static-shape drop mechanism: survivors of the dispatched
+    cohort keep their (renormalized) FedAvg weight, dropped clients are
+    exact zeros, and the weight vector sums to 1."""
+    sizes = np.array([10.0, 40.0, 25.0, 25.0, 60.0, 5.0])
+    dispatched = np.array([0, 1, 3, 4])
+    survivors = np.array([1, 4])
+    mask = np.zeros(6, bool)
+    mask[survivors] = True
+    w = np.asarray(selection_weights(mask, sizes))
+    assert w.sum() == pytest.approx(1.0)
+    assert (w[[0, 2, 3, 5]] == 0).all()  # dropped + unselected: exact zeros
+    assert w[1] == pytest.approx(40.0 / 100.0)
+    assert w[4] == pytest.approx(60.0 / 100.0)
+    del dispatched  # (the dropped members of it are the zeroed slots)
+
+
+# ------------------------------------------------ engine integration
+def _sys_kw(**over):
+    base = dict(profile="zipf_compute", availability="bernoulli",
+                availability_kwargs={"p": 0.7}, deadline_s=2.0,
+                over_select=1.5, jitter_sigma=0.1)
+    if "availability" in over and "availability_kwargs" not in over:
+        base["availability_kwargs"] = {}
+    base.update(over)
+    return base
+
+
+def test_inert_systems_matches_frictionless_engine(data):
+    """The golden regression: an *inert* systems config (uniform
+    profile, everyone on, no deadline, over_select=1) must reproduce
+    the systems=None trajectory bit for bit — enabling the layer
+    without any friction changes nothing but the clock fields."""
+    train, test = data
+    for backend in ("host", "compiled"):
+        plain = make_engine(_cfg(backend=backend), train, test, 10)
+        inert = make_engine(
+            _cfg(backend=backend, systems=SystemsConfig()), train, test, 10
+        )
+        rp, ri = list(plain.rounds(3)), list(inert.rounds(3))
+        for a, b in zip(rp, ri):
+            assert a.selected == b.selected
+            assert b.n_dropped == 0 and b.sim_time > 0.0
+            assert a.comm_mb == pytest.approx(b.comm_mb)
+        assert _max_err(plain.params, inert.params) == 0.0
+
+
+_AVAIL_CASES = {
+    "bernoulli": {"p": 0.7},
+    # churny chain (stationary on-fraction 0.5) so offline dispatches
+    # and deadline drops both actually occur within the short run
+    "markov": {"p_drop": 0.4, "p_join": 0.4},
+}
+
+
+@pytest.mark.parametrize("availability", sorted(_AVAIL_CASES))
+def test_availability_gated_masks_identical_across_backends(availability, data):
+    """host / compiled / fused consume one exogenous availability trace:
+    identical survivor sets, drop counts, simulated times, and allclose
+    params — the conformance cell the acceptance criteria name."""
+    train, test = data
+    kw = dict(strategy="fedlecc", strategy_kwargs={"J": 3}, rounds=6,
+              eval_every=2,
+              systems=_sys_kw(availability=availability,
+                              availability_kwargs=_AVAIL_CASES[availability]))
+    runs = {}
+    for name, cfg_kw in (
+        ("host", dict(backend="host")),
+        ("compiled", dict(backend="compiled")),
+        ("fused", dict(backend="compiled", fuse_rounds=3)),
+    ):
+        eng = make_engine(_cfg(**{**kw, **cfg_kw}), train, test, 10)
+        runs[name] = (list(eng.rounds(6)), eng.params)
+    ref, ref_params = runs["host"]
+    assert any(r.n_dropped > 0 for r in ref)  # the deadline actually bites
+    for name in ("compiled", "fused"):
+        rs, params = runs[name]
+        for a, b in zip(ref, rs):
+            assert a.selected == b.selected, (name, a.round)
+            assert a.n_dropped == b.n_dropped
+            assert a.sim_time == pytest.approx(b.sim_time)
+            assert a.comm_mb == pytest.approx(b.comm_mb)
+            assert a.mean_selected_loss == pytest.approx(
+                b.mean_selected_loss, rel=1e-4, nan_ok=True
+            )
+        assert _max_err(ref_params, params) < 1e-5
+
+
+def test_over_selection_dispatches_ceil_m_times_factor(data):
+    train, test = data
+    cfg = _cfg(systems=_sys_kw(availability="always", deadline_s=None,
+                               over_select=1.5, jitter_sigma=0.0))
+    eng = make_engine(cfg, train, test, 10)
+    assert eng.m_eff == 6  # ceil(4 * 1.5)
+    (r0,) = list(eng.rounds(1))
+    assert len(r0.selected) == 6 and r0.n_dropped == 0
+
+
+def test_no_upload_round_keeps_model(data):
+    """If every dispatched client is dropped (deadline below the fastest
+    device), the global model must stand still, not collapse to the
+    all-zero weighted sum."""
+    train, test = data
+    sys_kw = _sys_kw(availability="always", deadline_s=1e-6, jitter_sigma=0.0)
+    for backend, extra in (("host", {}), ("compiled", {}),
+                           ("compiled", {"fuse_rounds": 2})):
+        eng = make_engine(_cfg(backend=backend, systems=dict(sys_kw), **extra),
+                          train, test, 10)
+        before = jax.device_get(eng.params)
+        rs = list(eng.rounds(2))
+        assert all(r.selected == () and r.n_dropped == 6 for r in rs)
+        assert _max_err(before, jax.device_get(eng.params)) == 0.0
+
+
+def test_deadline_over_selection_beats_no_deadline_sim_time(data):
+    """The acceptance property: under a heterogeneous profile, a
+    deadline + over-selection configuration reaches the target accuracy
+    in less simulated wall-clock than waiting for every straggler."""
+    train, test = data
+    rounds = 10
+    kw = dict(strategy="fedlecc", strategy_kwargs={"J": 3}, rounds=rounds,
+              eval_every=1)
+    base_eng = make_engine(_cfg(systems=dict(
+        profile="zipf_compute", availability="always", jitter_sigma=0.0,
+    ), **kw), train, test, 10)
+    base = list(base_eng.rounds(rounds))
+    # deadline at the median device time: stragglers dropped, rounds
+    # capped well below the slowest-device time the baseline pays
+    d = float(np.median(base_eng._systems.clock.base_times()))
+    ddl_eng = make_engine(_cfg(systems=dict(
+        profile="zipf_compute", availability="always", jitter_sigma=0.0,
+        deadline_s=d, over_select=1.5,
+    ), **kw), train, test, 10)
+    ddl = list(ddl_eng.rounds(rounds))
+
+    target = min(max(r.test_acc for r in base),
+                 max(r.test_acc for r in ddl)) * 0.95
+
+    def time_to(rs):
+        return next(r.sim_clock for r in rs if r.test_acc is not None
+                    and r.test_acc >= target)
+
+    assert any(r.n_dropped > 0 for r in ddl)
+    assert time_to(ddl) < time_to(base)
+
+
+def test_no_retrace_with_systems_enabled(data):
+    """The static-shape drop mechanism keeps the jit caches at one
+    entry: the cohort train never retraces as survivors change, and
+    each fused chunk length compiles exactly once."""
+    train, test = data
+    sys_kw = _sys_kw(profile="mobile_mix", availability="markov",
+                     availability_kwargs={"p_drop": 0.2, "p_join": 0.6})
+    eager = make_engine(_cfg(backend="compiled", systems=sys_kw, rounds=5,
+                             eval_every=2), train, test, 10)
+    rs = list(eager.rounds(5))
+    assert len({r.selected for r in rs}) > 1       # cohorts moved
+    assert eager._train_cohort._cache_size() == 1  # ... without retracing
+    fused = make_engine(_cfg(backend="compiled", fuse_rounds=2, rounds=7,
+                             eval_every=100, systems=sys_kw), train, test, 10)
+    list(fused.rounds(7))
+    assert sorted(fused._chunk_cache) == [1, 2]
+    for fn in fused._chunk_cache.values():
+        assert fn._cache_size() == 1
+
+
+def test_haccs_latency_tiebreak_uses_profile(data):
+    """ROADMAP'd in the tentpole: with a systems profile, HACCS ranks by
+    the profile-derived expected round time instead of the placeholder
+    lognormal draw."""
+    train, test = data
+    sys_kw = dict(profile="mobile_mix", availability="always")
+    eng = make_engine(_cfg(strategy="haccs", systems=sys_kw), train, test, 10)
+    np.testing.assert_array_equal(
+        eng.strategy.latency, eng._systems.latency_hint()
+    )
+    plain = make_engine(_cfg(strategy="haccs"), train, test, 10)
+    assert not np.array_equal(plain.strategy.latency, eng.strategy.latency)
+    # selection still returns the full cohort through the engine
+    (r0,) = list(eng.rounds(1))
+    assert len(r0.selected) == 4
+
+
+def test_systems_runtime_with_scaleout_backend(data):
+    """The fourth backend: the scaleout psum weights carry only the
+    survivors, matching the host trajectory under one systems config."""
+    train, test = data
+    kw = dict(strategy="fedlecc", strategy_kwargs={"J": 3}, rounds=3,
+              eval_every=1, systems=_sys_kw())
+    host = make_engine(_cfg(backend="host", **kw), train, test, 10)
+    scale = make_engine(_cfg(backend="scaleout", **kw), train, test, 10)
+    rh, rs = list(host.rounds(3)), list(scale.rounds(3))
+    for a, b in zip(rh, rs):
+        assert a.selected == b.selected and a.n_dropped == b.n_dropped
+        assert a.sim_time == pytest.approx(b.sim_time)
+    assert _max_err(host.params, scale.params) < 1e-5
+
+
+# ------------------------------------------------- random / poc tiers
+def test_random_strategy_joins_mask_and_traced_tiers(data):
+    """ROADMAP (g): random carries select_mask_jax (host-lockstep) and
+    select_mask_traced; the host-only set shrinks to fedcls/fedcor."""
+    from repro.engine import mask_selection_strategies
+    from repro.engine.registry import (
+        STRATEGY_REGISTRY,
+        traced_selection_strategies,
+    )
+
+    masked = set(mask_selection_strategies())
+    assert "random" in masked and "poc" in masked
+    host_only = set(STRATEGY_REGISTRY.names()) - masked
+    assert host_only == {"fedcls", "fedcor"}
+    assert {"random", "poc"} <= set(traced_selection_strategies())
+
+    train, test = data
+    host = make_engine(_cfg(strategy="random", backend="host"),
+                       train, test, 10)
+    comp = make_engine(_cfg(strategy="random", backend="compiled"),
+                       train, test, 10)
+    rh, rc = list(host.rounds(3)), list(comp.rounds(3))
+    for a, b in zip(rh, rc):
+        assert a.selected == b.selected  # one rng stream, lockstep
+    assert _max_err(host.params, comp.params) < 1e-5
+
+
+def test_offline_clients_deprioritized_by_every_strategy():
+    """The -inf availability gate: with more online clients than slots,
+    no strategy dispatches an offline client."""
+    from repro.core.strategies import get_strategy
+
+    rng = np.random.default_rng(0)
+    K, m = 24, 6
+    hists = rng.dirichlet(np.ones(10) * 0.3, size=K)
+    sizes = np.full(K, 80.0)
+    offline = np.zeros(K, bool)
+    offline[rng.choice(K, size=10, replace=False)] = True
+    losses = rng.uniform(0.5, 3.0, K).astype(np.float32)
+    gated = np.where(offline, -np.inf, losses).astype(np.float32)
+    for name in ("fedlecc", "lossonly", "poc", "haccs", "random",
+                 "clusterrandom", "fedcls", "fedcor", "fedlecc_adaptive"):
+        s = get_strategy(name, m=m)
+        s.setup(hists, sizes, seed=0)
+        sel = s.select(0, gated, np.random.default_rng(1))
+        assert not offline[sel].any(), f"{name} dispatched offline clients"
+        if getattr(s, "supports_compiled_selection", False):
+            mask = np.asarray(s.select_mask_jax(gated, np.random.default_rng(1)))
+            assert not offline[mask].any(), f"{name} jax mask hit offline"
+        if getattr(s, "supports_traced_selection", False):
+            tmask = np.asarray(s.select_mask_traced(
+                jax.numpy.asarray(gated), jax.random.PRNGKey(0)
+            ))
+            assert int(tmask.sum()) == m
+            assert not offline[tmask].any(), f"{name} traced mask hit offline"
+
+
+# ------------------------------------------------- LM perplexity (h)
+def test_lm_task_surfaces_perplexity_metrics(lm_data):
+    """ROADMAP (h): the lm task reports held-out perplexity, total and
+    per topic cluster, on evaluated rounds — and run() lands it in the
+    history dict."""
+    train, test = lm_data
+    eng = make_engine(_lm_cfg(), train, test, n_classes=LM_VOCAB)
+    results = list(eng.rounds(2))
+    for r in results:
+        assert r.evaluated and r.metrics is not None
+        assert r.metrics["ppl"] > 1.0 and np.isfinite(r.metrics["ppl"])
+        per = r.metrics["ppl_per_cluster"]
+        assert isinstance(per, dict) and len(per) >= 1
+        assert all(np.isfinite(v) and v > 0 for v in per.values())
+    # total ppl is consistent with the reported test CE loss scale
+    assert np.log(results[-1].metrics["ppl"]) == pytest.approx(
+        results[-1].test_loss, rel=0.2
+    )
+    eng2 = make_engine(_lm_cfg(), train, test, n_classes=LM_VOCAB)
+    hist = eng2.run()
+    assert "ppl" in hist and len(hist["ppl"]) == len(hist["round"])
+    assert "ppl_per_cluster" in hist
+
+
+def test_classification_task_has_no_extra_metrics(data):
+    train, test = data
+    eng = make_engine(_cfg(), train, test, 10)
+    (r0, *_rest) = list(eng.rounds(1))
+    assert r0.metrics is None
+    hist_keys = set(make_engine(_cfg(), train, test, 10).run())
+    assert "ppl" not in hist_keys and "sim_clock" not in hist_keys
