@@ -1,0 +1,54 @@
+"""repro.analysis — "tracecheck": static verification of the engine's
+tracing, PRNG, and donation contracts (DESIGN.md §11).
+
+The engine rests on invariants that nothing used to check until a test
+happened to trip over them at runtime: no-retrace guarantees in the
+compiled/fused paths, strict ``fold_in``/``split`` PRNG-stream
+discipline across four backends, donated ``(params, key)`` carries, and
+per-strategy capability flags that must agree with the methods actually
+defined.  This package checks them *before any round runs*, in two
+layers:
+
+- **AST lint** (``repro.analysis.lint`` + ``repro.analysis.rules``) —
+  repo-specific rules over the ``repro`` source tree: global-state RNG,
+  host-sync idioms inside traced code in the jit hot paths, PRNG key
+  derivation and single-consumption discipline, capability-flag ↔
+  method consistency, and explicit static/donate decisions on every
+  ``jax.jit``.  Pure ``ast`` — importing this layer never imports jax.
+- **Trace/compile contract checks** (``repro.analysis.contracts``) —
+  for every registered mask strategy, trace ``select_mask_jax`` /
+  ``select_mask_traced`` per task and assert a static ``(K,)`` boolean
+  mask whose jaxpr contains no callback primitives; verify the fused
+  chunk executable actually donates the ``(params, key)`` carry; and a
+  retrace sentinel that drives ``rounds()`` on every backend and fails
+  if any jit compiles more than its documented budget.
+
+CLI: ``python -m repro.analysis`` (exit non-zero on violations,
+``--json`` report) — wired as the CI ``static`` job.  Suppress a lint
+finding with an inline pragma: ``# tracecheck: disable=<rule>[,<rule>]``
+on the offending line, or ``# tracecheck: disable-file[=<rules>]`` on a
+line of its own.
+"""
+
+from repro.analysis.lint import (
+    HOT_PATH_MODULES,
+    LintReport,
+    Violation,
+    default_root,
+    lint_paths,
+    lint_source,
+    run_lint,
+)
+from repro.analysis.rules import RULES, rule_catalog
+
+__all__ = [
+    "HOT_PATH_MODULES",
+    "LintReport",
+    "RULES",
+    "Violation",
+    "default_root",
+    "lint_paths",
+    "lint_source",
+    "rule_catalog",
+    "run_lint",
+]

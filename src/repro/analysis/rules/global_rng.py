@@ -1,0 +1,58 @@
+"""Rule ``no-global-rng`` — no global-state RNG in library code.
+
+Every random draw in the repro tree is reproducible because it comes
+from an explicitly seeded stream: a ``np.random.default_rng(seed)``
+generator or a jax PRNG key.  Calls that mutate or read the *module
+level* numpy/stdlib RNG state (``np.random.normal``, ``np.random.seed``,
+``random.random``, ...) silently couple components through hidden global
+state and break the per-(seed, round) determinism the systems layer and
+the conformance suite depend on.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.lint import FileContext, Violation
+from repro.analysis.rules import Rule, canonical_call_name, register_rule, resolve_aliases
+
+# Constructors of *seeded, local* state are fine; everything else on
+# numpy.random is a module-level draw or a global-state mutation.
+_NUMPY_ALLOWED = {
+    "default_rng", "Generator", "RandomState", "SeedSequence",
+    "PCG64", "PCG64DXSM", "Philox", "MT19937", "SFC64", "BitGenerator",
+}
+
+
+@register_rule
+class NoGlobalRNG(Rule):
+    name = "no-global-rng"
+    description = (
+        "no module-level RNG (np.random.* draws, random.*, random.seed) in "
+        "library code — use a seeded np.random.default_rng or a jax PRNG key"
+    )
+
+    def check(self, tree: ast.Module, ctx: FileContext) -> Iterable[Violation]:
+        aliases = resolve_aliases(tree)
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = canonical_call_name(node.func, aliases)
+            if name is None:
+                continue
+            if name.startswith("numpy.random."):
+                tail = name.split(".", 2)[2]
+                if tail.split(".")[0] not in _NUMPY_ALLOWED:
+                    yield self.violation(
+                        ctx, node,
+                        f"module-level numpy RNG call {name!r} draws from "
+                        f"hidden global state; use a seeded "
+                        f"np.random.default_rng(seed) generator",
+                    )
+            elif name.startswith("random.") and aliases.get("random", "") == "random":
+                yield self.violation(
+                    ctx, node,
+                    f"stdlib global RNG call {name!r}; use a seeded "
+                    f"np.random.default_rng(seed) or a jax PRNG key",
+                )

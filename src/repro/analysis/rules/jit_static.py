@@ -1,0 +1,72 @@
+"""Rule ``jit-static-donate`` — every ``jax.jit`` states its decision.
+
+A bare ``jax.jit(fn)`` in library code leaves two contracts implicit:
+which arguments are static (retrace triggers hide here — an unmarked
+python scalar retraces on every distinct value), and whether the input
+buffers are donated (the fused engine's whole perf story is the donated
+carry).  The rule requires every jit site to carry at least one of
+``static_argnums`` / ``static_argnames`` / ``donate_argnums`` /
+``donate_argnames`` — ``donate_argnums=()`` is the explicit "nothing
+static, nothing donated" decision.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.lint import FileContext, Violation
+from repro.analysis.rules import Rule, canonical_call_name, register_rule, resolve_aliases
+
+_JIT_NAMES = {"jax.jit", "jax.api.jit"}
+_DECISION_KWARGS = {
+    "static_argnums", "static_argnames", "donate_argnums", "donate_argnames",
+}
+
+
+def _is_jit(node: ast.AST, aliases: dict[str, str]) -> bool:
+    return canonical_call_name(node, aliases) in _JIT_NAMES
+
+
+@register_rule
+class JitStaticDonate(Rule):
+    name = "jit-static-donate"
+    description = (
+        "every jax.jit call/decorator must make its static/donate decision "
+        "explicit (static_argnums/static_argnames/donate_argnums/"
+        "donate_argnames; use donate_argnums=() for 'neither')"
+    )
+
+    def check(self, tree: ast.Module, ctx: FileContext) -> Iterable[Violation]:
+        aliases = resolve_aliases(tree)
+
+        bare_msg = (
+            "bare jax.jit: state the static/donate decision explicitly "
+            "(add static_argnums/static_argnames or donate_argnums — "
+            "donate_argnums=() means 'nothing static, nothing donated')"
+        )
+
+        # Decorators that are the bare name (@jax.jit) are never calls.
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    if not isinstance(dec, ast.Call) and _is_jit(dec, aliases):
+                        yield self.violation(ctx, dec, bare_msg)
+
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            kwargs: set[str] = set()
+            is_jit_site = False
+            if _is_jit(node.func, aliases):
+                # jax.jit(fn, ...) or @jax.jit(...)
+                is_jit_site = True
+                kwargs = {k.arg for k in node.keywords if k.arg}
+            elif canonical_call_name(node.func, aliases) in (
+                "functools.partial", "partial",
+            ) and node.args and _is_jit(node.args[0], aliases):
+                # partial(jax.jit, ...) decorator form
+                is_jit_site = True
+                kwargs = {k.arg for k in node.keywords if k.arg}
+            if is_jit_site and not (kwargs & _DECISION_KWARGS):
+                yield self.violation(ctx, node, bare_msg)

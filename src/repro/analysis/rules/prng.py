@@ -1,0 +1,246 @@
+"""PRNG key-discipline rules: ``prng-key-reuse`` and ``prng-sampler-key``.
+
+The whole repo's determinism story (DESIGN.md §4, §11) hangs on a
+strict key discipline: one 3-way ``split`` per round off a persisted
+carry, per-client keys via ``fold_in(key, client_index)``, and side
+streams on fold tags ≥ K.  Two statically checkable contracts fall out:
+
+- **prng-key-reuse** — a key is *consumed* by ``jax.random.split`` and
+  by every sampler (``normal``, ``choice``, ``gumbel``, ...).  Consuming
+  the same key twice silently correlates two draws that the paper's
+  algorithm treats as independent.  ``fold_in`` / ``clone`` / ``PRNGKey``
+  do not consume — deriving many tagged streams from one key is the
+  idiom, not the bug.
+- **prng-sampler-key** — a sampler must never eat a *root* key
+  (``PRNGKey(seed)`` inline or via a local variable): root keys are for
+  deriving streams with ``split``/``fold_in``, so every draw has an
+  auditable position in the key tree.
+
+The reuse tracker is deliberately definite-violations-only: it follows
+local ``Name`` bindings through straight-line code, copies state across
+``if`` branches, and walks loop bodies twice to catch cross-iteration
+reuse.  Keys reaching a function as parameters, flowing through
+attributes/subscripts, or passed to non-``jax.random`` callables are
+left alone — those flows need runtime information.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.lint import FileContext, Violation
+from repro.analysis.rules import Rule, canonical_call_name, register_rule, resolve_aliases
+
+# jax.random callables that do NOT consume their key argument.
+_NONCONSUMING = {
+    "PRNGKey", "key", "fold_in", "clone", "key_data", "wrap_key_data",
+    "key_impl", "unsafe_rbg_key",
+}
+# Everything else on jax.random taking a key first consumes it;
+# ``split`` consumes but is also the sanctioned deriver.
+_ROOT_MAKERS = {"PRNGKey", "key"}
+_DERIVERS = {"split", "fold_in", "clone"}
+
+_FRESH = "fresh"
+_CONSUMED = "consumed"
+_ROOT = "root"  # fresh, but assigned straight from PRNGKey()
+
+
+def _random_tail(node: ast.Call, aliases: dict[str, str]) -> str | None:
+    """``jr.split`` → ``"split"`` if the call targets jax.random, else None."""
+    name = canonical_call_name(node.func, aliases)
+    if name is None or not name.startswith("jax.random."):
+        return None
+    tail = name[len("jax.random."):]
+    return tail if "." not in tail else None
+
+
+class _Tracker:
+    """Per-function ordered walk over statements, tracking Name → key state."""
+
+    def __init__(self, rule: Rule, ctx: FileContext, aliases: dict[str, str],
+                 check_reuse: bool, check_root: bool):
+        self.rule = rule
+        self.ctx = ctx
+        self.aliases = aliases
+        self.check_reuse = check_reuse
+        self.check_root = check_root
+        self.state: dict[str, str] = {}
+        self.violations: list[Violation] = []
+        self._reported: set[tuple[int, int]] = set()
+
+    # -- events ----------------------------------------------------------
+    def _emit(self, node: ast.AST, message: str) -> None:
+        pos = (getattr(node, "lineno", 0), getattr(node, "col_offset", 0))
+        if pos not in self._reported:
+            self._reported.add(pos)
+            self.violations.append(self.rule.violation(self.ctx, node, message))
+
+    def _consume(self, arg: ast.expr, call: ast.Call, what: str) -> None:
+        if not isinstance(arg, ast.Name):
+            return
+        status = self.state.get(arg.id)
+        if status == _CONSUMED:
+            if self.check_reuse:
+                self._emit(
+                    call,
+                    f"PRNG key {arg.id!r} is consumed a second time by "
+                    f"jax.random.{what}; split or fold_in a fresh key for "
+                    f"each independent draw",
+                )
+        else:
+            if status == _ROOT and self.check_root and what != "split":
+                self._emit(
+                    call,
+                    f"jax.random.{what} consumes root key {arg.id!r} "
+                    f"(assigned from PRNGKey); derive a per-use key with "
+                    f"split/fold_in first",
+                )
+            self.state[arg.id] = _CONSUMED
+
+    def _visit_expr(self, expr: ast.expr) -> None:
+        for node in ast.walk(expr):
+            if not isinstance(node, ast.Call):
+                continue
+            tail = _random_tail(node, self.aliases)
+            if tail is None or tail in _NONCONSUMING or not node.args:
+                continue
+            if tail != "split" and self.check_root and isinstance(
+                node.args[0], ast.Call
+            ):
+                inner = _random_tail(node.args[0], self.aliases)
+                if inner in _ROOT_MAKERS:
+                    self._emit(
+                        node,
+                        f"jax.random.{tail} consumes an inline "
+                        f"jax.random.{inner}(...) root key; derive a "
+                        f"per-use key with split/fold_in first",
+                    )
+            self._consume(node.args[0], node, tail)
+
+    def _assign_target(self, target: ast.expr, status: str | None) -> None:
+        """Re-binding a name resets its key state (``None`` = untrack)."""
+        if isinstance(target, ast.Name):
+            if status is None:
+                self.state.pop(target.id, None)
+            else:
+                self.state[target.id] = status
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for el in target.elts:
+                self._assign_target(el, status)
+        # attribute / subscript targets: untrackable, ignore
+
+    def _value_status(self, value: ast.expr) -> str | None:
+        if isinstance(value, ast.Call):
+            tail = _random_tail(value, self.aliases)
+            if tail in _ROOT_MAKERS:
+                return _ROOT
+            if tail in _DERIVERS:
+                return _FRESH
+        return None
+
+    # -- statement walk --------------------------------------------------
+    def run(self, body: list[ast.stmt]) -> None:
+        for stmt in body:
+            self._stmt(stmt)
+
+    def _stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            return  # separate scope; handled by its own tracker
+        if isinstance(stmt, ast.Assign):
+            self._visit_expr(stmt.value)
+            status = self._value_status(stmt.value)
+            for t in stmt.targets:
+                self._assign_target(t, status)
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            self._visit_expr(stmt.value)
+            self._assign_target(stmt.target, self._value_status(stmt.value))
+        elif isinstance(stmt, ast.AugAssign):
+            self._visit_expr(stmt.value)
+            self._assign_target(stmt.target, None)
+        elif isinstance(stmt, ast.If):
+            self._visit_expr(stmt.test)
+            before = dict(self.state)
+            self.run(stmt.body)
+            after_body = self.state
+            self.state = dict(before)
+            self.run(stmt.orelse)
+            after_else = self.state
+            # keep only names whose state agrees across both branches
+            self.state = {
+                k: v for k, v in after_body.items()
+                if after_else.get(k) == v
+            }
+        elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self._visit_expr(stmt.iter)
+            for _pass in range(2):  # second pass catches cross-iteration reuse
+                self._assign_target(stmt.target, None)
+                self.run(stmt.body)
+            self.run(stmt.orelse)
+        elif isinstance(stmt, ast.While):
+            for _pass in range(2):
+                self._visit_expr(stmt.test)
+                self.run(stmt.body)
+            self.run(stmt.orelse)
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self._visit_expr(item.context_expr)
+            self.run(stmt.body)
+        elif isinstance(stmt, ast.Try):
+            self.run(stmt.body)
+            saved = dict(self.state)
+            for handler in stmt.handlers:
+                self.state = dict(saved)
+                self.run(handler.body)
+            self.state = saved
+            self.run(stmt.orelse)
+            self.run(stmt.finalbody)
+        elif isinstance(stmt, (ast.Return, ast.Expr)):
+            if stmt.value is not None:
+                self._visit_expr(stmt.value)
+        else:
+            for child in ast.iter_child_nodes(stmt):
+                if isinstance(child, ast.expr):
+                    self._visit_expr(child)
+
+
+def _function_bodies(tree: ast.Module):
+    """Every function body plus the module top level, each a separate scope."""
+    yield tree.body
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node.body
+
+
+def _run_tracker(rule: Rule, tree: ast.Module, ctx: FileContext, *,
+                 check_reuse: bool, check_root: bool) -> Iterable[Violation]:
+    aliases = resolve_aliases(tree)
+    for body in _function_bodies(tree):
+        tracker = _Tracker(rule, ctx, aliases, check_reuse, check_root)
+        tracker.run(body)
+        yield from tracker.violations
+
+
+@register_rule
+class PRNGKeyReuse(Rule):
+    name = "prng-key-reuse"
+    description = (
+        "no PRNG key consumed twice — split and every jax.random sampler "
+        "consume their key; derive fresh keys with split/fold_in per draw"
+    )
+
+    def check(self, tree: ast.Module, ctx: FileContext) -> Iterable[Violation]:
+        return _run_tracker(self, tree, ctx, check_reuse=True, check_root=False)
+
+
+@register_rule
+class PRNGSamplerKey(Rule):
+    name = "prng-sampler-key"
+    description = (
+        "samplers must not consume a root PRNGKey directly — every "
+        "jax.random draw derives its key via split/fold_in"
+    )
+
+    def check(self, tree: ast.Module, ctx: FileContext) -> Iterable[Violation]:
+        return _run_tracker(self, tree, ctx, check_reuse=False, check_root=True)

@@ -8,7 +8,7 @@ its own module under ``repro.configs``; ``get_config`` imports lazily.
 from __future__ import annotations
 
 import importlib
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import NamedTuple
 
 __all__ = [

@@ -215,6 +215,7 @@ class Engine:
         # DESIGN.md §10).  None = the frictionless engine; with a config,
         # the strategy dispatches the over-selected cohort (m_eff) and
         # the deadline policy drops stragglers down to the survivors. ---
+        self._systems: Any = None  # SystemsRuntime when cfg.systems is set
         if cfg.systems is not None:
             from repro.systems.runtime import SystemsRuntime
 
@@ -230,7 +231,6 @@ class Engine:
             )
             self.m_eff = cfg.systems.m_effective(cfg.m, cfg.n_clients)
         else:
-            self._systems = None
             self.m_eff = cfg.m
         self.sim_clock = 0.0
 
@@ -265,7 +265,8 @@ class Engine:
 
         self._build_shared_jits()
         self._round = 0
-        self._key = None  # the rounds() PRNG carry, persisted across calls
+        # the rounds() PRNG carry, persisted across calls
+        self._key: jax.Array | None = None
         self.history: dict[str, list] = {
             "round": [], "test_acc": [], "test_loss": [], "comm_mb": [],
             "mean_selected_loss": [], "selected": [],
@@ -295,13 +296,13 @@ class Engine:
             keys = jax.random.split(key, xs.shape[0])
             return jax.vmap(one)(xs, ys, mask, keys)
 
-        self._poll_losses = jax.jit(_poll_losses)
+        self._poll_losses = jax.jit(_poll_losses, donate_argnums=())
 
         def _evaluate(params, x, y):
             out = apply_fn(params, x)
             return loss_fn(out, y, None), metric_fn(out, y)
 
-        self._evaluate = jax.jit(_evaluate)
+        self._evaluate = jax.jit(_evaluate, donate_argnums=())
 
         # Task-defined extra evaluation metrics (None for tasks without
         # any): e.g. the LM task's held-out perplexity, total and per

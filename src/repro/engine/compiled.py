@@ -94,7 +94,7 @@ class CompiledEngine(MaskSelectionMixin, Engine):
             keys = self._client_keys(key, jnp.arange(K))
             return vmapped(params, xs, ys, mask, taus, keys)
 
-        self._train_all = jax.jit(_train_all)
+        self._train_all = jax.jit(_train_all, donate_argnums=())
 
         def _cohort_train(params, idx, key):
             """Train just the m-client cohort: ``idx`` is traced but its
@@ -113,18 +113,19 @@ class CompiledEngine(MaskSelectionMixin, Engine):
 
         # raw body reused inside the fused round chunk (repro.engine.fused)
         self._cohort_train_raw = _cohort_train
-        self._train_cohort = jax.jit(_cohort_train)
+        self._train_cohort = jax.jit(_cohort_train, donate_argnums=())
 
         def _masked_weights(mask):
             return selection_weights(mask, self._sizes_j)
 
-        self._masked_weights = jax.jit(_masked_weights)
+        self._masked_weights = jax.jit(_masked_weights, donate_argnums=())
 
         if cfg.compress_bits:
             from repro.federated.compression import compressed_fedavg
 
             self._compressed_agg = jax.jit(
-                partial(compressed_fedavg, bits=cfg.compress_bits)
+                partial(compressed_fedavg, bits=cfg.compress_bits),
+                donate_argnums=(),
             )
         self.last_quant_error: float | None = None
 

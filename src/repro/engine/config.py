@@ -47,6 +47,7 @@ backward compatibility) and extended with:
 from __future__ import annotations
 
 from dataclasses import asdict, dataclass, field, fields
+from typing import Any
 
 __all__ = ["FLConfig", "BACKENDS"]
 
@@ -150,7 +151,7 @@ class FLConfig:
     task_kwargs: dict = field(default_factory=dict)  # JSON-safe task params
     fuse_rounds: int = 0           # >0: scan-fuse round chunks (compiled only)
     compress_bits: int = 0         # >0: quantized cohort-delta aggregation
-    systems: object | None = None  # SystemsConfig | dict | None (repro.systems)
+    systems: Any = None  # SystemsConfig | dict | None (repro.systems)
 
     # ------------------------------------------------------------------
     def __post_init__(self) -> None:

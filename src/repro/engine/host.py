@@ -45,7 +45,8 @@ class HostEngine(Engine):
 
         h_ax = 0 if self.client_mode.needs_h else None
         self._round_train = jax.jit(
-            jax.vmap(_one_client, in_axes=(None, 0, 0, 0, 0, 0, h_ax))
+            jax.vmap(_one_client, in_axes=(None, 0, 0, 0, 0, 0, h_ax)),
+            donate_argnums=(),
         )
 
     # -- hooks ----------------------------------------------------------

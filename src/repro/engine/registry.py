@@ -61,7 +61,7 @@ _PROVIDERS: dict[str, tuple[str, ...]] = {
 }
 
 
-class Registry(Mapping):
+class Registry(Mapping[str, Any]):
     """A named string → component mapping with a ``register`` decorator.
 
     Behaves as a ``Mapping`` so legacy consumers written against plain
@@ -163,7 +163,53 @@ CLIENT_MODE_REGISTRY = Registry("client_mode")
 TASK_REGISTRY = Registry("task")
 PRESET_REGISTRY = Registry("preset")
 
-register_strategy = STRATEGY_REGISTRY.register
+# The capability-flag ↔ method pairs the mask-gated backends dispatch
+# on (see repro/core/strategies.py and the tracecheck AST twin of this
+# check, repro/analysis/rules/capability_flags.py).
+_CAPABILITY_PAIRS: tuple[tuple[str, str], ...] = (
+    ("supports_compiled_selection", "select_mask_jax"),
+    ("supports_traced_selection", "select_mask_traced"),
+)
+
+
+def _validate_strategy_capabilities(obj: Any) -> None:
+    """Import-time guard: a capability flag without its method crashes
+    the first compiled/fused round using the strategy; a method defined
+    in a class whose flag is False is silently dead code.  An inherited
+    method under an explicit ``flag = False`` is the sanctioned opt-out
+    (``FedLECCAdaptive``), so only own-body definitions contradict."""
+    if not isinstance(obj, type):
+        return
+    for flag, method in _CAPABILITY_PAIRS:
+        enabled = bool(getattr(obj, flag, False))
+        defined = callable(getattr(obj, method, None))
+        if enabled and not defined:
+            raise TypeError(
+                f"strategy {obj.__name__!r} sets {flag} = True but defines "
+                f"no {method}(); the mask-gated backends would crash on "
+                f"their first round — define {method} or set the flag False"
+            )
+        if not enabled and method in vars(obj):
+            raise TypeError(
+                f"strategy {obj.__name__!r} defines {method}() in its own "
+                f"body but {flag} is False; the backends will never call "
+                f"it — set {flag} = True or drop the method"
+            )
+
+
+def register_strategy(name: str | None = None) -> Callable[[Any], Any]:
+    """``STRATEGY_REGISTRY.register`` plus the capability-consistency
+    guard — strategies with mismatched ``supports_*`` flags fail at
+    class-definition (import) time, not mid-experiment."""
+    inner = STRATEGY_REGISTRY.register(name)
+
+    def deco(obj: Any) -> Any:
+        _validate_strategy_capabilities(obj)
+        return inner(obj)
+
+    return deco
+
+
 register_aggregator = AGGREGATOR_REGISTRY.register
 register_client_mode = CLIENT_MODE_REGISTRY.register
 register_task = TASK_REGISTRY.register

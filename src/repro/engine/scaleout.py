@@ -121,14 +121,17 @@ class ScaleoutEngine(MaskSelectionMixin, Engine):
         pod = P("pod")
         pspec = jax.tree.map(lambda _: pod, self.params)
         rspec = jax.tree.map(lambda _: P(), self.params)
-        self._round_fn = jax.jit(shard_map(
-            body,
-            mesh=self.mesh,
-            in_specs=(pspec, pod, pod, pod, pod, pod, pod),
-            out_specs=(rspec, pod),
-            axis_names={"pod"},
-            check_vma=False,
-        ))
+        self._round_fn = jax.jit(
+            shard_map(
+                body,
+                mesh=self.mesh,
+                in_specs=(pspec, pod, pod, pod, pod, pod, pod),
+                out_specs=(rspec, pod),
+                axis_names={"pod"},
+                check_vma=False,
+            ),
+            donate_argnums=(),
+        )
 
     # -- hooks (select comes from MaskSelectionMixin) --------------------
     def local_train(self, rnd: int, sel: np.ndarray, key: jax.Array,

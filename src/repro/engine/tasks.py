@@ -326,7 +326,7 @@ class LMTask(Task):
             )
             return tot / (nc * c)
 
-        per_seq_nll = jax.jit(_per_seq_nll)
+        per_seq_nll = jax.jit(_per_seq_nll, donate_argnums=())
 
         def compute(params, test_x, test_y) -> dict:
             nll = np.asarray(per_seq_nll(params, test_x, test_y))

@@ -20,7 +20,6 @@ as the paper-representative artifact.
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -142,15 +141,16 @@ def make_federated_round(cfg, mesh, lr: float, local_steps: int = 4,
         ends, losses = f_train(stacked_params, batch, weights)
         # manual specs for the aggregation: leading pod axis + the storage
         # sharding of every leaf (so shards stay local through the gather)
-        from repro.launch.mesh import make_production_mesh  # noqa: cycle-free
         from repro.models.transformer import transformer_specs
         from repro.sharding import make_policy
 
         policy = make_policy(mesh, batch_size=0)
         pspecs_logical = transformer_specs(cfg)
-        is_axes = lambda x: isinstance(x, tuple) and all(
-            isinstance(e, (str, tuple, type(None))) for e in x
-        )
+        def is_axes(x):
+            return isinstance(x, tuple) and all(
+                isinstance(e, (str, tuple, type(None))) for e in x
+            )
+
         flat_l = jax.tree.leaves(pspecs_logical, is_leaf=is_axes)
         flat_p = jax.tree.leaves(stacked_params)
         specs = [

@@ -355,9 +355,11 @@ def run_federated(arch: str, local_steps: int = 4, batch_per_client: int = 128,
         inner = policy.spec_for(tuple(axes), shape[1:])
         return NamedSharding(mesh, P("pod", *inner))
 
-    is_axes = lambda x: isinstance(x, tuple) and all(
-        isinstance(e, (str, tuple, type(None))) for e in x
-    )
+    def is_axes(x):
+        return isinstance(x, tuple) and all(
+            isinstance(e, (str, tuple, type(None))) for e in x
+        )
+
     flat_specs = jax.tree.leaves(pspecs, is_leaf=is_axes)
     flat_shapes = jax.tree.leaves(pshapes)
     stacked_shapes = jax.tree.unflatten(

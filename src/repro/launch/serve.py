@@ -41,12 +41,16 @@ def main():
     batch.pop("labels")
 
     t0 = time.time()
-    pre = jax.jit(lambda p, b: prefill(p, cfg, b, max_len=max_len))
+    pre = jax.jit(
+        lambda p, b: prefill(p, cfg, b, max_len=max_len), donate_argnums=()
+    )
     logits, cache = pre(params, batch)
     t_prefill = time.time() - t0
     print(f"prefill {args.batch}×{args.prompt_len}: {t_prefill:.2f}s")
 
-    dec = jax.jit(lambda p, b, c, pos: decode_step(p, cfg, b, c, pos))
+    dec = jax.jit(
+        lambda p, b, c, pos: decode_step(p, cfg, b, c, pos), donate_argnums=()
+    )
     tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
     out_tokens = [tok]
     t0 = time.time()

@@ -15,7 +15,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.configs import get_config
@@ -26,7 +25,6 @@ from repro.optim.optimizers import apply_updates
 
 
 def make_train_step(cfg, optimizer, mesh=None):
-    @jax.jit
     def step(params, opt_state, batch):
         (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
             params, cfg, batch, mesh
@@ -35,7 +33,9 @@ def make_train_step(cfg, optimizer, mesh=None):
         params = apply_updates(params, updates)
         return params, opt_state, loss, metrics
 
-    return step
+    # params/opt_state are reassigned from the step's own outputs in the
+    # train loop, so their input buffers can be donated.
+    return jax.jit(step, donate_argnums=(0, 1))
 
 
 def main():

@@ -24,12 +24,10 @@ model.
 
 from __future__ import annotations
 
-from typing import NamedTuple
-
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import apply_rope, he_init, lecun_init, rms_norm
+from repro.models.common import apply_rope, lecun_init, rms_norm
 
 __all__ = [
     "init_gqa", "gqa_specs", "gqa_attention", "gqa_decode",

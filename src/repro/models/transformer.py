@@ -24,7 +24,6 @@ Public API:
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -236,7 +235,9 @@ def _rope_tables(cfg, seq_len, positions=None):
     else:
         sin_g, cos_g = sin_l, cos_l
     if positions is not None:
-        sel = lambda t: jax.lax.dynamic_slice_in_dim(t, positions, 1, axis=0)
+        def sel(t):
+            return jax.lax.dynamic_slice_in_dim(t, positions, 1, axis=0)
+
         sin_l, cos_l, sin_g, cos_g = sel(sin_l), sel(cos_l), sel(sin_g), sel(cos_g)
     return (sin_l, cos_l), (sin_g, cos_g)
 

@@ -57,7 +57,9 @@ def adamw(
     """AdamW with fp32 moments regardless of param dtype (bf16-safe)."""
 
     def init(params):
-        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        def f32(p):
+            return jnp.zeros(p.shape, jnp.float32)
+
         return {
             "count": jnp.zeros((), jnp.int32),
             "m": jax.tree.map(f32, params),

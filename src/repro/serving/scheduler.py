@@ -20,7 +20,7 @@ Greedy decoding with optional EOS early-exit per group.
 from __future__ import annotations
 
 from collections import defaultdict
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -59,7 +59,8 @@ class BatchScheduler:
             static_argnums=(2,),
         )
         self._decode = jax.jit(
-            lambda p, b, c, pos: decode_step(p, cfg, b, c, pos, mesh=mesh)
+            lambda p, b, c, pos: decode_step(p, cfg, b, c, pos, mesh=mesh),
+            donate_argnums=(),
         )
 
     # ------------------------------------------------------------------

@@ -69,9 +69,11 @@ class ShardingPolicy:
     def shardings(self, specs_tree, shapes_tree):
         """specs_tree: logical-axes tuples; shapes_tree: matching
         ShapeDtypeStructs / arrays.  Returns a NamedSharding tree."""
-        is_axes = lambda x: isinstance(x, tuple) and all(
-            isinstance(e, (str, tuple, type(None))) for e in x
-        )
+        def is_axes(x):
+            return isinstance(x, tuple) and all(
+                isinstance(e, (str, tuple, type(None))) for e in x
+            )
+
         flat_specs = jax.tree.leaves(specs_tree, is_leaf=is_axes)
         flat_shapes = jax.tree.leaves(shapes_tree)
         assert len(flat_specs) == len(flat_shapes), (

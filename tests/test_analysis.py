@@ -1,0 +1,463 @@
+"""tracecheck (repro.analysis) — per-rule fixtures, pragmas, the
+registration guard, the jaxpr contract helpers, and the repo-self-clean
+gate (DESIGN.md §11).
+
+Every lint rule gets a violating + clean source pair driven through
+``lint_source``; the self-clean test runs the full rule set over the
+installed ``repro`` package exactly as CI's ``python -m repro.analysis``
+does, so a regression that reintroduces a bare jit or a global-RNG call
+fails tier-1 before it ever reaches the static job.
+"""
+
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import lint_source, run_lint
+from repro.analysis.rules import RULES, rule_catalog
+
+SRC_ROOT = Path(__file__).resolve().parent.parent / "src" / "repro"
+
+
+def lint(src, **kw):
+    return lint_source(textwrap.dedent(src), **kw)
+
+
+def rule_names(violations):
+    return [v.rule for v in violations]
+
+
+# ---------------------------------------------------------------- catalog
+def test_rule_catalog_complete():
+    names = {name for name, _ in rule_catalog()}
+    assert names == {
+        "no-global-rng", "no-host-sync", "jit-static-donate",
+        "prng-key-reuse", "prng-sampler-key", "capability-flags",
+    }
+    assert all(desc for _, desc in rule_catalog())
+    assert set(RULES) == names
+
+
+# ---------------------------------------------------------------- no-global-rng
+def test_global_rng_violating():
+    bad = lint("""
+        import numpy as np
+        import random
+
+        def f():
+            a = np.random.normal(size=3)
+            np.random.seed(0)
+            b = random.random()
+            random.seed(1)
+            return a, b
+    """, rules=["no-global-rng"])
+    assert len(bad) == 4
+    assert set(rule_names(bad)) == {"no-global-rng"}
+
+
+def test_global_rng_clean():
+    ok = lint("""
+        import numpy as np
+
+        def f(seed):
+            rng = np.random.default_rng(seed)
+            return rng.normal(size=3)
+    """, rules=["no-global-rng"])
+    assert ok == []
+
+
+def test_global_rng_alias_resolution():
+    bad = lint("""
+        import numpy.random as npr
+
+        def f():
+            return npr.uniform()
+    """, rules=["no-global-rng"])
+    assert rule_names(bad) == ["no-global-rng"]
+    # a local module named `random` that isn't the stdlib one is left alone
+    ok = lint("""
+        from mypkg import random
+
+        def f():
+            return random.shuffle_thing()
+    """, rules=["no-global-rng"])
+    assert ok == []
+
+
+# ---------------------------------------------------------------- no-host-sync
+HOT = dict(hot_path=True)
+
+
+def test_host_sync_violating_jit_decorator():
+    bad = lint("""
+        import jax
+
+        @jax.jit
+        def f(x):
+            return float(x.sum())
+    """, rules=["no-host-sync"], **HOT)
+    assert rule_names(bad) == ["no-host-sync"]
+
+
+def test_host_sync_violating_item_and_asarray():
+    bad = lint("""
+        import jax
+        import numpy as np
+
+        def body(x):
+            return np.asarray(x), x.item()
+
+        wrapped = jax.jit(body, donate_argnums=())
+    """, rules=["no-host-sync"], **HOT)
+    assert len(bad) == 2
+
+
+def test_host_sync_two_hop_builder_pattern():
+    # the fused-engine flow: self._round_body = fn ... body = self._round_body
+    # ... lax.scan(body, ...)
+    bad = lint("""
+        import jax
+
+        class Eng:
+            def build(self):
+                def _round_body(carry, _):
+                    return carry, float(carry.sum())
+
+                self._round_body = _round_body
+
+            def step(self):
+                body = self._round_body
+                return jax.lax.scan(body, 0.0, None, length=3)
+    """, rules=["no-host-sync"], **HOT)
+    assert rule_names(bad) == ["no-host-sync"]
+
+
+def test_host_sync_untraced_and_cold_path_clean():
+    src = """
+        import numpy as np
+
+        def host_helper(x):
+            return float(np.asarray(x).sum())
+    """
+    assert lint(src, rules=["no-host-sync"], **HOT) == []      # not traced
+    traced_cold = """
+        import jax
+
+        @jax.jit
+        def f(x):
+            return float(x.sum())
+    """
+    assert lint(traced_cold, rules=["no-host-sync"], hot_path=False) == []
+
+
+# ---------------------------------------------------------------- jit-static-donate
+def test_jit_bare_forms_violating():
+    bad = lint("""
+        import jax
+        from functools import partial
+
+        @jax.jit
+        def f(x):
+            return x
+
+        g = jax.jit(lambda x: x)
+
+        @partial(jax.jit)
+        def h(x):
+            return x
+    """, rules=["jit-static-donate"])
+    assert len(bad) == 3
+
+
+def test_jit_explicit_decision_clean():
+    ok = lint("""
+        import jax
+        from functools import partial
+
+        f = jax.jit(lambda x: x, donate_argnums=())
+        g = jax.jit(lambda x, n: x * n, static_argnames=("n",))
+
+        @partial(jax.jit, static_argnums=(1,))
+        def h(x, n):
+            return x * n
+    """, rules=["jit-static-donate"])
+    assert ok == []
+
+
+# ---------------------------------------------------------------- prng rules
+def test_prng_key_reuse_violating():
+    bad = lint("""
+        import jax
+
+        def f(key):
+            a = jax.random.normal(key, (3,))
+            b = jax.random.uniform(key, (3,))
+            return a + b
+    """, rules=["prng-key-reuse"])
+    assert rule_names(bad) == ["prng-key-reuse"]
+
+
+def test_prng_key_reuse_loop_cross_iteration():
+    bad = lint("""
+        import jax
+
+        def f(key, n):
+            out = 0.0
+            for _ in range(n):
+                out += jax.random.normal(key, ())
+            return out
+    """, rules=["prng-key-reuse"])
+    assert rule_names(bad) == ["prng-key-reuse"]
+
+
+def test_prng_key_discipline_clean():
+    # the engine's canonical flow: 3-way split per round, fold_in per
+    # client/tag (fold_in never consumes), reassignment resets state
+    ok = lint("""
+        import jax
+
+        def f(key, n):
+            for i in range(n):
+                key, k_poll, k_train = jax.random.split(key, 3)
+                sub = jax.random.fold_in(k_poll, i)
+                tag = jax.random.fold_in(k_poll, 99)
+                yield jax.random.normal(sub, ()), jax.random.uniform(tag, ())
+    """, rules=["prng-key-reuse"])
+    assert ok == []
+
+
+def test_prng_sampler_key_violating_and_clean():
+    bad = lint("""
+        import jax
+
+        def f():
+            key = jax.random.PRNGKey(0)
+            inline = jax.random.normal(jax.random.PRNGKey(1), (3,))
+            direct = jax.random.normal(key, (3,))
+            return inline, direct
+    """, rules=["prng-sampler-key"])
+    assert len(bad) == 2
+    ok = lint("""
+        import jax
+
+        def f():
+            key = jax.random.PRNGKey(0)
+            k1, k2 = jax.random.split(key)
+            return jax.random.normal(k1, (3,)), jax.random.uniform(k2, (3,))
+    """, rules=["prng-sampler-key"])
+    assert ok == []
+
+
+# ---------------------------------------------------------------- capability-flags
+def test_capability_flags_violating_both_directions():
+    missing_method = lint("""
+        class Base:
+            supports_compiled_selection = False
+
+        class S(Base):
+            supports_compiled_selection = True
+    """, rules=["capability-flags"])
+    assert rule_names(missing_method) == ["capability-flags"]
+
+    contradiction = lint("""
+        class S:
+            supports_traced_selection = False
+
+            def select_mask_traced(self, losses, key):
+                return losses > 0
+    """, rules=["capability-flags"])
+    assert rule_names(contradiction) == ["capability-flags"]
+
+
+def test_capability_flags_local_inheritance_clean():
+    # mirrors strategies.py: ClusterRandom-style subclass + the
+    # FedLECCAdaptive-style traced opt-out against an inherited method
+    ok = lint("""
+        class Base:
+            supports_compiled_selection = False
+            supports_traced_selection = False
+
+        class Full(Base):
+            supports_compiled_selection = True
+            supports_traced_selection = True
+
+            def select_mask_jax(self, losses, rng=None):
+                return losses > 0
+
+            def select_mask_traced(self, losses, key):
+                return losses > 0
+
+        class OptOut(Full):
+            supports_traced_selection = False
+    """, rules=["capability-flags"])
+    assert ok == []
+
+
+def test_capability_flags_unknown_base_skips_missing_method():
+    # the method may come from the imported base — only the runtime
+    # registration guard can know, so the AST rule stays silent
+    ok = lint("""
+        from elsewhere import MaskBase
+
+        class S(MaskBase):
+            supports_compiled_selection = True
+    """, rules=["capability-flags"])
+    assert ok == []
+
+
+# ---------------------------------------------------------------- pragmas
+def test_pragma_line_and_file_suppression():
+    line = lint("""
+        import numpy as np
+
+        x = np.random.normal()  # tracecheck: disable=no-global-rng
+        y = np.random.normal()
+    """, rules=["no-global-rng"])
+    assert len(line) == 1  # only the unpragma'd line
+
+    whole = lint("""
+        # tracecheck: disable-file=no-global-rng
+        import numpy as np
+
+        x = np.random.normal()
+        y = np.random.normal()
+    """, rules=["no-global-rng"])
+    assert whole == []
+
+
+# ---------------------------------------------------------------- registration guard
+def test_register_strategy_rejects_flag_without_method():
+    from repro.engine.registry import STRATEGY_REGISTRY, register_strategy
+
+    with pytest.raises(TypeError, match="select_mask_jax"):
+        @register_strategy("_test_bad_flag")
+        class BadFlag:  # noqa: F841 — rejected before registration
+            supports_compiled_selection = True
+
+    assert "_test_bad_flag" not in STRATEGY_REGISTRY
+
+
+def test_register_strategy_rejects_method_without_flag():
+    from repro.engine.registry import STRATEGY_REGISTRY, register_strategy
+
+    with pytest.raises(TypeError, match="supports_traced_selection"):
+        @register_strategy("_test_dead_method")
+        class DeadMethod:  # noqa: F841
+            supports_traced_selection = False
+
+            def select_mask_traced(self, losses, key):
+                return losses > 0
+
+    assert "_test_dead_method" not in STRATEGY_REGISTRY
+
+
+def test_register_strategy_accepts_inherited_opt_out():
+    from repro.core.strategies import FedLECCAdaptive
+
+    # the registered opt-out strategy is exactly the sanctioned case:
+    # method inherited, flag explicitly False
+    assert FedLECCAdaptive.supports_traced_selection is False
+    assert callable(FedLECCAdaptive.select_mask_traced)
+
+
+# ---------------------------------------------------------------- repo self-clean
+def test_repo_library_code_is_lint_clean():
+    report = run_lint()
+    assert report.files_checked > 50
+    assert report.ok, "\n".join(str(v) for v in report.violations)
+
+
+# ---------------------------------------------------------------- contracts
+def test_mask_jaxpr_contracts():
+    from repro.analysis.contracts import ContractReport, _check_masks
+
+    report = ContractReport()
+    _check_masks(report)
+    assert report.results, "no mask contracts ran"
+    failed = [r for r in report.results if not r.ok]
+    assert not failed, "\n".join(str(r) for r in failed)
+    # every registered mask strategy appears on the compiled path, every
+    # traced strategy on the traced path, for every task shape
+    from repro.analysis.contracts import TASK_SHAPES
+    from repro.engine.registry import (
+        mask_selection_strategies,
+        traced_selection_strategies,
+    )
+
+    names = {r.name for r in report.results}
+    for task in TASK_SHAPES:
+        for s in mask_selection_strategies():
+            assert f"mask-jaxpr/{task}/{s}/compiled" in names
+        for s in traced_selection_strategies():
+            assert f"mask-jaxpr/{task}/{s}/traced" in names
+
+
+def test_banned_primitive_walk_sees_nested_jaxprs():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.contracts import _assert_no_callbacks
+
+    @jax.jit
+    def inner(x):
+        return jax.pure_callback(
+            lambda v: v, jax.ShapeDtypeStruct(x.shape, x.dtype), x
+        )
+
+    closed = jax.make_jaxpr(lambda x: inner(x) * 2)(jnp.ones(3))
+    with pytest.raises(AssertionError, match="pure_callback"):
+        _assert_no_callbacks(closed, "nested")
+
+
+@pytest.mark.slow
+def test_donation_and_retrace_contracts():
+    from repro.analysis.contracts import (
+        ContractReport,
+        _check_donation,
+        _check_retrace,
+    )
+
+    report = ContractReport()
+    _check_donation(report)
+    _check_retrace(report)
+    failed = [r for r in report.results if not r.ok and not r.skipped]
+    assert not failed, "\n".join(str(r) for r in failed)
+
+
+# ---------------------------------------------------------------- CLI
+def test_cli_lint_only_json():
+    import json
+
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--lint-only", "--json"],
+        capture_output=True, text=True,
+        cwd=str(SRC_ROOT.parent.parent),
+        env={"PYTHONPATH": str(SRC_ROOT.parent), "PATH": "/usr/bin:/bin:/usr/local/bin"},
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    payload = json.loads(proc.stdout)
+    assert payload["ok"] is True
+    assert payload["lint"]["violations"] == []
+
+
+def test_cli_exits_nonzero_on_violation(tmp_path):
+    bad = tmp_path / "mod.py"
+    bad.write_text("import numpy as np\nx = np.random.normal()\n")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--lint-only", "--json",
+         "--root", str(tmp_path)],
+        capture_output=True, text=True,
+        cwd=str(SRC_ROOT.parent.parent),
+        env={"PYTHONPATH": str(SRC_ROOT.parent), "PATH": "/usr/bin:/bin:/usr/local/bin"},
+    )
+    assert proc.returncode == 1
+    import json
+
+    payload = json.loads(proc.stdout)
+    assert payload["ok"] is False
+    assert any(
+        v["rule"] == "no-global-rng" for v in payload["lint"]["violations"]
+    )

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from conftest import planted_histograms
-from repro.core.clustering import extract_clusters, optics, silhouette_score
+from repro.core.clustering import optics, silhouette_score
 from repro.core.hellinger import hellinger_matrix
 from repro.core.clustering import cluster_label_histograms
 

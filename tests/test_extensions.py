@@ -3,7 +3,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from conftest import planted_histograms
 from repro.core.strategies import get_strategy

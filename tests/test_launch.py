@@ -4,7 +4,6 @@ import os
 import subprocess
 import sys
 
-import jax.numpy as jnp
 import pytest
 
 from repro.configs import INPUT_SHAPES, get_config, list_configs

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.models.transformer import decode_step, forward, init_transformer, prefill
+from repro.models.transformer import decode_step, init_transformer, prefill
 from repro.serving import BatchScheduler
 
 
