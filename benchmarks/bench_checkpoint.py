@@ -1,0 +1,222 @@
+"""Checkpoint / resume overhead and the kill-and-resume contract as a
+measured benchmark (DESIGN.md §12).
+
+Two questions, per backend (``host`` and the scan-fused compiled mode):
+
+- **overhead** — wall-clock per round with an every-round save policy +
+  JSONL tracker vs the bare engine (checkpoint bytes and save latency
+  reported alongside); and
+- **fidelity** — a 2-chunk save→kill→resume run must land bit-identical
+  to the uninterrupted run (params max |Δ| exactly 0.0, identical
+  selections and history) — the acceptance bar of the checkpointing
+  layer, here verified on the benchmark config rather than the tiny
+  test fixtures.
+
+Writes ``BENCH_checkpoint.json`` (repo root) and leaves the resumed
+run's ``metrics.jsonl`` next to it for the CI artifact upload
+(``--smoke`` on the ``perf-smoke`` job).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+BENCH_JSON = os.path.join(ROOT, "BENCH_checkpoint.json")
+
+BACKENDS = {
+    "host": dict(backend="host"),
+    "fused": dict(backend="compiled", fuse_rounds=2),
+}
+
+
+def _cfg(smoke: bool, rounds: int, seed: int, **kw):
+    from repro.engine import FLConfig
+
+    return FLConfig(
+        n_clients=24 if smoke else 100, m=6 if smoke else 10,
+        rounds=rounds, seed=seed,
+        strategy="fedlecc", strategy_kwargs={"J": 3},
+        hidden=(64,) if smoke else (200, 200),
+        eval_samples=16 if smoke else 64,
+        eval_every=2, target_hd=0.8,
+        **kw,
+    )
+
+
+def _max_abs_delta(a, b) -> float:
+    import jax
+
+    return max(
+        float(np.max(np.abs(np.asarray(x, np.float64) - np.asarray(y, np.float64))))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+
+
+def main(args) -> dict:
+    import jax
+
+    from repro.checkpoint import (
+        Checkpointer, CheckpointPolicy, JsonlTracker, read_jsonl,
+    )
+    from repro.data import make_classification
+    from repro.engine import make_engine
+
+    n = 2_000 if args.smoke else 20_000
+    train = make_classification(n, n_features=64, n_classes=10, seed=0)
+    test = make_classification(max(n // 10, 200), n_features=64, n_classes=10,
+                               seed=1)
+    mk_cfg = lambda **kw: _cfg(args.smoke, args.rounds, args.seed, **kw)
+
+    rows = []
+    workdir = tempfile.mkdtemp(prefix="bench_ckpt_")
+    jsonl_out = os.path.join(os.path.dirname(args.out), "metrics.jsonl")
+    try:
+        for name, bkw in BACKENDS.items():
+            # untimed warmup runs: populate the in-process compile caches
+            # for BOTH execution shapes (an every-round save policy clips
+            # the fused engine to length-1 chunks — a different compiled
+            # shape than the bare run) so the bare-vs-checkpointed
+            # comparison isn't skewed by whichever engine traces first
+            list(make_engine(mk_cfg(**bkw), train, test, n_classes=10).rounds())
+            warm = make_engine(
+                mk_cfg(**bkw), train, test, n_classes=10,
+                checkpointer=Checkpointer(
+                    os.path.join(workdir, f"{name}_warm"),
+                    CheckpointPolicy(every_rounds=1, keep_last=1)),
+            )
+            list(warm.rounds())
+
+            # bare reference: no checkpointing machinery at all
+            bare = make_engine(mk_cfg(**bkw), train, test, n_classes=10)
+            t0 = time.perf_counter()
+            bare_results = list(bare.rounds())
+            bare_s = time.perf_counter() - t0
+            bare_params = jax.device_get(bare.params)
+
+            # checkpointed run: every-round saves + JSONL tracker.
+            # (The fused cell's save policy clips its chunks, so the bare
+            # fused reference above uses a different chunk pattern — the
+            # fidelity comparison below therefore runs its *own*
+            # same-policy reference; the overhead ratio stays honest
+            # because both cells do the same round math.)
+            ckdir = os.path.join(workdir, name)
+            mk_ck = lambda: Checkpointer(
+                ckdir, CheckpointPolicy(every_rounds=1, keep_last=3))
+            tracked = make_engine(
+                mk_cfg(**bkw), train, test, n_classes=10,
+                checkpointer=mk_ck(),
+                tracker=JsonlTracker(os.path.join(ckdir, "metrics.jsonl")),
+            )
+            t0 = time.perf_counter()
+            full_results = list(tracked.rounds())
+            ckpt_s = time.perf_counter() - t0
+            tracked.close_trackers()
+            full_params = jax.device_get(tracked.params)
+            ckpt_file = tracked.checkpointer.latest()
+            ckpt_mb = os.path.getsize(ckpt_file) / 1e6
+
+            # one timed save in isolation (the per-save latency)
+            t0 = time.perf_counter()
+            tracked.save(os.path.join(workdir, f"{name}_probe.ckpt"))
+            save_s = time.perf_counter() - t0
+
+            # 2-chunk kill-and-resume: run half, abandon, rebuild+resume
+            half = args.rounds // 2
+            shutil.rmtree(ckdir)
+            killed = make_engine(
+                mk_cfg(**bkw), train, test, n_classes=10,
+                checkpointer=mk_ck(),
+                tracker=JsonlTracker(os.path.join(ckdir, "metrics.jsonl")),
+            )
+            it = killed.rounds()
+            pre = [next(it) for _ in range(half)]
+            it.close()
+            killed.close_trackers()
+            t0 = time.perf_counter()
+            resumed = make_engine(
+                mk_cfg(**bkw), train, test, n_classes=10,
+                resume=ckdir, checkpointer=mk_ck(),
+                tracker=JsonlTracker(os.path.join(ckdir, "metrics.jsonl")),
+            )
+            restore_s = time.perf_counter() - t0
+            post = list(resumed.rounds())
+            resumed.close_trackers()
+
+            delta = _max_abs_delta(full_params, jax.device_get(resumed.params))
+            sel_match = (
+                [r.selected for r in pre + post]
+                == [r.selected for r in full_results]
+            )
+            rows.append({
+                "backend": name,
+                # the every-round policy clips fused chunks to length 1,
+                # so the fused overhead number includes the cost (or, at
+                # smoke scale, benefit) of the changed chunking — align
+                # every_rounds with eval boundaries to keep fusion
+                "note": ("every-round saves force length-1 chunks"
+                         if name == "fused" else None),
+                "rounds": args.rounds,
+                "bare_s_per_round": round(bare_s / args.rounds, 4),
+                "ckpt_s_per_round": round(ckpt_s / args.rounds, 4),
+                "overhead_pct": round(100.0 * (ckpt_s - bare_s) / bare_s, 1),
+                "save_s": round(save_s, 4),
+                "restore_s": round(restore_s, 4),
+                "ckpt_mb": round(ckpt_mb, 3),
+                "resume_params_max_abs_delta": delta,
+                "resume_selections_identical": sel_match,
+                "resume_round": half,
+            })
+            print(f"[ckpt] {name:<6s} bare={rows[-1]['bare_s_per_round']:.3f}"
+                  f"s/rnd ckpt={rows[-1]['ckpt_s_per_round']:.3f}s/rnd "
+                  f"(+{rows[-1]['overhead_pct']:.1f}%) save={save_s*1e3:.1f}ms "
+                  f"size={ckpt_mb:.2f}MB resumeΔ={delta:.1e} "
+                  f"sel_ok={sel_match}", flush=True)
+
+            # the resumed run's tracker file is the CI artifact: dedupe
+            # shows the at-least-once contract converging to one history
+            if name == "fused":
+                shutil.copy(os.path.join(ckdir, "metrics.jsonl"), jsonl_out)
+                assert [r["round"] for r in read_jsonl(jsonl_out)] == list(
+                    range(args.rounds)
+                )
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+    ok = all(
+        r["resume_params_max_abs_delta"] == 0.0
+        and r["resume_selections_identical"] for r in rows
+    )
+    out = {
+        "config": {"smoke": args.smoke, "rounds": args.rounds,
+                   "seed": args.seed},
+        "rows": rows,
+        "summary": {"resume_bit_identical": ok},
+        "metrics_jsonl": os.path.basename(jsonl_out),
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"[ckpt] resume_bit_identical={ok} → {args.out}")
+    if not ok:
+        raise SystemExit("kill-and-resume fidelity check failed")
+    return out
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--rounds", type=int, default=None)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--smoke", action="store_true",
+                   help="small model/data + few rounds (the CI config)")
+    p.add_argument("--out", default=BENCH_JSON)
+    args = p.parse_args()
+    if args.rounds is None:
+        args.rounds = 8 if args.smoke else 40
+    main(args)

@@ -20,11 +20,21 @@ The ground-truth topic ids are passed as the ``partition_labels`` data
 override, so the non-IID shard partition groups clients by topic and
 the planted cluster structure is what FedLECC's OPTICS sees.
 
+Long runs survive process death with ``--ckpt DIR`` (DESIGN.md §12):
+every round the full engine carry is saved atomically to
+``DIR/round_*.ckpt`` and each ``RoundResult`` is appended to
+``DIR/metrics.jsonl``; re-running with ``--resume`` restores the latest
+checkpoint and finishes the remaining rounds bit-identically to an
+uninterrupted run.
+
     PYTHONPATH=src python examples/federated_lm.py [--rounds 4]
     PYTHONPATH=src python examples/federated_lm.py --backends host scaleout
+    PYTHONPATH=src python examples/federated_lm.py --backends host \
+        --ckpt /tmp/fl_lm --resume
 """
 
 import argparse
+import os
 
 import numpy as np
 
@@ -64,7 +74,8 @@ def build_corpus(K: int, seed: int = 0):
 
 
 def main(rounds: int = 4, K: int = 12, m: int = 4,
-         backends: tuple[str, ...] = ("host", "compiled", "scaleout")):
+         backends: tuple[str, ...] = ("host", "compiled", "scaleout"),
+         ckpt: str | None = None, resume: bool = False):
     train, test, topics = build_corpus(K)
 
     for backend in backends:
@@ -81,8 +92,19 @@ def main(rounds: int = 4, K: int = 12, m: int = 4,
         )
         # topic ids drive the non-IID split (task data override), so each
         # client's stream is topic-pure and token histograms cluster by topic
+        extra = {}
+        if ckpt is not None:
+            from repro.checkpoint import JsonlTracker, latest_checkpoint
+
+            cdir = os.path.join(ckpt, backend)
+            extra["checkpointer"] = cdir
+            extra["tracker"] = JsonlTracker(os.path.join(cdir, "metrics.jsonl"))
+            if resume and latest_checkpoint(cdir) is not None:
+                extra["resume"] = cdir
         engine = make_engine(cfg, train, test, n_classes=VOCAB,
-                             partition_labels=topics)
+                             partition_labels=topics, **extra)
+        if "resume" in extra:
+            print(f"[{backend}] resumed at round {engine._round}")
         print(f"[{backend}] clusters found: {engine.strategy.n_clusters} "
               f"({N_TOPICS} topics planted)")
         for r in engine.rounds():
@@ -91,6 +113,7 @@ def main(rounds: int = 4, K: int = 12, m: int = 4,
                   f"test_loss={r.test_loss:.3f} "
                   f"next_token_acc={r.test_acc:.3f} "
                   f"comm={r.comm_mb:.1f}MB")
+        engine.close_trackers()
     print("done — test_loss should trend down; all backends select "
           "identical clients for one seed (the conformance guarantee)")
 
@@ -101,5 +124,12 @@ if __name__ == "__main__":
     ap.add_argument("--backends", nargs="+",
                     default=["host", "compiled", "scaleout"],
                     choices=["host", "compiled", "scaleout"])
+    ap.add_argument("--ckpt", default=None, metavar="DIR",
+                    help="checkpoint every round into DIR/<backend>/ and "
+                         "append RoundResults to metrics.jsonl there")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest checkpoint under --ckpt "
+                         "before running (no-op when none exists yet)")
     args = ap.parse_args()
-    main(rounds=args.rounds, backends=tuple(args.backends))
+    main(rounds=args.rounds, backends=tuple(args.backends),
+         ckpt=args.ckpt, resume=args.resume)

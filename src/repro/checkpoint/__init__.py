@@ -1,5 +1,25 @@
-"""Checkpointing substrate (msgpack + raw ndarray bytes, no orbax offline)."""
+"""Checkpointing substrate (msgpack + raw ndarray bytes, no orbax
+offline) plus save policies and the metrics-tracker seam.
+
+- ``serializer`` — atomic, fsync-durable pytree save/load with loud
+  dtype/shape/treedef verification.
+- ``policy`` — ``CheckpointPolicy`` (every-N-rounds / every-T-seconds /
+  keep-last) and ``Checkpointer`` driven from ``engine.rounds()``.
+- ``tracker`` — ``MetricsTracker`` seam; ``JsonlTracker`` lands every
+  streamed ``RoundResult`` durably.
+"""
 
 from repro.checkpoint.serializer import save_checkpoint, load_checkpoint
+from repro.checkpoint.policy import CheckpointPolicy, Checkpointer, latest_checkpoint
+from repro.checkpoint.tracker import JsonlTracker, MetricsTracker, read_jsonl
 
-__all__ = ["save_checkpoint", "load_checkpoint"]
+__all__ = [
+    "save_checkpoint",
+    "load_checkpoint",
+    "CheckpointPolicy",
+    "Checkpointer",
+    "latest_checkpoint",
+    "MetricsTracker",
+    "JsonlTracker",
+    "read_jsonl",
+]

@@ -1,0 +1,132 @@
+"""Checkpoint scheduling: when to save, where, and what to keep.
+
+``CheckpointPolicy`` is the declarative half — *save every N rounds
+and/or every T seconds, keep the last k checkpoints*. ``Checkpointer``
+binds a policy to a directory and is driven from the engine's
+``rounds()`` stream: ``maybe_save(engine, rnd)`` fires after round
+``rnd`` has been committed to the engine state, writes atomically
+through ``repro.checkpoint.serializer`` (tmp + fsync + rename), and
+prunes old files per ``keep_last``.
+
+Round triggers are **absolute**: a save fires after round ``rnd`` iff
+``(rnd + 1) % every_rounds == 0`` — a pure function of the round index,
+independent of where a ``rounds()`` call started. The fused backend
+relies on this to align its scan-chunk boundaries with save points so a
+resumed run replays the identical chunk pattern (DESIGN.md §12).
+
+Checkpoint files are named ``round_<NNNNNNNN>.ckpt`` (the number is the
+*next* round to run, i.e. ``engine._round`` at save time), so
+``latest_checkpoint(dir)`` is a lexicographic max.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import time
+from dataclasses import dataclass
+from typing import Callable
+
+__all__ = ["CheckpointPolicy", "Checkpointer", "latest_checkpoint"]
+
+_CKPT_RE = re.compile(r"^round_(\d{8})\.ckpt$")
+
+
+def _ckpt_name(next_round: int) -> str:
+    return f"round_{next_round:08d}.ckpt"
+
+
+def latest_checkpoint(directory: str) -> str | None:
+    """Path of the most recent checkpoint in ``directory`` (highest
+    round number), or ``None`` if there is none / no such directory."""
+    try:
+        entries = os.listdir(directory)
+    except FileNotFoundError:
+        return None
+    hits = sorted(e for e in entries if _CKPT_RE.match(e))
+    return os.path.join(directory, hits[-1]) if hits else None
+
+
+@dataclass(frozen=True)
+class CheckpointPolicy:
+    """Declarative save schedule.
+
+    - ``every_rounds``: save after round ``rnd`` when
+      ``(rnd + 1) % every_rounds == 0`` (absolute cadence). ``None``
+      disables the round trigger.
+    - ``every_seconds``: also save when at least this much wall time has
+      passed since the last save. ``None`` disables the time trigger.
+    - ``keep_last``: prune to the newest k checkpoint files after each
+      save. ``None`` keeps everything.
+    """
+
+    every_rounds: int | None = 1
+    every_seconds: float | None = None
+    keep_last: int | None = None
+
+    def __post_init__(self) -> None:
+        if self.every_rounds is not None and self.every_rounds < 1:
+            raise ValueError(f"every_rounds must be >= 1, got {self.every_rounds}")
+        if self.every_seconds is not None and self.every_seconds <= 0:
+            raise ValueError(f"every_seconds must be > 0, got {self.every_seconds}")
+        if self.keep_last is not None and self.keep_last < 1:
+            raise ValueError(f"keep_last must be >= 1, got {self.keep_last}")
+        if self.every_rounds is None and self.every_seconds is None:
+            raise ValueError("policy has no trigger: set every_rounds or every_seconds")
+
+    def round_due(self, rnd: int) -> bool:
+        return self.every_rounds is not None and (rnd + 1) % self.every_rounds == 0
+
+    def time_due(self, elapsed: float) -> bool:
+        return self.every_seconds is not None and elapsed >= self.every_seconds
+
+
+class Checkpointer:
+    """Binds a :class:`CheckpointPolicy` to a directory and an engine.
+
+    ``clock`` is injectable for tests (defaults to ``time.monotonic``).
+    """
+
+    def __init__(self, directory: str, policy: CheckpointPolicy | None = None,
+                 clock: Callable[[], float] = time.monotonic):
+        self.directory = directory
+        self.policy = policy or CheckpointPolicy()
+        self._clock = clock
+        self._last_save_t = clock()
+        os.makedirs(directory, exist_ok=True)
+
+    # -- schedule ------------------------------------------------------
+    def round_due(self, rnd: int) -> bool:
+        """True iff the *round* trigger fires after round ``rnd``. The
+        fused backend uses this (and only this — time triggers can't be
+        predicted inside a scan) to align chunk boundaries."""
+        return self.policy.round_due(rnd)
+
+    def due(self, rnd: int) -> bool:
+        return self.round_due(rnd) or self.policy.time_due(
+            self._clock() - self._last_save_t
+        )
+
+    # -- actions -------------------------------------------------------
+    def save(self, engine) -> str:
+        """Unconditional save of the engine's committed state."""
+        path = os.path.join(self.directory, _ckpt_name(engine._round))
+        engine.save(path)
+        self._last_save_t = self._clock()
+        self._prune()
+        return path
+
+    def maybe_save(self, engine, rnd: int) -> str | None:
+        """Save iff the policy says a save is due after round ``rnd``."""
+        return self.save(engine) if self.due(rnd) else None
+
+    def latest(self) -> str | None:
+        return latest_checkpoint(self.directory)
+
+    def _prune(self) -> None:
+        k = self.policy.keep_last
+        if k is None:
+            return
+        hits = sorted(e for e in os.listdir(self.directory) if _CKPT_RE.match(e))
+        for stale in hits[:-k]:
+            os.remove(os.path.join(self.directory, stale))

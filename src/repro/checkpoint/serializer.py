@@ -1,14 +1,34 @@
-"""Pytree checkpointing: msgpack envelope + raw little-endian array bytes.
+"""Pytree checkpointing: magic header + msgpack envelope + raw
+little-endian array bytes.
 
-Format (msgpack map):
-  {"version": 1,
-   "treedef": <str repr used only for mismatch diagnostics>,
-   "leaves": [{"dtype": str, "shape": [..], "data": bytes}, ...],
-   "meta": {...user metadata...}}
+On-disk format::
+
+    b"REPROCKPT\\x02"                       # magic + format version byte
+    msgpack map {
+      "version": 2,
+      "treedef": <str(jax.tree.structure(pytree))>,
+      "leaves": [{"dtype": str, "shape": [..], "data": bytes}, ...],
+      "meta": {...user metadata, msgpack-safe...},
+    }
 
 Leaves are stored in ``jax.tree.flatten`` order; ``load_checkpoint``
 restores into the structure of a caller-supplied ``like`` pytree (the
-usual "init the model, then restore" pattern), verifying dtype/shape.
+usual "init the model, then restore" pattern) and verifies, loudly:
+
+- the magic header (a foreign / garbage file is rejected up front);
+- the envelope unpacks (a truncated file fails with a clear error, not
+  a bare msgpack exception);
+- the stored treedef string equals the ``like`` treedef (a structure
+  mismatch is an error, not a diagnostic footnote);
+- leaf count, and per leaf: **dtype**, shape, and payload byte length
+  against the ``like`` leaf — a dtype mismatch must never silently
+  reinterpret bytes.
+
+``save_checkpoint`` is crash-durable: the payload is written to a
+sibling ``.tmp`` file which is fsync'd *before* the atomic
+``os.replace``, and the containing directory is fsync'd after — so a
+crash at any point leaves either the old checkpoint or the complete new
+one, never a truncated file under the final name.
 """
 
 from __future__ import annotations
@@ -20,13 +40,30 @@ import jax
 import msgpack
 import numpy as np
 
-__all__ = ["save_checkpoint", "load_checkpoint"]
+__all__ = ["save_checkpoint", "load_checkpoint", "FORMAT_VERSION"]
+
+FORMAT_VERSION = 2
+_MAGIC = b"REPROCKPT\x02"
+
+
+def _fsync_dir(path: str) -> None:
+    """fsync the directory containing ``path`` so the rename itself is
+    durable (POSIX; best-effort where directories can't be opened)."""
+    dirname = os.path.dirname(os.path.abspath(path)) or "."
+    try:
+        fd = os.open(dirname, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 def save_checkpoint(path: str, pytree: Any, meta: dict | None = None) -> None:
     leaves, treedef = jax.tree.flatten(pytree)
     payload = {
-        "version": 1,
+        "version": FORMAT_VERSION,
         "treedef": str(treedef),
         "leaves": [
             {
@@ -40,31 +77,75 @@ def save_checkpoint(path: str, pytree: Any, meta: dict | None = None) -> None:
     }
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
+        f.write(_MAGIC)
         f.write(msgpack.packb(payload, use_bin_type=True))
+        f.flush()
+        os.fsync(f.fileno())  # the payload must be on disk before the rename
     os.replace(tmp, path)  # atomic on POSIX
+    _fsync_dir(path)       # ... and the rename must survive a crash too
 
 
 def load_checkpoint(path: str, like: Any) -> tuple[Any, dict]:
-    """Restore a checkpoint into the structure of ``like``; returns (pytree, meta)."""
+    """Restore a checkpoint into the structure of ``like``; returns
+    ``(pytree, meta)``.  Raises ``ValueError`` with an actionable message
+    on any structural or per-leaf mismatch (see module docstring)."""
     with open(path, "rb") as f:
-        payload = msgpack.unpackb(f.read(), raw=False)
-    if payload["version"] != 1:
-        raise ValueError(f"unsupported checkpoint version {payload['version']}")
+        raw = f.read()
+    if not raw.startswith(_MAGIC):
+        raise ValueError(
+            f"{path!r} is not a repro checkpoint (bad magic header; "
+            f"expected it to start with {_MAGIC!r})"
+        )
+    try:
+        payload = msgpack.unpackb(raw[len(_MAGIC):], raw=False)
+    except Exception as e:
+        raise ValueError(
+            f"checkpoint {path!r} is truncated or corrupt "
+            f"(msgpack envelope failed to unpack: {e})"
+        ) from None
+    if not isinstance(payload, dict) or payload.get("version") != FORMAT_VERSION:
+        got = payload.get("version") if isinstance(payload, dict) else None
+        raise ValueError(
+            f"unsupported checkpoint version {got!r} in {path!r} "
+            f"(this reader supports version {FORMAT_VERSION})"
+        )
     like_leaves, treedef = jax.tree.flatten(like)
+    if payload["treedef"] != str(treedef):
+        raise ValueError(
+            "checkpoint treedef does not match the target structure — "
+            "refusing to restore into a different pytree:\n"
+            f"  checkpoint: {payload['treedef']}\n"
+            f"  target:     {treedef}"
+        )
     stored = payload["leaves"]
-    if len(stored) != len(like_leaves):
+    if len(stored) != len(like_leaves):  # defense in depth behind treedef
         raise ValueError(
             f"leaf count mismatch: checkpoint has {len(stored)}, "
-            f"target structure has {len(like_leaves)} "
-            f"(checkpoint treedef: {payload['treedef']})"
+            f"target structure has {len(like_leaves)}"
         )
     out = []
-    for ref, item in zip(like_leaves, stored):
-        arr = np.frombuffer(item["data"], dtype=np.dtype(item["dtype"])).reshape(
-            item["shape"]
-        )
+    for i, (ref, item) in enumerate(zip(like_leaves, stored)):
         ref_arr = np.asarray(ref)
-        if tuple(arr.shape) != tuple(ref_arr.shape):
-            raise ValueError(f"shape mismatch: {arr.shape} vs {ref_arr.shape}")
-        out.append(arr.copy())
+        dtype = np.dtype(item["dtype"])
+        if dtype != ref_arr.dtype:
+            raise ValueError(
+                f"dtype mismatch at leaf {i}: checkpoint stores "
+                f"{dtype}, target expects {ref_arr.dtype} — refusing to "
+                f"reinterpret bytes; restore into a pytree with matching "
+                f"dtypes (or re-save the checkpoint)"
+            )
+        shape = tuple(item["shape"])
+        if shape != ref_arr.shape:
+            raise ValueError(
+                f"shape mismatch at leaf {i}: checkpoint stores {shape}, "
+                f"target expects {ref_arr.shape}"
+            )
+        n_expected = dtype.itemsize * int(np.prod(shape, dtype=np.int64))
+        if len(item["data"]) != n_expected:
+            raise ValueError(
+                f"payload length mismatch at leaf {i}: got "
+                f"{len(item['data'])} bytes, expected {n_expected} "
+                f"({dtype} × {shape}) — the checkpoint is corrupt"
+            )
+        out.append(np.frombuffer(item["data"], dtype=dtype).reshape(shape).copy())
     return jax.tree.unflatten(treedef, out), payload["meta"]

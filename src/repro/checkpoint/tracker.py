@@ -1,0 +1,104 @@
+"""Metrics trackers: a pluggable seam for streaming ``RoundResult``s
+somewhere durable.
+
+The engine's in-memory ``history`` dict dies with the process; a
+``MetricsTracker`` attached via ``make_engine(..., tracker=...)`` (or
+``engine.trackers.append(...)``) receives every round — evaluated or
+not — as it is committed, before any checkpoint fires for that round.
+
+Delivery is **at-least-once** under resume: a killed run may have
+logged rounds past the last checkpoint, so after a restore the same
+round can appear twice in the stream. Rows carry the round index;
+readers should dedupe on it, keeping the last occurrence.
+
+``JsonlTracker`` is the reference implementation: one JSON object per
+line, flushed per row so a kill loses at most the in-flight line.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import numpy as np
+
+__all__ = ["MetricsTracker", "JsonlTracker"]
+
+
+def _to_builtin(x: Any) -> Any:
+    """Recursively convert numpy / jax scalars and arrays to plain
+    Python so ``json`` (and msgpack meta) can serialize them."""
+    if isinstance(x, dict):
+        return {k: _to_builtin(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_to_builtin(v) for v in x]
+    if isinstance(x, (np.integer,)):
+        return int(x)
+    if isinstance(x, (np.floating,)):
+        return float(x)
+    if isinstance(x, np.ndarray):
+        return x.tolist()
+    if hasattr(x, "item") and hasattr(x, "dtype"):  # jax scalar arrays
+        arr = np.asarray(x)
+        return arr.item() if arr.ndim == 0 else arr.tolist()
+    return x
+
+
+class MetricsTracker:
+    """Base tracker. Subclasses override ``log_round``; ``close`` is
+    called by ``engine.close_trackers()`` / context-manager exits."""
+
+    def log_round(self, result) -> None:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+
+class JsonlTracker(MetricsTracker):
+    """Append-only JSONL: one line per round.
+
+    Schema per line: every ``RoundResult`` field (``round``, ``selected``
+    as a list, ``mean_selected_loss``, ``comm_mb``, ``test_loss``/
+    ``test_acc`` (null when the round wasn't evaluated), ``sim_clock``/
+    ``n_dropped`` (null without a systems layer), and the flattened
+    ``metrics`` dict under ``"metrics"``).
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        parent = os.path.dirname(os.path.abspath(path))
+        os.makedirs(parent, exist_ok=True)
+        self._f = open(path, "a", encoding="utf-8")
+
+    def log_round(self, result) -> None:
+        import dataclasses
+
+        row = _to_builtin(dataclasses.asdict(result))
+        self._f.write(json.dumps(row, sort_keys=True) + "\n")
+        self._f.flush()
+
+    def close(self) -> None:
+        if self._f.closed:
+            return
+        self._f.flush()
+        try:
+            os.fsync(self._f.fileno())
+        except OSError:
+            pass
+        self._f.close()
+
+
+def read_jsonl(path: str) -> list[dict]:
+    """Read a tracker file back, deduping by round (last occurrence
+    wins — the at-least-once contract under resume)."""
+    by_round: dict[int, dict] = {}
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            row = json.loads(line)
+            by_round[int(row["round"])] = row
+    return [by_round[r] for r in sorted(by_round)]

@@ -139,6 +139,29 @@ class SelectionStrategy:
         # Loss scalars polled from all clients each round, if used.
         return float(self.K * _FLOAT_BYTES) if self.needs_losses else 0.0
 
+    # -- checkpoint contract (DESIGN.md §12) ---------------------------
+    # Every built-in strategy's setup state (cluster labels, latency,
+    # K-matrices, presence traces) is a deterministic function of
+    # (hists, sizes, seed, latency) and is rebuilt at engine
+    # construction, so nothing needs serializing; per-round randomness
+    # lives in the engine's numpy rng whose bit-generator state the
+    # engine checkpoints itself.  Strategies that *do* accumulate
+    # per-round state override both hooks; the structure of
+    # ``state_dict()`` doubles as the restore ``like`` pytree, so it
+    # must be stable for a given configuration.
+    def state_dict(self) -> dict:
+        """Array-valued per-round strategy state to checkpoint ({} when
+        the strategy is stateless between rounds — the default)."""
+        return {}
+
+    def load_state_dict(self, state: dict) -> None:
+        if state:
+            raise ValueError(
+                f"strategy {self.name!r} is stateless but the checkpoint "
+                f"carries strategy state keys {sorted(state)} — override "
+                f"load_state_dict in the strategy that wrote them"
+            )
+
 
 @register_strategy("random")
 @dataclass

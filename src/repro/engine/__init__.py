@@ -141,6 +141,10 @@ __all__ = [
     "register_preset",
     "make_engine",
     "SystemsConfig",
+    "CheckpointPolicy",
+    "Checkpointer",
+    "JsonlTracker",
+    "MetricsTracker",
 ]
 
 _LAZY = {
@@ -160,6 +164,10 @@ _LAZY = {
     "get_preset": ("repro.engine.presets", "get_preset"),
     "list_presets": ("repro.engine.presets", "list_presets"),
     "register_preset": ("repro.engine.presets", "register_preset"),
+    "CheckpointPolicy": ("repro.checkpoint.policy", "CheckpointPolicy"),
+    "Checkpointer": ("repro.checkpoint.policy", "Checkpointer"),
+    "JsonlTracker": ("repro.checkpoint.tracker", "JsonlTracker"),
+    "MetricsTracker": ("repro.checkpoint.tracker", "MetricsTracker"),
 }
 
 
@@ -175,7 +183,8 @@ def __getattr__(name):
     return value
 
 
-def make_engine(cfg: FLConfig, train, test, n_classes: int, **kwargs):
+def make_engine(cfg: FLConfig, train, test, n_classes: int, *,
+                resume=None, checkpointer=None, tracker=None, **kwargs):
     """Build the engine selected by ``cfg.backend``
     ("host" | "compiled" | "scaleout").
 
@@ -183,6 +192,21 @@ def make_engine(cfg: FLConfig, train, test, n_classes: int, **kwargs):
     image features + class labels for ``task="classification"``, token /
     next-token sequences for ``task="lm"``); ``n_classes`` is the label
     cardinality (the vocab size for LM).
+
+    Checkpointing / observability (DESIGN.md §12):
+
+    - ``resume=``       — path to a checkpoint written by
+      ``Engine.save`` (or a directory of them: the latest is picked);
+      the built engine restores it before returning, so the next
+      ``rounds()`` call continues the run.  The stored config
+      fingerprint must match ``cfg``.
+    - ``checkpointer=`` — a ``repro.checkpoint.Checkpointer`` (or a
+      directory path, which builds one with the default every-round
+      policy); attached as ``engine.checkpointer`` so its policy is
+      consulted after every committed round.
+    - ``tracker=``      — a ``repro.checkpoint.MetricsTracker`` (or list
+      of them) appended to ``engine.trackers``; every streamed
+      ``RoundResult`` is logged durably.
 
     Extra kwargs pass through to the backend constructor:
 
@@ -202,6 +226,35 @@ def make_engine(cfg: FLConfig, train, test, n_classes: int, **kwargs):
     ``cfg.fuse_rounds > 0`` selects the scan-fused execution mode of the
     compiled backend (``FusedEngine``, DESIGN.md §8.6).
     """
+    engine = _build_engine(cfg, train, test, n_classes, **kwargs)
+    if checkpointer is not None:
+        if isinstance(checkpointer, str):
+            from repro.checkpoint import Checkpointer
+
+            checkpointer = Checkpointer(checkpointer)
+        engine.checkpointer = checkpointer
+    if tracker is not None:
+        engine.trackers.extend(
+            tracker if isinstance(tracker, (list, tuple)) else [tracker]
+        )
+    if resume is not None:
+        import os
+
+        path = resume
+        if os.path.isdir(path):
+            from repro.checkpoint import latest_checkpoint
+
+            found = latest_checkpoint(path)
+            if found is None:
+                raise FileNotFoundError(
+                    f"resume directory {path!r} holds no round_*.ckpt files"
+                )
+            path = found
+        engine.restore(path)
+    return engine
+
+
+def _build_engine(cfg: FLConfig, train, test, n_classes: int, **kwargs):
     if cfg.backend == "compiled":
         if cfg.fuse_rounds > 0:
             from repro.engine.fused import FusedEngine

@@ -42,6 +42,7 @@ benchmarks, schedulers — observe training without owning the loop.
 
 from __future__ import annotations
 
+import json
 from dataclasses import dataclass
 from typing import Any, Callable, Iterator
 
@@ -271,6 +272,11 @@ class Engine:
             "round": [], "test_acc": [], "test_loss": [], "comm_mb": [],
             "mean_selected_loss": [], "selected": [],
         }
+        # observability + durability seams (DESIGN.md §12): trackers get
+        # every committed RoundResult; a Checkpointer attached here is
+        # consulted after each round via its save policy.
+        self.trackers: list[Any] = []
+        self.checkpointer: Any = None
 
     # ------------------------------------------------------------------
     def _build_shared_jits(self) -> None:
@@ -380,15 +386,159 @@ class Engine:
                 self._key, _, _ = jax.random.split(self._key, 3)
         return self._key
 
+    # -- checkpoint / restore (DESIGN.md §12) ---------------------------
+    _STATE_VERSION = 1
+
+    def _state_pytree(self) -> dict:
+        """The array-valued half of the round carry, serialized as the
+        checkpoint pytree (structure doubles as the restore ``like``):
+        params, aggregator server state (FedDyn ``h``), per-client state
+        (FedDyn ``h_i``), the jax PRNG carry, and any strategy state."""
+        return {
+            "params": self.params,
+            "agg_state": self.agg_state,
+            "h_clients": self.h_clients,
+            "prng_key": self._carry_key(),
+            "strategy": self.strategy.state_dict(),
+        }
+
+    def _config_fingerprint(self) -> dict:
+        from repro.checkpoint.tracker import _to_builtin
+
+        return _to_builtin(self.cfg.to_dict())
+
+    def save(self, path: str) -> None:
+        """Serialize the full round carry to ``path`` (atomic + fsync'd
+        via ``repro.checkpoint.serializer``): the state pytree plus the
+        scalar carry (``_round``, ``comm_mb``, ``sim_clock``), the numpy
+        selection-rng bit-generator state, the history dict, and the
+        ``FLConfig`` fingerprint that ``restore`` verifies."""
+        from repro.checkpoint.serializer import save_checkpoint
+        from repro.checkpoint.tracker import _to_builtin
+
+        meta: dict[str, Any] = {
+            "state_version": self._STATE_VERSION,
+            "backend": self.backend,
+            "round": int(self._round),
+            "comm_mb": float(self.comm_mb),
+            "sim_clock": float(self.sim_clock),
+            # PCG64 state holds 128-bit ints msgpack can't carry; json can
+            "rng_state": json.dumps(self.rng.bit_generator.state),
+            "history": _to_builtin(self.history),
+            "config": self._config_fingerprint(),
+        }
+        if self._systems is not None:
+            meta["systems"] = self._systems.state_dict()
+        save_checkpoint(path, self._state_pytree(), meta=meta)
+
+    def restore(self, path: str) -> dict:
+        """Install a checkpoint written by ``save`` into this engine.
+
+        The engine must be freshly constructed from the *same*
+        ``FLConfig`` (the stored fingerprint is compared and a mismatch
+        is rejected — resuming into a different config would silently
+        change the experiment).  Returns the checkpoint meta dict."""
+        from repro.checkpoint.serializer import load_checkpoint
+
+        state, meta = load_checkpoint(path, like=self._state_pytree())
+        if meta.get("state_version") != self._STATE_VERSION:
+            raise ValueError(
+                f"engine checkpoint state_version "
+                f"{meta.get('state_version')!r} unsupported (expected "
+                f"{self._STATE_VERSION}) — was {path!r} written by "
+                f"Engine.save?"
+            )
+        want = self._config_fingerprint()
+        got = meta.get("config")
+        if got != want:
+            keys = sorted(set(want) | set(got or {}))
+            diff = [k for k in keys if (got or {}).get(k) != want.get(k)]
+            raise ValueError(
+                f"checkpoint config does not match this engine's FLConfig "
+                f"(differing fields: {diff}) — resuming would change the "
+                f"experiment; rebuild the engine with the original config"
+            )
+        self.params = jax.tree.map(jnp.asarray, state["params"])
+        self.agg_state = (
+            None if state["agg_state"] is None
+            else jax.tree.map(jnp.asarray, state["agg_state"])
+        )
+        self.h_clients = (
+            None if state["h_clients"] is None
+            else jax.tree.map(jnp.asarray, state["h_clients"])
+        )
+        self._key = jnp.asarray(state["prng_key"])
+        self.strategy.load_state_dict(state["strategy"])
+        self._round = int(meta["round"])
+        self.comm_mb = float(meta["comm_mb"])
+        self.sim_clock = float(meta["sim_clock"])
+        self.rng.bit_generator.state = json.loads(meta["rng_state"])
+        self.history = {k: list(v) for k, v in meta["history"].items()}
+        if self._systems is not None:
+            self._systems.load_state_dict(meta.get("systems", {}))
+        return meta
+
+    # -- per-round emission (history / trackers / checkpoints) ----------
+    def _record_history(self, r: RoundResult) -> None:
+        """Evaluated rounds land in the in-memory history dict (the
+        legacy ``FederatedSimulation.run()`` shape, checkpointed so a
+        resumed run's history is contiguous)."""
+        if not r.evaluated:
+            return
+        self.history["round"].append(r.round)
+        self.history["test_acc"].append(r.test_acc)
+        self.history["test_loss"].append(r.test_loss)
+        self.history["comm_mb"].append(r.comm_mb)
+        self.history["mean_selected_loss"].append(r.mean_selected_loss)
+        self.history["selected"].append(list(r.selected))
+        # systems runs gain the simulated clock (time-to-accuracy)
+        # and the cumulative drop count; tasks with extra eval
+        # metrics (LM perplexity) surface them under their own keys.
+        # Keys appear only when active, so the legacy history shape
+        # is unchanged for plain runs.
+        if self._systems is not None:
+            self.history.setdefault("sim_clock", []).append(r.sim_clock)
+            self.history.setdefault("n_dropped", []).append(r.n_dropped)
+        for k, v in (r.metrics or {}).items():
+            self.history.setdefault(k, []).append(v)
+
+    def _emit(self, result: RoundResult,
+              callback: Callable[[RoundResult], None] | None,
+              allow_save: bool = True) -> None:
+        """Post-commit fan-out for one round, in durability order:
+        history row → callback → trackers → checkpoint policy.  The
+        engine state (``_round`` et al.) is already committed when this
+        runs, so a checkpoint taken here resumes *after* this round;
+        trackers fire before the save (at-least-once delivery — a resume
+        may re-log rounds past the last checkpoint).  ``allow_save`` is
+        the fused backend's chunk-boundary gate: its state commits per
+        chunk, so only chunk-final rounds may trigger a save."""
+        self._record_history(result)
+        if callback is not None:
+            callback(result)
+        for t in self.trackers:
+            t.log_round(result)
+        if allow_save and self.checkpointer is not None:
+            self.checkpointer.maybe_save(self, result.round)
+
+    def close_trackers(self) -> None:
+        for t in self.trackers:
+            t.close()
+
     # -- the canonical round loop --------------------------------------
     def rounds(
         self,
         n_rounds: int | None = None,
         callback: Callable[[RoundResult], None] | None = None,
     ) -> Iterator[RoundResult]:
-        """Stream ``RoundResult`` records, one per federated round."""
+        """Stream ``RoundResult`` records, one per federated round.
+
+        ``n_rounds=None`` runs the rounds *remaining* to reach
+        ``cfg.rounds`` (so a freshly restored engine finishes the
+        configured run); pass an explicit count to run chunks."""
         cfg = self.cfg
-        n_rounds = n_rounds or cfg.rounds
+        if n_rounds is None:
+            n_rounds = max(cfg.rounds - self._round, 0)
         key = self._carry_key()
 
         start = self._round
@@ -434,10 +584,11 @@ class Engine:
                 sim_time, n_dropped = 0.0, 0
 
             test_loss = test_acc = metrics = None
-            # absolute cadence, so chunked rounds() calls evaluate on the
-            # same schedule as one contiguous call (each call additionally
-            # evaluates its own final round)
-            if rnd % cfg.eval_every == 0 or rnd == start + n_rounds - 1:
+            # absolute cadence keyed to the *configured* terminal round,
+            # so chunked / resumed rounds() calls evaluate on exactly the
+            # schedule one contiguous call would (a per-call final-round
+            # force-eval would make resumed histories diverge)
+            if rnd % cfg.eval_every == 0 or rnd == cfg.rounds - 1:
                 test_loss, test_acc = self.evaluate()
                 metrics = self.eval_metrics()
 
@@ -455,33 +606,16 @@ class Engine:
                 n_dropped=int(n_dropped),
                 metrics=metrics,
             )
-            if callback is not None:
-                callback(result)
+            self._emit(result, callback)
             yield result
 
     def run(self, rounds: int | None = None, log_every: int = 0) -> dict[str, list]:
-        """Legacy consumer: drain ``rounds()`` into the history dict
-        (evaluated rounds only, matching ``FederatedSimulation.run()``)."""
+        """Legacy consumer: drain ``rounds()`` and return the history
+        dict (evaluated rounds only, matching
+        ``FederatedSimulation.run()``; the rows themselves are appended
+        inside ``rounds()`` so checkpoints capture them too)."""
         for r in self.rounds(rounds):
-            if not r.evaluated:
-                continue
-            self.history["round"].append(r.round)
-            self.history["test_acc"].append(r.test_acc)
-            self.history["test_loss"].append(r.test_loss)
-            self.history["comm_mb"].append(r.comm_mb)
-            self.history["mean_selected_loss"].append(r.mean_selected_loss)
-            self.history["selected"].append(list(r.selected))
-            # systems runs gain the simulated clock (time-to-accuracy)
-            # and the cumulative drop count; tasks with extra eval
-            # metrics (LM perplexity) surface them under their own keys.
-            # Keys appear only when active, so the legacy history shape
-            # is unchanged for plain runs.
-            if self._systems is not None:
-                self.history.setdefault("sim_clock", []).append(r.sim_clock)
-                self.history.setdefault("n_dropped", []).append(r.n_dropped)
-            for k, v in (r.metrics or {}).items():
-                self.history.setdefault(k, []).append(v)
-            if log_every and (r.round % log_every == 0):
+            if r.evaluated and log_every and (r.round % log_every == 0):
                 print(
                     f"[{self.cfg.strategy}] round {r.round:4d} "
                     f"acc={r.test_acc:.4f} loss={r.test_loss:.4f} "

@@ -18,12 +18,12 @@ synchronization happens between rounds.  The carry arguments are
 place across the chunk instead of being copied once per round.
 
 Chunk boundaries respect the absolute ``eval_every`` cadence: a chunk
-always ends at an evaluation round (and at the final round of the
-call), so evaluation sees exactly the params the eager loop would have
-evaluated — ``rounds()`` still streams one frozen ``RoundResult`` per
-round by unpacking the scanned per-round outputs (masks + cohort
-losses), and chunked ``rounds()`` calls stay equivalent to one
-contiguous call.  Each distinct chunk length compiles once and is
+always ends at an evaluation round (and at the configured terminal
+round, and at any checkpoint save point — DESIGN.md §12), so evaluation
+and saves see exactly the params the eager loop would have committed —
+``rounds()`` still streams one frozen ``RoundResult`` per round by
+unpacking the scanned per-round outputs (masks + cohort losses), and
+chunked ``rounds()`` calls stay equivalent to one contiguous call.  Each distinct chunk length compiles once and is
 cached; with an aligned ``fuse_rounds``/``eval_every`` there are at most
 three lengths in play (the round-0 chunk, the steady-state chunk, the
 tail).
@@ -180,12 +180,25 @@ class FusedEngine(CompiledEngine):
     def _chunk_len(self, rnd: int, end: int) -> int:
         """Rounds to fuse starting at absolute round ``rnd``: capped by
         ``fuse_rounds`` and clipped so the chunk ends exactly at the next
-        ``eval_every``-cadence round or at the call's final round —
-        evaluation therefore always sees chunk-boundary params."""
-        ev = self.cfg.eval_every
+        ``eval_every``-cadence round, the configured terminal round, the
+        call's final round, or the next checkpoint save point — so
+        evaluation always sees chunk-boundary params, and a save policy
+        with a round trigger always fires on committed chunk-boundary
+        state.  Apart from the ``end`` clamp, the boundary is a pure
+        function of the absolute round index, so a run resumed from a
+        save point replays the identical chunk pattern (DESIGN.md §12)."""
+        cfg = self.cfg
+        ev = cfg.eval_every
         next_eval = rnd if rnd % ev == 0 else (rnd // ev + 1) * ev
         boundary = min(next_eval, end - 1)
-        return max(1, min(self.cfg.fuse_rounds, boundary - rnd + 1))
+        if rnd <= cfg.rounds - 1:
+            boundary = min(boundary, cfg.rounds - 1)
+        if (self.checkpointer is not None
+                and self.checkpointer.policy.every_rounds is not None):
+            n = self.checkpointer.policy.every_rounds
+            next_save = (rnd // n + 1) * n - 1  # min r >= rnd, (r+1) % n == 0
+            boundary = min(boundary, next_save)
+        return max(1, min(cfg.fuse_rounds, boundary - rnd + 1))
 
     # -- the fused round loop ------------------------------------------
     def rounds(
@@ -197,7 +210,8 @@ class FusedEngine(CompiledEngine):
         on device.  Same record semantics as ``Engine.rounds()``; state
         commits per chunk (see module docstring)."""
         cfg = self.cfg
-        n_rounds = n_rounds or cfg.rounds
+        if n_rounds is None:
+            n_rounds = max(cfg.rounds - self._round, 0)
         key = self._carry_key()
         start = self._round
         end = start + n_rounds
@@ -249,8 +263,11 @@ class FusedEngine(CompiledEngine):
                     sim_time, n_dropped = 0.0, 0
                     mean_loss = _mean_loss(sel_losses[i])
                 test_loss = test_acc = metrics = None
+                # same absolute cadence as Engine.rounds(): eval-due
+                # rounds are always chunk-final (see _chunk_len), so the
+                # committed params are exactly the eager loop's
                 if i == length - 1 and (
-                    r % cfg.eval_every == 0 or r == end - 1
+                    r % cfg.eval_every == 0 or r == cfg.rounds - 1
                 ):
                     test_loss, test_acc = self.evaluate()
                     metrics = self.eval_metrics()
@@ -267,7 +284,12 @@ class FusedEngine(CompiledEngine):
                     metrics=metrics,
                 ))
             rnd += length
-            for result in results:
-                if callback is not None:
-                    callback(result)
+            for i, result in enumerate(results):
+                # checkpoints only at the chunk-final round: the engine
+                # state committed above is the *chunk-end* state, so a
+                # mid-chunk save would pair end-of-chunk params with a
+                # truncated history.  _chunk_len aligns round-trigger
+                # save points to chunk boundaries, so no save is lost.
+                self._emit(result, callback,
+                           allow_save=(i == len(results) - 1))
                 yield result

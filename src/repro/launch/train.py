@@ -16,7 +16,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.checkpoint import save_checkpoint
+from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.configs import get_config
 from repro.data.synthetic import make_token_stream
 from repro.models.transformer import init_transformer, loss_fn
@@ -48,6 +48,10 @@ def main():
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--resume", default=None,
+                    help="checkpoint written by a previous --ckpt run; "
+                         "restores params + optimizer state and continues "
+                         "from the stored step")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
 
@@ -62,11 +66,25 @@ def main():
         adamw(warmup_cosine(args.lr, 10, args.steps), weight_decay=0.01),
     )
     opt_state = opt.init(params)
+    start = 0
+    if args.resume:
+        # restore into the freshly initialized structures: the serializer
+        # verifies treedef/dtype/shape, so an --arch mismatch fails loudly
+        (params, opt_state), meta = load_checkpoint(
+            args.resume, like=(params, opt_state)
+        )
+        if meta.get("arch") != cfg.name:
+            raise SystemExit(
+                f"--resume checkpoint is for arch {meta.get('arch')!r}, "
+                f"not {cfg.name!r}"
+            )
+        start = int(meta.get("step", 0))
+        print(f"resumed {cfg.name} from {args.resume} at step {start}")
     step = make_train_step(cfg, opt)
 
     data = make_token_stream(args.steps * args.batch, args.seq, cfg.vocab, seed=args.seed)
     t0 = time.time()
-    for i in range(args.steps):
+    for i in range(start, args.steps):
         lo = i * args.batch
         batch = {
             "tokens": jnp.asarray(data.x[lo : lo + args.batch]),
@@ -77,7 +95,10 @@ def main():
             print(f"step {i:4d} loss {float(loss):.4f} ce {float(metrics['ce']):.4f} "
                   f"({time.time()-t0:.1f}s)", flush=True)
     if args.ckpt:
-        save_checkpoint(args.ckpt, params, meta={"arch": cfg.name, "steps": args.steps})
+        save_checkpoint(
+            args.ckpt, (params, opt_state),
+            meta={"arch": cfg.name, "step": args.steps},
+        )
         print(f"checkpoint written to {args.ckpt}")
 
 

@@ -89,3 +89,22 @@ class SystemsRuntime:
     def outcome_from_mask(self, t: int, sel_mask: np.ndarray) -> RoundOutcome:
         """Same, from a (K,) participation mask (the fused scan output)."""
         return self.outcome(t, np.where(np.asarray(sel_mask, bool))[0])
+
+    # -- checkpoint contract (DESIGN.md §12) ---------------------------
+    # The runtime holds no mutable per-round state: availability, round
+    # times, and deadline outcomes are pure functions of (seed, round),
+    # rebuilt identically at engine construction.  The only clock the
+    # simulation accumulates is ``engine.sim_clock``, which the engine
+    # checkpoints in its own meta — restoring it puts a resumed run at
+    # the exact simulated wall-clock instant the saved run reached.
+    # These hooks exist so a future stateful runtime (e.g. trace-driven
+    # availability with a cursor) slots into the same save path.
+    def state_dict(self) -> dict:
+        return {}
+
+    def load_state_dict(self, state: dict) -> None:
+        if state:
+            raise ValueError(
+                f"SystemsRuntime is stateless but the checkpoint carries "
+                f"systems state keys {sorted(state)}"
+            )

@@ -1,0 +1,339 @@
+"""Checkpoint layer: serializer verification, save policies, the JSONL
+tracker, and the engine-level kill-and-resume contract (DESIGN.md §12).
+
+The acceptance bar pinned here: restoring a mid-run checkpoint and
+finishing yields *bit-identical* params, selections, and history vs an
+uninterrupted run of the same config — on every backend, with and
+without the systems layer.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import fl_cfg as _cfg
+from repro.checkpoint import (
+    Checkpointer,
+    CheckpointPolicy,
+    JsonlTracker,
+    latest_checkpoint,
+    load_checkpoint,
+    read_jsonl,
+    save_checkpoint,
+)
+from repro.engine import make_engine
+
+
+# ------------------------------------------------------------ serializer
+def _tree():
+    return {
+        "w": np.arange(6, dtype=np.float32).reshape(2, 3),
+        "b": np.ones(3, np.float64),
+        "step": np.int32(7),
+        "nested": {"k": jnp.arange(4, dtype=jnp.uint32)},
+    }
+
+
+def test_serializer_round_trip(tmp_path):
+    path = str(tmp_path / "x.ckpt")
+    save_checkpoint(path, _tree(), meta={"round": 3, "tag": "t"})
+    out, meta = load_checkpoint(path, like=_tree())
+    assert meta == {"round": 3, "tag": "t"}
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(_tree())):
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not os.path.exists(path + ".tmp")  # atomic rename cleaned up
+
+
+def test_serializer_rejects_dtype_mismatch(tmp_path):
+    """The silent-corruption bug this PR fixes: a float64 restore into a
+    float32 structure must fail, not reinterpret bytes."""
+    path = str(tmp_path / "x.ckpt")
+    save_checkpoint(path, {"w": np.zeros(4, np.float64)})
+    with pytest.raises(ValueError, match="dtype mismatch at leaf 0"):
+        load_checkpoint(path, like={"w": np.zeros(4, np.float32)})
+
+
+def test_serializer_rejects_shape_mismatch(tmp_path):
+    path = str(tmp_path / "x.ckpt")
+    save_checkpoint(path, {"w": np.zeros((2, 3), np.float32)})
+    with pytest.raises(ValueError, match="shape mismatch at leaf 0"):
+        load_checkpoint(path, like={"w": np.zeros((3, 2), np.float32)})
+
+
+def test_serializer_rejects_treedef_mismatch(tmp_path):
+    path = str(tmp_path / "x.ckpt")
+    save_checkpoint(path, {"w": np.zeros(4, np.float32)})
+    with pytest.raises(ValueError, match="treedef does not match"):
+        load_checkpoint(path, like={"other_key": np.zeros(4, np.float32)})
+    with pytest.raises(ValueError, match="treedef does not match"):
+        load_checkpoint(path, like=[np.zeros(4, np.float32)])
+
+
+def test_serializer_rejects_bad_magic(tmp_path):
+    path = str(tmp_path / "x.ckpt")
+    with open(path, "wb") as f:
+        f.write(b"not a checkpoint at all")
+    with pytest.raises(ValueError, match="bad magic header"):
+        load_checkpoint(path, like={"w": np.zeros(4)})
+
+
+def test_serializer_rejects_truncated_file(tmp_path):
+    path = str(tmp_path / "x.ckpt")
+    save_checkpoint(path, _tree())
+    raw = open(path, "rb").read()
+    with open(path, "wb") as f:
+        f.write(raw[: len(raw) // 2])
+    with pytest.raises(ValueError):  # truncated envelope OR short payload
+        load_checkpoint(path, like=_tree())
+
+
+def test_serializer_rejects_corrupt_payload_length(tmp_path):
+    import msgpack
+
+    from repro.checkpoint.serializer import _MAGIC
+
+    path = str(tmp_path / "x.ckpt")
+    save_checkpoint(path, {"w": np.zeros(4, np.float32)})
+    raw = open(path, "rb").read()
+    payload = msgpack.unpackb(raw[len(_MAGIC):], raw=False)
+    payload["leaves"][0]["data"] = payload["leaves"][0]["data"][:-4]
+    with open(path, "wb") as f:
+        f.write(_MAGIC + msgpack.packb(payload, use_bin_type=True))
+    with pytest.raises(ValueError, match="payload length mismatch"):
+        load_checkpoint(path, like={"w": np.zeros(4, np.float32)})
+
+
+# ---------------------------------------------------------- save policy
+def test_policy_round_trigger_is_absolute():
+    p = CheckpointPolicy(every_rounds=3)
+    assert [r for r in range(10) if p.round_due(r)] == [2, 5, 8]
+    assert not p.time_due(1e9)  # no time trigger configured
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError, match="every_rounds"):
+        CheckpointPolicy(every_rounds=0)
+    with pytest.raises(ValueError, match="every_seconds"):
+        CheckpointPolicy(every_seconds=0.0)
+    with pytest.raises(ValueError, match="keep_last"):
+        CheckpointPolicy(keep_last=0)
+    with pytest.raises(ValueError, match="no trigger"):
+        CheckpointPolicy(every_rounds=None, every_seconds=None)
+
+
+class _FakeEngine:
+    """Just enough surface for Checkpointer.save()."""
+
+    def __init__(self):
+        self._round = 0
+        self.saved = []
+
+    def save(self, path):
+        self.saved.append(path)
+        with open(path, "w") as f:
+            f.write("x")
+
+
+def test_checkpointer_time_trigger_with_fake_clock(tmp_path):
+    t = [0.0]
+    ck = Checkpointer(str(tmp_path / "ck"),
+                      CheckpointPolicy(every_rounds=None, every_seconds=10.0),
+                      clock=lambda: t[0])
+    eng = _FakeEngine()
+    assert ck.maybe_save(eng, 0) is None      # 0s elapsed
+    t[0] = 9.0
+    assert ck.maybe_save(eng, 1) is None      # under the interval
+    t[0] = 10.0
+    assert ck.maybe_save(eng, 2) is not None  # due; resets the timer
+    t[0] = 19.0
+    assert ck.maybe_save(eng, 3) is None
+    assert len(eng.saved) == 1
+
+
+def test_checkpointer_keep_last_prunes(tmp_path):
+    ck = Checkpointer(str(tmp_path / "ck"),
+                      CheckpointPolicy(every_rounds=1, keep_last=2))
+    eng = _FakeEngine()
+    for rnd in range(5):
+        eng._round = rnd + 1
+        ck.maybe_save(eng, rnd)
+    kept = sorted(os.listdir(ck.directory))
+    assert kept == ["round_00000004.ckpt", "round_00000005.ckpt"]
+    assert latest_checkpoint(ck.directory).endswith("round_00000005.ckpt")
+
+
+def test_latest_checkpoint_missing_dir(tmp_path):
+    assert latest_checkpoint(str(tmp_path / "nope")) is None
+    os.makedirs(tmp_path / "empty")
+    assert latest_checkpoint(str(tmp_path / "empty")) is None
+
+
+# ------------------------------------------------------------- tracker
+def test_jsonl_tracker_schema_and_dedupe(tmp_path, data):
+    train, test = data
+    path = str(tmp_path / "m.jsonl")
+    engine = make_engine(_cfg(eval_every=2), train, test, n_classes=10,
+                         tracker=JsonlTracker(path))
+    list(engine.rounds())
+    engine.close_trackers()
+    lines = [json.loads(x) for x in open(path)]
+    assert [row["round"] for row in lines] == [0, 1, 2]
+    for row in lines:
+        assert set(row) >= {"round", "selected", "mean_selected_loss",
+                            "comm_mb", "test_loss", "test_acc", "sim_clock",
+                            "n_dropped", "metrics"}
+        assert isinstance(row["selected"], list)
+    assert lines[1]["test_acc"] is None  # unevaluated rounds logged too
+    # at-least-once: duplicate rounds collapse, last occurrence wins
+    with open(path, "a") as f:
+        dup = dict(lines[0], comm_mb=123.0)
+        f.write(json.dumps(dup) + "\n")
+    rows = read_jsonl(path)
+    assert [row["round"] for row in rows] == [0, 1, 2]
+    assert rows[0]["comm_mb"] == 123.0
+
+
+# ---------------------------------------- engine kill-and-resume contract
+def _equiv_cfg(backend, systems, **kw):
+    sys_kw = None
+    if systems:
+        from repro.engine import SystemsConfig
+
+        sys_kw = SystemsConfig(profile="mobile_mix", availability="markov",
+                               deadline_s=30.0, over_select=1.3)
+    return _cfg(rounds=4, eval_every=2, systems=sys_kw, **{
+        "backend": "compiled" if backend == "fused" else backend,
+        **({"fuse_rounds": 2} if backend == "fused" else {}),
+        **kw,
+    })
+
+
+def _params_equal(a, b):
+    return all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+
+
+def _assert_history_equal(a, b):
+    """Bit-equality with NaN == NaN (an all-dropped round's mean loss)."""
+    assert a.keys() == b.keys()
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+
+@pytest.mark.parametrize("systems", [False, True], ids=["plain", "systems"])
+@pytest.mark.parametrize("backend", ["host", "compiled", "scaleout", "fused"])
+def test_kill_and_resume_bit_identical(backend, systems, data, tmp_path):
+    """Acceptance: save at round 2, rebuild the engine from scratch,
+    resume, finish — params, per-round selections, and history must be
+    bit-identical to the uninterrupted run."""
+    train, test = data
+    def mk(**kw):
+        return make_engine(_equiv_cfg(backend, systems), train, test,
+                           n_classes=10, **kw)
+
+    # the reference runs the same save policy (different directory): on
+    # the fused backend save points shape the chunk pattern, and chunk
+    # patterns must match for bit-level comparison
+    policy = CheckpointPolicy(every_rounds=2)
+    ref = mk(checkpointer=Checkpointer(str(tmp_path / "ref"), policy))
+    ref_results = list(ref.rounds())
+    ref_params = jax.device_get(ref.params)
+
+    ckdir = str(tmp_path / "ck")
+    killed = mk(checkpointer=Checkpointer(ckdir, policy))
+    pre = []
+    it = killed.rounds()
+    for _ in range(2):
+        pre.append(next(it))
+    it.close()  # the "kill": mid-run abandonment after the round-2 save
+
+    resumed = mk(resume=ckdir,
+                 checkpointer=Checkpointer(ckdir, policy))
+    assert resumed._round == 2
+    post = list(resumed.rounds())  # default = the remaining rounds
+
+    assert [r.round for r in pre + post] == [0, 1, 2, 3]
+    assert [r.selected for r in pre + post] == [r.selected for r in ref_results]
+    assert [r.evaluated for r in pre + post] == [r.evaluated for r in ref_results]
+    assert [r.comm_mb for r in pre + post] == [r.comm_mb for r in ref_results]
+    if systems:
+        assert [r.sim_clock for r in pre + post] == [
+            r.sim_clock for r in ref_results
+        ]
+    _assert_history_equal(resumed.history, ref.history)
+    assert _params_equal(ref_params, jax.device_get(resumed.params))
+
+
+def test_resume_restores_feddyn_server_and_client_state(data, tmp_path):
+    """agg_state (FedDyn h) and h_clients (per-client drift) ride the
+    checkpoint: a resumed FedDyn run matches the uninterrupted one."""
+    train, test = data
+    def mk(**kw):
+        return make_engine(
+            _cfg(rounds=4, aggregator="feddyn", client_mode="feddyn", mu=0.1),
+            train, test, n_classes=10, **kw)
+
+    ref = mk()
+    ref.run()
+
+    path = str(tmp_path / "fd.ckpt")
+    killed = mk()
+    it = killed.rounds()
+    next(it), next(it)
+    it.close()
+    killed.save(path)
+
+    resumed = mk()
+    resumed.restore(path)
+    h = resumed.run()
+    _assert_history_equal(h, ref.history)
+    assert _params_equal(jax.device_get(ref.params),
+                         jax.device_get(resumed.params))
+    assert _params_equal(jax.device_get(ref.agg_state),
+                         jax.device_get(resumed.agg_state))
+    assert _params_equal(jax.device_get(ref.h_clients),
+                         jax.device_get(resumed.h_clients))
+
+
+def test_restore_rejects_config_mismatch(data, tmp_path):
+    train, test = data
+    path = str(tmp_path / "x.ckpt")
+    make_engine(_cfg(), train, test, n_classes=10).save(path)
+    other = make_engine(_cfg(m=5), train, test, n_classes=10)
+    with pytest.raises(ValueError, match=r"config does not match.*'m'"):
+        other.restore(path)
+
+
+def test_resume_empty_dir_fails_loudly(data, tmp_path):
+    train, test = data
+    os.makedirs(tmp_path / "ck")
+    with pytest.raises(FileNotFoundError, match="no round_"):
+        make_engine(_cfg(), train, test, n_classes=10,
+                    resume=str(tmp_path / "ck"))
+
+
+def test_fused_chunk_boundaries_align_with_save_points(data, tmp_path):
+    """With fuse_rounds=4 and a save-every-3 policy, chunks must clip at
+    rounds 2 and 5 so every due save fires on committed chunk-boundary
+    state — and the saved files must exist at exactly those rounds."""
+    train, test = data
+    ckdir = str(tmp_path / "ck")
+    engine = make_engine(
+        _cfg(backend="compiled", fuse_rounds=4, rounds=6, eval_every=100),
+        train, test, n_classes=10,
+        checkpointer=Checkpointer(ckdir, CheckpointPolicy(every_rounds=3)),
+    )
+    list(engine.rounds())
+    assert sorted(os.listdir(ckdir)) == [
+        "round_00000003.ckpt", "round_00000006.ckpt",
+    ]
+    # chunk pattern [0][1,2][3,4,5]: round 0 evaluates, then chunks clip
+    # at the save points (rounds 2 and 5), never spanning one
+    assert sorted(engine._chunk_cache) == [1, 2, 3]

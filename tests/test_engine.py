@@ -160,8 +160,10 @@ def test_rounds_stream_and_callback(data):
 
 
 def test_chunked_rounds_keep_absolute_eval_cadence(data):
-    """rounds(5)+rounds(5) must evaluate on the same absolute schedule as
-    rounds(10) (each call additionally evaluates its own last round)."""
+    """rounds(5)+rounds(5) must evaluate on the *identical* absolute
+    schedule as rounds(10): the cadence plus the configured terminal
+    round, never a chunk's own last round (DESIGN.md §12 — resumed runs
+    must reproduce contiguous histories exactly)."""
     train, test = data
 
     def evaluated_rounds(chunks):
@@ -175,7 +177,7 @@ def test_chunked_rounds_keep_absolute_eval_cadence(data):
     contiguous, e1 = evaluated_rounds([10])
     chunked, e2 = evaluated_rounds([5, 5])
     assert contiguous == [0, 5, 9]
-    assert set(contiguous) <= set(chunked)  # cadence aligned, + call ends
+    assert chunked == contiguous  # no per-call final-round force-eval
     # and the training trajectory itself is identical
     import jax
     import jax.numpy as jnp
