@@ -26,6 +26,18 @@ regenerates and uploads the ``--smoke`` config per commit).  The
 summary block records, per strategy, the best deadline configuration's
 speedup over the no-deadline baseline — the acceptance bar is that at
 least one configuration reaches the target in less simulated time.
+
+``--async`` switches to the sync-vs-async sweep (DESIGN.md §13): the
+same ``mobile_mix``+markov environment, comparing the lock-step
+no-deadline baseline and the deadline+over-selection configuration
+against FedBuff-style async cells (``FLConfig.async_mode`` with
+polynomial staleness discount) in simulated time-to-target.  Async
+aggregation steps pop ``buffer_k`` arrivals instead of awaiting a
+cohort, so async cells run proportionally more steps to keep the total
+aggregated client work comparable.  Writes ``BENCH_async.json``; the
+acceptance bar is an async cell reaching the target ≥ 1.5× faster in
+simulated wall-clock than the sync deadline configuration for at least
+one strategy.
 """
 
 from __future__ import annotations
@@ -38,13 +50,17 @@ import numpy as np
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 BENCH_JSON = os.path.join(ROOT, "BENCH_systems.json")
+BENCH_ASYNC_JSON = os.path.join(ROOT, "BENCH_async.json")
 
 STRATEGIES = ("fedlecc", "random", "poc", "haccs")
+# the async sweep adds the predicted-T_i strategy (follow-up (n)) —
+# inside the async scheduler it dispatches the fastest idle clients
+ASYNC_STRATEGIES = ("fedlecc", "random", "fedcs")
 STRATEGY_KWARGS = {"fedlecc": {"J": 3}}
 
 
 def _cfg(strategy: str, systems: dict | None, *, smoke: bool, rounds: int,
-         n_clients: int, m: int, seed: int):
+         n_clients: int, m: int, seed: int, async_mode: dict | None = None):
     from repro.engine import FLConfig
 
     return FLConfig(
@@ -56,6 +72,7 @@ def _cfg(strategy: str, systems: dict | None, *, smoke: bool, rounds: int,
         eval_every=1 if smoke else 2,
         target_hd=0.8 if smoke else 0.9,
         systems=systems,
+        async_mode=async_mode,
     )
 
 
@@ -205,10 +222,149 @@ def main(args) -> dict:
     return payload
 
 
+def main_async(args) -> dict:
+    """The ``--async`` sweep: sync no-deadline / sync deadline vs
+    FedBuff-style async cells under ``mobile_mix``+markov, compared in
+    simulated time-to-target."""
+    from repro.data import make_classification
+    from repro.engine import make_engine
+
+    n = 2_000 if args.smoke else 20_000
+    data = (
+        make_classification(n, n_features=64, n_classes=10, seed=0),
+        make_classification(max(n // 10, 200), n_features=64, n_classes=10,
+                            seed=1),
+    )
+    run_kw = dict(smoke=args.smoke, n_clients=args.n_clients, m=args.m,
+                  seed=args.seed)
+
+    probe = make_engine(
+        _cfg("random", _systems(None, 1.0), rounds=1, **run_kw),
+        data[0], data[1], n_classes=10,
+    )
+    base_times = probe._systems.clock.base_times()
+    deadline = float(np.percentile(base_times, args.deadline_pct))
+
+    # async cells pop buffer_k ≤ m arrivals per step, so they run
+    # proportionally more steps to aggregate comparable client work
+    k = max(args.m // 2, 1)
+    conc = 2 * args.m
+    acfg = dict(staleness="polynomial", staleness_kwargs={"a": 0.5})
+    scenarios = [
+        ("sync_no_deadline", _systems(None, 1.0), None, args.rounds),
+        (f"sync_deadline_p{args.deadline_pct:g}_os1.3",
+         _systems(deadline, 1.3), None, args.rounds),
+        (f"async_k{k}", _systems(None, 1.0),
+         dict(acfg, buffer_k=k, concurrency=conc),
+         args.rounds * max(args.m // k, 1)),
+        (f"async_k{args.m}", _systems(None, 1.0),
+         dict(acfg, buffer_k=args.m, concurrency=conc), args.rounds),
+    ]
+
+    rows, curves = [], {}
+    for strategy in args.strategies:
+        for name, sysd, async_mode, rounds in scenarios:
+            cfg = _cfg(strategy, dict(sysd), rounds=rounds,
+                       async_mode=async_mode and dict(async_mode), **run_kw)
+            engine, results = _run(cfg, data)
+            evald = [r for r in results if r.test_acc is not None]
+            curves[(strategy, name)] = results
+            rows.append({
+                "strategy": strategy,
+                "scenario": name,
+                "async_mode": async_mode,
+                "deadline_s": sysd["deadline_s"],
+                "over_select": sysd["over_select"],
+                "rounds": rounds,
+                "final_acc": round(evald[-1].test_acc, 4),
+                "best_acc": round(max(r.test_acc for r in evald), 4),
+                "total_sim_s": round(results[-1].sim_clock, 2),
+                "total_comm_mb": round(results[-1].comm_mb, 3),
+                "final_params_version": results[-1].params_version,
+                "mean_staleness": round(
+                    float(np.mean([r.staleness for r in results])), 3
+                ),
+            })
+            print(f"[async] {strategy:<8s} {name:<24s} "
+                  f"acc={rows[-1]['best_acc']:.3f} "
+                  f"sim={rows[-1]['total_sim_s']:8.1f}s "
+                  f"stal={rows[-1]['mean_staleness']:.2f}", flush=True)
+
+    # Per strategy: common reachable target, then sim-time to it; the
+    # acceptance ratio is async-vs-sync-deadline.
+    summary = []
+    ddl_name = scenarios[1][0]
+    for strategy in args.strategies:
+        per = {n_: curves[(strategy, n_)] for n_, *_ in scenarios}
+        target = args.target or 0.95 * min(
+            max(r.test_acc for r in rs if r.test_acc is not None)
+            for rs in per.values()
+        )
+        reach = {n_: _time_to(rs, target) for n_, rs in per.items()}
+        best_name, best = None, None
+        for n_, hit in reach.items():
+            if not n_.startswith("async") or hit is None:
+                continue
+            if best is None or hit[1] < best[1]:
+                best_name, best = n_, hit
+        for row in rows:
+            if row["strategy"] == strategy:
+                hit = reach[row["scenario"]]
+                row["target_acc"] = round(target, 4)
+                row["rounds_to_target"] = None if hit is None else hit[0]
+                row["sim_s_to_target"] = None if hit is None else round(hit[1], 2)
+                row["comm_mb_to_target"] = None if hit is None else round(hit[2], 3)
+        ddl = reach[ddl_name]
+        summary.append({
+            "strategy": strategy,
+            "target_acc": round(target, 4),
+            "sync_no_deadline_sim_s": (
+                None if reach["sync_no_deadline"] is None
+                else round(reach["sync_no_deadline"][1], 2)
+            ),
+            "sync_deadline_sim_s": None if ddl is None else round(ddl[1], 2),
+            "best_async_scenario": best_name,
+            "best_async_sim_s": None if best is None else round(best[1], 2),
+            "async_vs_deadline_speedup": (
+                None if ddl is None or best is None
+                else round(ddl[1] / best[1], 2)
+            ),
+        })
+        print(f"[async] {strategy:<8s} target={target:.3f} "
+              f"deadline={summary[-1]['sync_deadline_sim_s']}s "
+              f"best={best_name}={summary[-1]['best_async_sim_s']}s "
+              f"(x{summary[-1]['async_vs_deadline_speedup']})", flush=True)
+
+    import jax
+
+    payload = {
+        "benchmark": "bench_systems_async",
+        "smoke": args.smoke,
+        "jax": jax.__version__,
+        "device": str(jax.devices()[0].platform),
+        "profile": "mobile_mix",
+        "deadline_s": round(deadline, 2),
+        "deadline_pct": args.deadline_pct,
+        "buffer_k": k,
+        "concurrency": conc,
+        "results": rows,
+        "summary": summary,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {args.out}")
+    return payload
+
+
 def _parse_args(argv=None):
     p = argparse.ArgumentParser(description=__doc__)
-    p.add_argument("--strategies", nargs="+", default=list(STRATEGIES),
-                   choices=list(STRATEGIES))
+    p.add_argument("--async", dest="async_sweep", action="store_true",
+                   help="run the sync-vs-async sweep (FLConfig.async_mode) "
+                        "instead of the deadline/over-selection grid; "
+                        "writes BENCH_async.json")
+    p.add_argument("--strategies", nargs="+", default=None,
+                   choices=sorted(set(STRATEGIES) | set(ASYNC_STRATEGIES)))
     p.add_argument("--rounds", type=int, default=None)
     p.add_argument("--n-clients", type=int, default=100)
     p.add_argument("--m", type=int, default=10)
@@ -224,8 +380,13 @@ def _parse_args(argv=None):
     p.add_argument("--smoke", action="store_true",
                    help="tiny CI config: 12 clients, small model/data — "
                         "trajectory tracking, not absolute numbers")
-    p.add_argument("--out", default=BENCH_JSON)
+    p.add_argument("--out", default=None)
     args = p.parse_args(argv)
+    if args.strategies is None:
+        args.strategies = list(ASYNC_STRATEGIES if args.async_sweep
+                               else STRATEGIES)
+    if args.out is None:
+        args.out = BENCH_ASYNC_JSON if args.async_sweep else BENCH_JSON
     if args.smoke:
         args.n_clients, args.m = 12, 4
         args.rounds = args.rounds or 10
@@ -235,4 +396,8 @@ def _parse_args(argv=None):
 
 
 if __name__ == "__main__":
-    main(_parse_args())
+    args = _parse_args()
+    if args.async_sweep:
+        main_async(args)
+    else:
+        main(args)

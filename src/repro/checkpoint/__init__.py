@@ -9,13 +9,14 @@ offline) plus save policies and the metrics-tracker seam.
   streamed ``RoundResult`` durably.
 """
 
-from repro.checkpoint.serializer import save_checkpoint, load_checkpoint
+from repro.checkpoint.serializer import save_checkpoint, load_checkpoint, load_meta
 from repro.checkpoint.policy import CheckpointPolicy, Checkpointer, latest_checkpoint
 from repro.checkpoint.tracker import JsonlTracker, MetricsTracker, read_jsonl
 
 __all__ = [
     "save_checkpoint",
     "load_checkpoint",
+    "load_meta",
     "CheckpointPolicy",
     "Checkpointer",
     "latest_checkpoint",

@@ -40,7 +40,7 @@ import jax
 import msgpack
 import numpy as np
 
-__all__ = ["save_checkpoint", "load_checkpoint", "FORMAT_VERSION"]
+__all__ = ["save_checkpoint", "load_checkpoint", "load_meta", "FORMAT_VERSION"]
 
 FORMAT_VERSION = 2
 _MAGIC = b"REPROCKPT\x02"
@@ -85,10 +85,8 @@ def save_checkpoint(path: str, pytree: Any, meta: dict | None = None) -> None:
     _fsync_dir(path)       # ... and the rename must survive a crash too
 
 
-def load_checkpoint(path: str, like: Any) -> tuple[Any, dict]:
-    """Restore a checkpoint into the structure of ``like``; returns
-    ``(pytree, meta)``.  Raises ``ValueError`` with an actionable message
-    on any structural or per-leaf mismatch (see module docstring)."""
+def _read_payload(path: str) -> dict:
+    """Read + verify the msgpack envelope (magic, unpack, version)."""
     with open(path, "rb") as f:
         raw = f.read()
     if not raw.startswith(_MAGIC):
@@ -109,6 +107,22 @@ def load_checkpoint(path: str, like: Any) -> tuple[Any, dict]:
             f"unsupported checkpoint version {got!r} in {path!r} "
             f"(this reader supports version {FORMAT_VERSION})"
         )
+    return payload
+
+
+def load_meta(path: str) -> dict:
+    """Read just the metadata dict of a checkpoint, without needing (or
+    checking) a ``like`` structure.  The async engine uses this to learn
+    the in-flight ledger's shape *before* building the ``like`` skeleton
+    that ``load_checkpoint`` verifies the arrays against."""
+    return _read_payload(path)["meta"]
+
+
+def load_checkpoint(path: str, like: Any) -> tuple[Any, dict]:
+    """Restore a checkpoint into the structure of ``like``; returns
+    ``(pytree, meta)``.  Raises ``ValueError`` with an actionable message
+    on any structural or per-leaf mismatch (see module docstring)."""
+    payload = _read_payload(path)
     like_leaves, treedef = jax.tree.flatten(like)
     if payload["treedef"] != str(treedef):
         raise ValueError(

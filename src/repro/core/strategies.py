@@ -459,6 +459,63 @@ class HACCS(SelectionStrategy):
         return self.select_mask_jax(losses, None)
 
 
+@register_strategy("fedcs")
+@dataclass
+class FedCS(SelectionStrategy):
+    """FedCS-style predicted-``T_i`` ranking (Nishio & Yonetani, 2019;
+    ROADMAP follow-up (n)): dispatch the ``m`` *fastest* clients by the
+    profile-derived expected round time — the systems layer's
+    ``latency_hint`` handed to ``setup`` (DESIGN.md §10).  Offline
+    clients ride the standard ``-inf`` loss gate to the back of the
+    ranking, so the pick is "fastest among the currently available" —
+    and under the async runtime (DESIGN.md §13), where busy in-flight
+    clients are gated the same way, "fastest among the idle".
+
+    Without a systems config there is no latency signal; scores
+    degenerate to a constant and selection becomes lowest-index-first
+    (deterministic, so the host/jax agreement property still holds).
+    Selection ignores losses and draws no randomness, so the mask is
+    trivially jit- and trace-compatible.
+    """
+
+    name: str = "fedcs"
+    supports_compiled_selection = True
+    supports_traced_selection = True
+
+    def _scores(self) -> np.ndarray:
+        """(K,) float32 ranking scores — faster clients score higher."""
+        if self.profile_latency is None:
+            return np.zeros(self.K, np.float32)
+        return (-self.profile_latency).astype(np.float32)
+
+    def select(self, rnd, losses, rng) -> np.ndarray:
+        del rng  # latency-driven: deterministic given setup + availability
+        gated = self._gate_scores(self._scores(), losses)
+        return np.sort(np.argsort(-gated, kind="stable")[: min(self.m, self.K)])
+
+    def select_mask_jax(self, losses, rng=None):
+        import jax
+        import jax.numpy as jnp
+
+        del rng
+        gated = jnp.asarray(self._gate_scores(self._scores(), losses))
+        _, top = jax.lax.top_k(gated, min(self.m, self.K))  # ties -> lowest index
+        return jnp.zeros((self.K,), jnp.bool_).at[top].set(True)
+
+    def select_mask_traced(self, losses, key):
+        """The only traced input is the availability gate riding the
+        loss vector; the latency ranking is setup-static."""
+        import jax
+        import jax.numpy as jnp
+
+        del key  # deterministic given setup + availability
+        gated = self._gate_scores_traced(
+            jnp.asarray(self._scores()), losses
+        )
+        _, top = jax.lax.top_k(gated, min(self.m, self.K))
+        return jnp.zeros((self.K,), jnp.bool_).at[top].set(True)
+
+
 @register_strategy("fedcls")
 @dataclass
 class FedCLS(SelectionStrategy):

@@ -58,6 +58,13 @@ validation enforces both up front):
 ``compress_bits`` aggregate inside the compiled round, so those three
 require ``aggregator="fedavg"``.)
 
+The async runtime (``FLConfig.async_mode``, DESIGN.md §13) layers a
+FedBuff-style event loop over the host/compiled hooks: the server
+aggregates the first-``buffer_k`` arrivals per step with
+staleness-discounted weights while further cohorts stay in flight
+(``AsyncConfig(dispatch="sync")`` is the degenerate lock-step form,
+bit-identical to the plain engines).
+
 The systems axis (``FLConfig.systems``, ``repro.systems``, DESIGN.md
 §10) is orthogonal to all of the above: a ``SystemsConfig`` adds device
 profiles, an availability trace, simulated wall-clock per round
@@ -141,6 +148,9 @@ __all__ = [
     "register_preset",
     "make_engine",
     "SystemsConfig",
+    "AsyncConfig",
+    "AsyncHostEngine",
+    "AsyncCompiledEngine",
     "CheckpointPolicy",
     "Checkpointer",
     "JsonlTracker",
@@ -160,6 +170,9 @@ _LAZY = {
     "ScaleoutEngine": ("repro.engine.scaleout", "ScaleoutEngine"),
     "make_scaleout_round": ("repro.engine.scaleout", "make_scaleout_round"),
     "SystemsConfig": ("repro.systems.config", "SystemsConfig"),
+    "AsyncConfig": ("repro.engine.async_config", "AsyncConfig"),
+    "AsyncHostEngine": ("repro.engine.async_engine", "AsyncHostEngine"),
+    "AsyncCompiledEngine": ("repro.engine.async_engine", "AsyncCompiledEngine"),
     "ExperimentPreset": ("repro.engine.presets", "ExperimentPreset"),
     "get_preset": ("repro.engine.presets", "get_preset"),
     "list_presets": ("repro.engine.presets", "list_presets"),
@@ -225,6 +238,11 @@ def make_engine(cfg: FLConfig, train, test, n_classes: int, *,
 
     ``cfg.fuse_rounds > 0`` selects the scan-fused execution mode of the
     compiled backend (``FusedEngine``, DESIGN.md §8.6).
+
+    ``cfg.async_mode`` selects the asynchronous runtime (DESIGN.md §13):
+    the host/compiled hooks driven by an event loop that buffers the
+    first-``k`` arrivals per aggregation step with staleness-discounted
+    weights (``AsyncHostEngine`` / ``AsyncCompiledEngine``).
     """
     engine = _build_engine(cfg, train, test, n_classes, **kwargs)
     if checkpointer is not None:
@@ -255,6 +273,17 @@ def make_engine(cfg: FLConfig, train, test, n_classes: int, *,
 
 
 def _build_engine(cfg: FLConfig, train, test, n_classes: int, **kwargs):
+    if cfg.async_mode is not None:
+        # the async runtime wraps the host/compiled hooks with an
+        # event-driven loop (DESIGN.md §13); FLConfig validation already
+        # rejected incompatible backends/modes
+        if cfg.backend == "compiled":
+            from repro.engine.async_engine import AsyncCompiledEngine
+
+            return AsyncCompiledEngine(cfg, train, test, n_classes, **kwargs)
+        from repro.engine.async_engine import AsyncHostEngine
+
+        return AsyncHostEngine(cfg, train, test, n_classes, **kwargs)
     if cfg.backend == "compiled":
         if cfg.fuse_rounds > 0:
             from repro.engine.fused import FusedEngine

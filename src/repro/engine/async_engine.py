@@ -1,0 +1,430 @@
+"""Asynchronous federated runtime — FedBuff-style buffered aggregation
+(DESIGN.md §13).
+
+The lock-step engines wait out every dispatched cohort (or a deadline)
+before aggregating; here the server instead keeps a target number of
+clients *in flight* and aggregates as soon as the first ``buffer_k``
+uploads arrive:
+
+- **dispatch** — whenever in-flight capacity frees up, the strategy
+  selects a fresh cohort among clients that are online *and not already
+  in flight* (both enter selection as the ``-inf`` gate every strategy
+  already understands); the cohort fetches the current params version
+  and its per-client arrival instants (``sim_clock +`` the systems
+  layer's simulated round times) are recorded in the in-flight ledger.
+- **aggregate** — each step pops the first ``buffer_k`` pending arrivals
+  in ``(arrival time, client index)`` order and applies the delta rule
+
+      params ← params + Σ_i w_i · (trained_i − fetched_i)
+
+  with ``w_i ∝ size_i · d(s_i)`` (``staleness_weights``), where the
+  staleness ``s_i`` is the number of server aggregations since client i
+  fetched; arrivals staler than ``max_staleness`` are dropped with
+  exactly zero weight.  The params version bumps once per aggregation
+  that actually applies an update.
+- **event clock** — ``sim_clock`` advances to the last popped arrival's
+  instant (monotone; ``RoundResult.sim_time`` is the step's advance),
+  not to deadline boundaries.  Systems lookups (availability, times)
+  stay indexed by the integer step — see
+  ``SystemsRuntime.state_dict``'s contract.
+
+``AsyncConfig.dispatch = "sync"`` is the degenerate configuration: the
+round loop delegates verbatim to the lock-step ``Engine.rounds`` body,
+so it is bit-identical to the synchronous engine by construction (the
+backend-conformance suite enforces it against a plain sync engine —
+params, selections, history, comm ledger, ``sim_clock``).
+
+PRNG discipline: every *dispatch* consumes one ``(key, k_poll,
+k_train)`` 3-way split off the persisted round carry — exactly the
+per-round split of the sync loop, just taken per dispatch event — and
+per-client training keys remain ``fold_in(k_train, client)``, so a
+client's local stream never depends on who shares its cohort.
+
+Checkpointing: the in-flight ledger (cohort indices, arrival times,
+pending flags, trained stacks, and each cohort's fetched params) rides
+in the checkpoint pytree; the ledger's *structure* (group sizes,
+fetched versions, dispatch instants) rides in the meta so ``restore``
+can rebuild the ``like`` skeleton before the arrays load.  A killed
+run resumed mid-buffer replays bit-identically.
+
+Comm accounting is additive through the same ``CommModel``: downloads
+(+ the loss poll) are paid at dispatch, uploads when arrivals are
+popped — the same per-event split the lock-step loop pays per round.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine.async_config import (
+    make_staleness_discount,
+    staleness_weights,
+)
+from repro.engine.base import RoundResult, _mean_loss
+from repro.engine.compiled import CompiledEngine
+from repro.engine.host import HostEngine
+
+__all__ = ["AsyncHostEngine", "AsyncCompiledEngine"]
+
+
+@dataclass
+class _InflightGroup:
+    """One dispatched cohort in the in-flight ledger."""
+
+    sel: np.ndarray        # (g,) dispatched client indices
+    version: int           # params version the cohort fetched
+    dispatch_round: int    # aggregation-step index at dispatch
+    dispatch_t: float      # sim_clock at dispatch
+    arrival_t: np.ndarray  # (g,) float64 absolute arrival instants
+    pending: np.ndarray    # (g,) bool — dispatched, not yet popped
+    losses: np.ndarray     # (g,) float32 local training losses
+    stacked: Any           # trained client params, leading axis g
+    fetched: Any           # the params pytree the cohort trained against
+
+
+class AsyncRounds:
+    """Mixin installing the async round loop + ledger checkpointing on
+    top of a lock-step backend (``HostEngine`` / ``CompiledEngine``).
+    The backend hooks (``poll_losses`` / ``select`` / ``local_train``)
+    are reused unchanged; only the *loop* differs."""
+
+    def __init__(self, cfg, train, test, n_classes: int, **kwargs):
+        super().__init__(cfg, train, test, n_classes, **kwargs)
+        acfg = cfg.async_mode
+        if acfg is None:
+            raise ValueError(
+                "async engines require FLConfig.async_mode to be set"
+            )
+        self.async_cfg = acfg
+        self._buffer_k = acfg.buffer_effective(self.m_eff)
+        self._concurrency = acfg.concurrency_effective(self.m_eff)
+        self._discount = make_staleness_discount(
+            acfg.staleness, **acfg.staleness_kwargs
+        )
+        self._version = 0
+        self._ledger: list[_InflightGroup] = []
+
+    # -- backend payload adapter ---------------------------------------
+    def _dispatch_stack(self, payload):
+        """Extract the (g, ...) trained-params stack from the backend's
+        ``local_train`` payload."""
+        raise NotImplementedError
+
+    # -- the async event loop ------------------------------------------
+    def rounds(
+        self,
+        n_rounds: int | None = None,
+        callback: Callable[[RoundResult], None] | None = None,
+    ) -> Iterator[RoundResult]:
+        if self.async_cfg.dispatch == "sync":
+            # Degenerate configuration: the lock-step loop, verbatim —
+            # bit-identity with the sync engine holds by construction
+            # (the ledger stays empty; checkpoints carry its absence).
+            yield from super().rounds(n_rounds, callback)
+            return
+        yield from self._async_rounds(n_rounds, callback)
+
+    def _inflight_mask(self) -> np.ndarray:
+        """(K,) bool — clients with a pending in-flight upload."""
+        m = np.zeros(self.cfg.n_clients, bool)
+        for g in self._ledger:
+            m[g.sel[g.pending]] = True
+        return m
+
+    def _n_inflight(self) -> int:
+        return sum(int(g.pending.sum()) for g in self._ledger)
+
+    def _fill_inflight(self, rnd: int, key: jax.Array) -> jax.Array:
+        """Dispatch fresh cohorts until the in-flight target is met or
+        the dispatchable population (online ∧ idle) runs dry.  Each
+        dispatch consumes one 3-way split of the round carry."""
+        while self._n_inflight() + self.m_eff <= self._concurrency:
+            gate = (
+                np.asarray(self._systems.available(rnd), bool)
+                & ~self._inflight_mask()
+            )
+            if not gate.any():
+                break
+            key, k_poll, k_train = jax.random.split(key, 3)
+            losses = self.poll_losses(rnd, k_poll)
+            losses = np.where(gate, losses, -np.inf).astype(np.float32)
+            sel = np.asarray(self.select(rnd, losses))
+            # strategies return m_eff indices even when supply is short;
+            # busy/offline clients cannot be dispatched twice
+            sel = sel[gate[sel]]
+            if sel.size == 0:
+                break
+            payload, sel_losses = self.local_train(rnd, sel, k_train)
+            times = np.asarray(self._systems.times(rnd), np.float64)[sel]
+            self._ledger.append(_InflightGroup(
+                sel=np.asarray(sel, np.int64),
+                version=int(self._version),
+                dispatch_round=int(rnd),
+                dispatch_t=float(self.sim_clock),
+                arrival_t=np.asarray(self.sim_clock + times, np.float64),
+                pending=np.ones(sel.size, bool),
+                losses=np.asarray(sel_losses, np.float32),
+                stacked=self._dispatch_stack(payload),
+                fetched=self.params,
+            ))
+            # downloads + the loss poll are paid at dispatch; uploads
+            # are paid when the arrivals are popped
+            self.comm_mb += self.comm.round_mb(
+                int(sel.size), self.strategy.needs_losses, m_uploaded=0
+            )
+            if sel.size < self.m_eff:
+                break  # partial cohort: the idle population is exhausted
+        return key
+
+    def _pop_buffer(self) -> list[tuple[float, int, int, int]]:
+        """The first ``buffer_k`` pending arrivals as ``(arrival_t,
+        client, group_idx, slot)``, in deterministic event order."""
+        entries = []
+        for gi, g in enumerate(self._ledger):
+            for si in np.flatnonzero(g.pending):
+                entries.append(
+                    (float(g.arrival_t[si]), int(g.sel[si]), gi, int(si))
+                )
+        entries.sort()
+        return entries[: self._buffer_k]
+
+    def _aggregate_buffer(self, take) -> tuple[np.ndarray, float, int, float]:
+        """Apply the staleness-weighted delta rule over the popped
+        arrivals.  Returns ``(aggregated_clients, mean_loss, n_dropped,
+        mean_staleness)``; bumps ``_version`` iff an update applied."""
+        clients = np.array([c for (_t, c, _gi, _si) in take], np.int64)
+        stal = np.array(
+            [self._version - self._ledger[gi].version
+             for (_t, _c, gi, _si) in take],
+            np.int64,
+        )
+        w = staleness_weights(
+            self.sizes[clients], stal, self._discount,
+            self.async_cfg.max_staleness,
+        )
+        kept = w > 0.0
+        # stale uploads still arrived — the ledger pays them either way
+        self.comm_mb += self.comm.round_mb(0, False, m_uploaded=len(take))
+        if kept.any():
+            delta = None
+            # batch the kept entries per group so the tree math runs
+            # once per cohort, not once per client
+            by_group: dict[int, tuple[list[int], list[float]]] = {}
+            for (entry, w_e, k_e) in zip(take, w, kept):
+                if not k_e:
+                    continue
+                slots, ws = by_group.setdefault(entry[2], ([], []))
+                slots.append(entry[3])
+                ws.append(float(w_e))
+            for gi, (slots, ws) in by_group.items():
+                g = self._ledger[gi]
+                idx = jnp.asarray(np.asarray(slots, np.int64))
+                wv = jnp.asarray(np.asarray(ws), jnp.float32)
+                contrib = jax.tree.map(
+                    lambda st, f, idx=idx, wv=wv: jnp.tensordot(
+                        wv,
+                        jnp.take(jnp.asarray(st), idx, axis=0)
+                        - jnp.asarray(f)[None],
+                        axes=1,
+                    ),
+                    g.stacked, g.fetched,
+                )
+                delta = (
+                    contrib if delta is None
+                    else jax.tree.map(jnp.add, delta, contrib)
+                )
+            self.params = jax.tree.map(
+                lambda p, d: p + d, self.params, delta
+            )
+            self._version += 1
+        # mark popped slots served; prune exhausted cohorts
+        for (_t, _c, gi, si) in take:
+            self._ledger[gi].pending[si] = False
+        losses = np.array(
+            [self._ledger[gi].losses[si] for (_t, _c, gi, si) in take],
+            np.float32,
+        )
+        self._ledger = [g for g in self._ledger if g.pending.any()]
+        agg_clients = np.sort(clients[kept])
+        mean_loss = _mean_loss(losses[kept])
+        mean_stal = float(stal[kept].mean()) if kept.any() else 0.0
+        return agg_clients, mean_loss, int((~kept).sum()), mean_stal
+
+    def _async_rounds(
+        self,
+        n_rounds: int | None,
+        callback: Callable[[RoundResult], None] | None,
+    ) -> Iterator[RoundResult]:
+        cfg = self.cfg
+        if n_rounds is None:
+            n_rounds = max(cfg.rounds - self._round, 0)
+        key = self._carry_key()
+
+        start = self._round
+        for rnd in range(start, start + n_rounds):
+            key = self._fill_inflight(rnd, key)
+            take = self._pop_buffer()
+            if take:
+                # the event clock jumps to the last popped arrival
+                # (monotone: remaining pending arrivals are never
+                # earlier than a previously popped buffer's tail)
+                t_agg = max(self.sim_clock, take[-1][0])
+                sim_time = t_agg - self.sim_clock
+                self.sim_clock = t_agg
+                surv, mean_loss, n_dropped, mean_stal = (
+                    self._aggregate_buffer(take)
+                )
+            else:
+                # nobody in flight and nobody dispatchable: the model
+                # (and the clock) stand still this step
+                surv = np.zeros(0, np.int64)
+                sim_time, mean_loss = 0.0, float("nan")
+                n_dropped, mean_stal = 0, 0.0
+
+            test_loss = test_acc = metrics = None
+            if rnd % cfg.eval_every == 0 or rnd == cfg.rounds - 1:
+                test_loss, test_acc = self.evaluate()
+                metrics = self.eval_metrics()
+
+            self._round = rnd + 1
+            self._key = key
+            result = RoundResult(
+                round=rnd,
+                selected=tuple(int(i) for i in surv),
+                mean_selected_loss=mean_loss,
+                comm_mb=float(self.comm_mb),
+                test_loss=test_loss,
+                test_acc=test_acc,
+                sim_time=float(sim_time),
+                sim_clock=float(self.sim_clock),
+                n_dropped=int(n_dropped),
+                metrics=metrics,
+                staleness=float(mean_stal),
+                params_version=int(self._version),
+            )
+            self._emit(result, callback)
+            yield result
+
+    # -- checkpointing (DESIGN.md §12 + §13) ----------------------------
+    def _current_version(self) -> int:
+        """Server params version: under ``dispatch="sync"`` aggregation
+        fires every round, so the committed round count *is* the
+        version; the async loop tracks it explicitly (it lags steps
+        with an empty or fully-stale buffer)."""
+        if self.async_cfg.dispatch == "sync":
+            return self._round
+        return self._version
+
+    def _state_pytree(self) -> dict:
+        state = super()._state_pytree()
+        state["async_groups"] = [
+            {
+                "sel": np.asarray(g.sel, np.int64),
+                "arrival_t": np.asarray(g.arrival_t, np.float64),
+                "pending": np.asarray(g.pending, bool),
+                "losses": np.asarray(g.losses, np.float32),
+                "stacked": g.stacked,
+                "fetched": g.fetched,
+            }
+            for g in self._ledger
+        ]
+        return state
+
+    def _extra_meta(self) -> dict:
+        meta = super()._extra_meta()
+        meta["async"] = {
+            "version": int(self._current_version()),
+            "groups": [
+                {
+                    "version": int(g.version),
+                    "dispatch_round": int(g.dispatch_round),
+                    "dispatch_t": float(g.dispatch_t),
+                    "n": int(g.sel.size),
+                }
+                for g in self._ledger
+            ],
+        }
+        return meta
+
+    def _skeleton_group(self, info: dict) -> _InflightGroup:
+        """An empty ledger group with the checkpointed structure — the
+        restore ``like`` shapes (arrays load on top of it)."""
+        n = int(info["n"])
+        return _InflightGroup(
+            sel=np.zeros(n, np.int64),
+            version=int(info["version"]),
+            dispatch_round=int(info["dispatch_round"]),
+            dispatch_t=float(info["dispatch_t"]),
+            arrival_t=np.zeros(n, np.float64),
+            pending=np.zeros(n, bool),
+            losses=np.zeros(n, np.float32),
+            stacked=jax.tree.map(
+                lambda p: np.zeros(
+                    (n,) + np.asarray(p).shape, np.asarray(p).dtype
+                ),
+                self.params,
+            ),
+            fetched=jax.tree.map(
+                lambda p: np.zeros_like(np.asarray(p)), self.params
+            ),
+        )
+
+    def restore(self, path: str) -> dict:
+        from repro.checkpoint.serializer import load_meta
+
+        info = load_meta(path).get("async")
+        if info is None:
+            raise ValueError(
+                f"checkpoint {path!r} carries no async ledger meta — it "
+                f"was not written by an async engine; rebuild without "
+                f"FLConfig.async_mode to resume it"
+            )
+        # the ledger skeleton must exist before the base restore builds
+        # its `like` pytree, so the stored arrays have slots to land in
+        self._ledger = [self._skeleton_group(g) for g in info["groups"]]
+        return super().restore(path)
+
+    def _install_state(self, state: dict, meta: dict) -> None:
+        super()._install_state(state, meta)
+        self._version = int(meta["async"]["version"])
+        for g, arrs in zip(self._ledger, state["async_groups"]):
+            g.sel = np.asarray(arrs["sel"], np.int64)
+            g.arrival_t = np.asarray(arrs["arrival_t"], np.float64)
+            g.pending = np.asarray(arrs["pending"], bool)
+            g.losses = np.asarray(arrs["losses"], np.float32)
+            g.stacked = jax.tree.map(jnp.asarray, arrs["stacked"])
+            g.fetched = jax.tree.map(jnp.asarray, arrs["fetched"])
+
+
+class AsyncHostEngine(AsyncRounds, HostEngine):
+    """Async runtime over the host backend's hooks."""
+
+    def _dispatch_stack(self, payload):
+        stacked, _h_sel = payload  # client_mode="plain" → h_sel is None
+        return stacked
+
+
+class AsyncCompiledEngine(AsyncRounds, CompiledEngine):
+    """Async runtime over the compiled backend's hooks.  Always uses the
+    gathered-cohort training path (variable dispatch cohorts as static-
+    shaped jit entries per distinct size)."""
+
+    def __init__(self, cfg, train, test, n_classes: int,
+                 partition_labels=None, cohort_gather: bool = True):
+        if not cohort_gather:
+            raise ValueError(
+                "the async runtime trains dispatched cohorts through the "
+                "gathered path; cohort_gather=False is not supported with "
+                "FLConfig.async_mode"
+            )
+        super().__init__(cfg, train, test, n_classes,
+                         partition_labels=partition_labels,
+                         cohort_gather=True)
+
+    def _dispatch_stack(self, payload):
+        return payload

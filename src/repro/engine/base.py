@@ -109,6 +109,14 @@ class RoundResult:
       metrics (e.g. the LM task's held-out perplexity, total and per
       topic cluster); ``None`` on unevaluated rounds and for tasks
       without extras.
+    - ``staleness``          — mean staleness (in params versions) of
+      the updates aggregated this round.  Always 0.0 on the lock-step
+      engines (every update trains against the current params); > 0
+      only under the async runtime (DESIGN.md §13).
+    - ``params_version``     — server params version after this round's
+      aggregation.  The lock-step engines bump once per round
+      (``round + 1``); the async runtime's version lags the step index
+      whenever a step's buffer was empty or fully stale.
     """
 
     round: int
@@ -121,6 +129,8 @@ class RoundResult:
     sim_clock: float = 0.0
     n_dropped: int = 0
     metrics: dict | None = None
+    staleness: float = 0.0
+    params_version: int = 0
 
     @property
     def evaluated(self) -> bool:
@@ -429,7 +439,15 @@ class Engine:
         }
         if self._systems is not None:
             meta["systems"] = self._systems.state_dict()
+        meta.update(self._extra_meta())
         save_checkpoint(path, self._state_pytree(), meta=meta)
+
+    def _extra_meta(self) -> dict:
+        """Execution-mode hook: extra scalar-valued meta merged into the
+        checkpoint (the async runtime records its ledger structure here
+        so ``restore`` can rebuild the ``like`` skeleton before the
+        arrays load).  Base engines have none."""
+        return {}
 
     def restore(self, path: str) -> dict:
         """Install a checkpoint written by ``save`` into this engine.
@@ -458,6 +476,14 @@ class Engine:
                 f"(differing fields: {diff}) — resuming would change the "
                 f"experiment; rebuild the engine with the original config"
             )
+        self._install_state(state, meta)
+        return meta
+
+    def _install_state(self, state: dict, meta: dict) -> None:
+        """Install a verified checkpoint's arrays + scalar carry into
+        this engine (split from ``restore`` so execution modes can
+        extend the install — the async runtime adds its in-flight
+        ledger on top)."""
         self.params = jax.tree.map(jnp.asarray, state["params"])
         self.agg_state = (
             None if state["agg_state"] is None
@@ -476,7 +502,6 @@ class Engine:
         self.history = {k: list(v) for k, v in meta["history"].items()}
         if self._systems is not None:
             self._systems.load_state_dict(meta.get("systems", {}))
-        return meta
 
     # -- per-round emission (history / trackers / checkpoints) ----------
     def _record_history(self, r: RoundResult) -> None:
@@ -605,6 +630,7 @@ class Engine:
                 sim_clock=float(self.sim_clock),
                 n_dropped=int(n_dropped),
                 metrics=metrics,
+                params_version=rnd + 1,
             )
             self._emit(result, callback)
             yield result

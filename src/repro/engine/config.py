@@ -33,6 +33,12 @@ backward compatibility) and extended with:
   deadline, and an over-selection factor.  ``None`` (the default) is
   the frictionless engine — bit-identical to the systems-free round
   loop.  Validated and JSON-round-tripping like ``task_kwargs``.
+- ``async_mode`` — the asynchronous runtime (DESIGN.md §13,
+  ``repro.engine.async_engine``): an ``AsyncConfig`` (or its dict form)
+  selecting buffered FedBuff-style aggregation of the first-``k``
+  arrivals with staleness-discounted weights; requires the ``systems``
+  axis for arrival times.  ``None`` (the default) keeps the lock-step
+  round loop.
 - eager validation in ``__post_init__`` — component names (including
   ``task``) are checked against the engine registries, so a typo fails
   at config construction rather than mid-run; mask-gated backends
@@ -152,6 +158,7 @@ class FLConfig:
     fuse_rounds: int = 0           # >0: scan-fuse round chunks (compiled only)
     compress_bits: int = 0         # >0: quantized cohort-delta aggregation
     systems: Any = None  # SystemsConfig | dict | None (repro.systems)
+    async_mode: Any = None  # AsyncConfig | dict | None (DESIGN.md §13)
 
     # ------------------------------------------------------------------
     def __post_init__(self) -> None:
@@ -264,6 +271,24 @@ class FLConfig:
                 raise ValueError(
                     compress_backend_error(self.backend, self.aggregator)
                 )
+        # Async runtime (DESIGN.md §13): normalize the dict form to a
+        # validated AsyncConfig, then cross-check it against the rest of
+        # the config (backend / aggregator / systems interplay lives in
+        # validate_async_combination, single-sourced in async_config).
+        if self.async_mode is not None:
+            from repro.engine.async_config import (
+                AsyncConfig,
+                validate_async_combination,
+            )
+
+            if isinstance(self.async_mode, dict):
+                self.async_mode = AsyncConfig.from_dict(self.async_mode)
+            elif not isinstance(self.async_mode, AsyncConfig):
+                raise ValueError(
+                    f"async_mode must be an AsyncConfig, its dict form, or "
+                    f"None; got {type(self.async_mode).__name__}"
+                )
+            validate_async_combination(self)
 
     # ------------------------------------------------------------------
     def to_dict(self) -> dict:

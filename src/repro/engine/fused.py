@@ -282,6 +282,7 @@ class FusedEngine(CompiledEngine):
                     sim_clock=float(self.sim_clock),
                     n_dropped=int(n_dropped),
                     metrics=metrics,
+                    params_version=r + 1,
                 ))
             rnd += length
             for i, result in enumerate(results):

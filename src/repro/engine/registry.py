@@ -15,6 +15,8 @@ modification, and the task under evaluation compose freely):
                       clustering (``repro.engine.tasks``)
 - **presets**       — named (strategy × mode × aggregator × task)
                       experiment cells (``repro.engine.presets``)
+- **staleness**     — async-runtime staleness discounts d(s) applied to
+                      buffered arrivals (``repro.engine.async_config``)
 
 Components self-register at class-definition time via the decorators
 (``@register_strategy("fedlecc")`` etc.), so adding a new method never
@@ -39,6 +41,9 @@ __all__ = [
     "CLIENT_MODE_REGISTRY",
     "TASK_REGISTRY",
     "PRESET_REGISTRY",
+    "STALENESS_REGISTRY",
+    "register_staleness",
+    "list_staleness_discounts",
     "register_strategy",
     "register_aggregator",
     "register_client_mode",
@@ -58,6 +63,7 @@ _PROVIDERS: dict[str, tuple[str, ...]] = {
     "client_mode": ("repro.engine.client_modes",),
     "task": ("repro.engine.tasks",),
     "preset": ("repro.engine.presets",),
+    "staleness": ("repro.engine.async_config",),
 }
 
 
@@ -162,6 +168,7 @@ AGGREGATOR_REGISTRY = Registry("aggregator")
 CLIENT_MODE_REGISTRY = Registry("client_mode")
 TASK_REGISTRY = Registry("task")
 PRESET_REGISTRY = Registry("preset")
+STALENESS_REGISTRY = Registry("staleness")
 
 # The capability-flag ↔ method pairs the mask-gated backends dispatch
 # on (see repro/core/strategies.py and the tracecheck AST twin of this
@@ -213,6 +220,11 @@ def register_strategy(name: str | None = None) -> Callable[[Any], Any]:
 register_aggregator = AGGREGATOR_REGISTRY.register
 register_client_mode = CLIENT_MODE_REGISTRY.register
 register_task = TASK_REGISTRY.register
+register_staleness = STALENESS_REGISTRY.register
+
+
+def list_staleness_discounts() -> list[str]:
+    return STALENESS_REGISTRY.names()
 
 
 def list_strategies() -> list[str]:

@@ -91,15 +91,36 @@ class SystemsRuntime:
         return self.outcome(t, np.where(np.asarray(sel_mask, bool))[0])
 
     # -- checkpoint contract (DESIGN.md §12) ---------------------------
-    # The runtime holds no mutable per-round state: availability, round
-    # times, and deadline outcomes are pure functions of (seed, round),
-    # rebuilt identically at engine construction.  The only clock the
-    # simulation accumulates is ``engine.sim_clock``, which the engine
-    # checkpoints in its own meta — restoring it puts a resumed run at
-    # the exact simulated wall-clock instant the saved run reached.
-    # These hooks exist so a future stateful runtime (e.g. trace-driven
-    # availability with a cursor) slots into the same save path.
     def state_dict(self) -> dict:
+        """The runtime's checkpoint carry — **empty by contract**.
+
+        This is not an omission: every systems quantity is a pure
+        function of ``(seed, round)``, *including* the markov
+        availability chain, which looks stateful (each round's on/off
+        mask depends on the previous one) but is materialized lazily
+        from its own seeded stream — ``MarkovAvailability.mask(t)``
+        extends the trace from the last cached round to ``t``, and any
+        prefix recomputed from scratch is bit-identical.  A freshly
+        constructed runtime therefore reproduces the exact trace of the
+        killed run with no carried state.
+
+        Two things keep this sound, and both are load-bearing for the
+        async runtime (DESIGN.md §13):
+
+        - availability/time streams are indexed by the **integer
+          aggregation-step index** ``t``, never by ``sim_clock`` — the
+          async event clock advances ``sim_clock`` to non-integer
+          arrival instants, but systems lookups stay on the step grid,
+          so a resumed run re-derives the same masks/times
+          (``tests/test_systems.py`` pins a resumed markov trace
+          against the contiguous one);
+        - the one accumulated scalar, ``engine.sim_clock``, is
+          checkpointed by the engine itself in its meta.
+
+        The hooks exist so a future *genuinely* stateful runtime (e.g.
+        trace-driven availability with a file cursor) slots into the
+        same save path.
+        """
         return {}
 
     def load_state_dict(self, state: dict) -> None:

@@ -1,0 +1,444 @@
+"""The asynchronous runtime (``FLConfig.async_mode``, DESIGN.md §13):
+FedBuff-style buffered aggregation with staleness-discounted weights.
+
+Covers the PR's acceptance surface:
+
+- ``AsyncConfig`` validation and ``FLConfig`` round-tripping;
+- staleness discounts and ``staleness_weights`` against hand-computed
+  values (the property suite drives the permutation invariants);
+- buffer semantics: aggregation fires at exactly ``buffer_k`` arrivals,
+  arrivals past ``max_staleness`` are dropped with exactly zero weight;
+- the degenerate configuration (``dispatch="sync"``, discount off) is
+  bit-identical to the synchronous engine on host and compiled — the
+  cross-task cells live in test_backend_conformance.py;
+- event-clock monotonicity, params-version accounting, same-seed
+  determinism, host/compiled agreement;
+- kill-and-resume mid-buffer through ``Engine.save``/``restore`` —
+  in-flight ledger, buffer, and params version ride the checkpoint.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import fl_cfg as _cfg
+from repro.engine import AsyncConfig, FLConfig, make_engine
+from repro.engine.async_config import (
+    arrival_order,
+    make_staleness_discount,
+    staleness_weights,
+)
+from repro.engine.registry import list_staleness_discounts
+
+
+def _max_err(a, b):
+    return max(
+        float(np.max(np.abs(np.asarray(x) - np.asarray(y))))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+
+
+def _sys(**over):
+    base = dict(profile="mobile_mix", availability="markov",
+                availability_kwargs={"p_drop": 0.2, "p_join": 0.6},
+                jitter_sigma=0.1)
+    if "availability" in over and "availability_kwargs" not in over:
+        base["availability_kwargs"] = {}
+    base.update(over)
+    return base
+
+
+def _async_cfg(**kw):
+    kw.setdefault("systems", _sys())
+    kw.setdefault("async_mode", {"buffer_k": 3, "concurrency": 8})
+    kw.setdefault("rounds", 6)
+    kw.setdefault("eval_every", 2)
+    return _cfg(**kw)
+
+
+# ---------------------------------------------------------------- config
+def test_async_config_field_validation():
+    with pytest.raises(ValueError, match="dispatch"):
+        AsyncConfig(dispatch="eventually")
+    with pytest.raises(ValueError, match="buffer_k"):
+        AsyncConfig(buffer_k=0)
+    with pytest.raises(ValueError, match="concurrency"):
+        AsyncConfig(concurrency=-1)
+    with pytest.raises(ValueError, match="unknown staleness discount"):
+        AsyncConfig(staleness="logarithmic")
+    with pytest.raises(ValueError, match="max_staleness"):
+        AsyncConfig(max_staleness=-2)
+    with pytest.raises(ValueError, match="unknown AsyncConfig keys"):
+        AsyncConfig.from_dict({"buffer_k": 2, "bogus": 1})
+    with pytest.raises(ValueError, match="async_mode must be"):
+        _cfg(systems=_sys(), async_mode=42)
+    # resolution helpers
+    a = AsyncConfig(buffer_k=3)
+    assert a.buffer_effective(10) == 3 and AsyncConfig().buffer_effective(10) == 10
+    assert a.concurrency_effective(4) == 6      # max(2·3, 4)
+    assert AsyncConfig().concurrency_effective(4) == 8
+    assert AsyncConfig().discount_off()
+    assert not AsyncConfig(staleness="polynomial").discount_off()
+    assert not AsyncConfig(staleness_kwargs={"factor": 0.5}).discount_off()
+
+
+def test_async_config_combination_validation():
+    ok = dict(systems=_sys(), async_mode={"buffer_k": 3})
+    _cfg(**ok)  # the base combination is accepted
+    with pytest.raises(ValueError, match="backend"):
+        _cfg(backend="scaleout", **ok)
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        _cfg(backend="compiled", fuse_rounds=2, **ok)
+    with pytest.raises(ValueError, match="fedavg"):
+        _cfg(aggregator="fednova", **ok)
+    with pytest.raises(ValueError, match="client_mode"):
+        _cfg(client_mode="fedprox", mu=0.1, **ok)
+    with pytest.raises(ValueError, match="compress_bits"):
+        _cfg(backend="compiled", compress_bits=8, **ok)
+    with pytest.raises(ValueError, match="systems"):
+        _cfg(async_mode={"buffer_k": 3})
+    with pytest.raises(ValueError, match="deadline"):
+        _cfg(systems=_sys(deadline_s=30.0), async_mode={"buffer_k": 3})
+    with pytest.raises(ValueError, match="concurrency"):
+        _cfg(systems=_sys(), async_mode={"buffer_k": 3, "concurrency": 2})
+    with pytest.raises(ValueError, match="population"):
+        _cfg(systems=_sys(), async_mode={"buffer_k": 50})
+    # the degenerate dispatch awaits the whole cohort: buffer_k must
+    # be None or the effective cohort size
+    with pytest.raises(ValueError, match="buffer_k must be None"):
+        _cfg(systems=_sys(), async_mode={"dispatch": "sync", "buffer_k": 2})
+    _cfg(systems=_sys(deadline_s=30.0), async_mode={"dispatch": "sync"})
+
+
+def test_async_config_round_trips_through_flconfig():
+    import json
+
+    cfg = _async_cfg(async_mode={
+        "buffer_k": 3, "concurrency": 8, "staleness": "polynomial",
+        "staleness_kwargs": {"a": 0.5}, "max_staleness": 4,
+    })
+    assert isinstance(cfg.async_mode, AsyncConfig)  # dict form normalized
+    d = json.loads(json.dumps(cfg.to_dict()))
+    assert isinstance(d["async_mode"], dict)        # JSON-safe nested form
+    restored = FLConfig.from_dict(d)
+    assert restored == cfg and isinstance(restored.async_mode, AsyncConfig)
+    # the sync default serializes as null and restores as None
+    assert _cfg().to_dict()["async_mode"] is None
+    assert FLConfig.from_dict(_cfg().to_dict()).async_mode is None
+
+
+# ------------------------------------------------------------- discounts
+def test_staleness_discounts_hand_computed():
+    assert {"constant", "polynomial", "exponential"} <= set(
+        list_staleness_discounts()
+    )
+    s = np.array([0, 1, 3, 8])
+    np.testing.assert_allclose(
+        make_staleness_discount("constant")(s), np.ones(4)
+    )
+    np.testing.assert_allclose(
+        make_staleness_discount("constant", factor=0.25)(s), np.full(4, 0.25)
+    )
+    # FedBuff's (1+s)^-a at a=0.5: 1, 1/sqrt(2), 1/2, 1/3
+    np.testing.assert_allclose(
+        make_staleness_discount("polynomial", a=0.5)(s),
+        [1.0, 2 ** -0.5, 0.5, 1.0 / 3.0],
+    )
+    np.testing.assert_allclose(
+        make_staleness_discount("exponential", gamma=0.5)(s),
+        [1.0, 0.5, 0.125, 0.5 ** 8],
+    )
+
+
+def test_staleness_discount_probe_rejects_bad_kwargs():
+    with pytest.raises(ValueError, match="non-negative"):
+        make_staleness_discount("constant", factor=-1.0)
+    with pytest.raises(ValueError, match="non-negative"):
+        AsyncConfig(staleness_kwargs={"factor": -1.0})
+    with pytest.raises(TypeError):
+        make_staleness_discount("polynomial", exponent=2.0)  # unknown kwarg
+    with pytest.raises(KeyError):
+        make_staleness_discount("nope")
+
+
+def test_staleness_weights_hand_computed():
+    d = make_staleness_discount("polynomial", a=1.0)  # d(s) = 1/(1+s)
+    sizes = np.array([100.0, 50.0, 60.0])
+    stal = np.array([0, 1, 2])
+    # u = sizes·d = [100, 25, 20] → normalized over 145
+    np.testing.assert_allclose(
+        staleness_weights(sizes, stal, d), [100 / 145, 25 / 145, 20 / 145]
+    )
+    # max_staleness=1 zeroes the s=2 entry and renormalizes over 125
+    np.testing.assert_allclose(
+        staleness_weights(sizes, stal, d, max_staleness=1),
+        [100 / 125, 25 / 125, 0.0],
+    )
+    # discount off → plain size weighting
+    np.testing.assert_allclose(
+        staleness_weights(sizes, stal, make_staleness_discount("constant")),
+        sizes / sizes.sum(),
+    )
+
+
+def test_staleness_weights_edge_cases():
+    d = make_staleness_discount("constant")
+    # everything past max_staleness: all-zero weights, no NaN
+    w = staleness_weights(np.array([10.0, 20.0]), np.array([5, 9]), d,
+                          max_staleness=3)
+    np.testing.assert_array_equal(w, np.zeros(2))
+    with pytest.raises(ValueError, match="share a shape"):
+        staleness_weights(np.ones(3), np.zeros(2, np.int64), d)
+    with pytest.raises(ValueError, match="share a shape"):
+        arrival_order(np.arange(3), np.ones(3, bool), np.zeros(2))
+
+
+# ----------------------------------------- degenerate ≡ sync equivalence
+@pytest.mark.parametrize("backend", ["host", "compiled"])
+def test_degenerate_async_bit_identical_to_sync(backend, data):
+    """The backbone contract: ``dispatch="sync"`` + discount off is the
+    lock-step engine — params, selections, history, comm, sim_clock all
+    bit-identical (the cross-task conformance cells ride on this)."""
+    train, test = data
+    kw = dict(backend=backend, rounds=4, eval_every=2,
+              systems=_sys(deadline_s=30.0, over_select=1.3))
+    sync = make_engine(_cfg(**kw), train, test, 10)
+    dgen = make_engine(_cfg(async_mode={"dispatch": "sync"}, **kw),
+                       train, test, 10)
+    rs, rd = list(sync.rounds()), list(dgen.rounds())
+    for a, b in zip(rs, rd):
+        assert a.selected == b.selected
+        assert a.comm_mb == b.comm_mb
+        assert a.sim_clock == b.sim_clock and a.sim_time == b.sim_time
+        assert a.n_dropped == b.n_dropped
+        # lock-step semantics: no staleness, version = round + 1
+        assert b.staleness == 0.0 and b.params_version == a.round + 1
+    assert sync.history == dgen.history
+    assert _max_err(sync.params, dgen.params) == 0.0
+
+
+# ------------------------------------------------------ buffer semantics
+def test_buffer_fires_at_exactly_buffer_k_arrivals(data):
+    """With the idle population never exhausted, every aggregation step
+    pops exactly ``buffer_k`` arrivals — never more, never fewer."""
+    train, test = data
+    cfg = _async_cfg(systems=_sys(availability="always"),
+                     async_mode={"buffer_k": 3, "concurrency": 8})
+    eng = make_engine(cfg, train, test, 10)
+    results = list(eng.rounds())
+    assert eng._buffer_k == 3
+    for r in results:
+        assert len(r.selected) + r.n_dropped == 3
+        assert r.n_dropped == 0  # no max_staleness → nothing dropped
+    # the in-flight target is respected between steps
+    assert eng._n_inflight() <= 8
+
+
+def test_max_staleness_drops_stale_arrivals_with_zero_weight(data):
+    """``max_staleness=0``: only updates trained against the *current*
+    params version aggregate; anything staler is dropped — and the
+    reported mean staleness over the kept set is exactly 0."""
+    train, test = data
+    cfg = _async_cfg(async_mode={"buffer_k": 2, "concurrency": 8,
+                                 "max_staleness": 0})
+    eng = make_engine(cfg, train, test, 10)
+    before = jax.device_get(eng.params)
+    results = list(eng.rounds())
+    assert sum(r.n_dropped for r in results) > 0   # the bound bites
+    assert any(r.selected for r in results)        # ... but not everything
+    for r in results:
+        assert r.staleness == 0.0                  # kept ⊆ {s ≤ 0}
+    assert _max_err(before, jax.device_get(eng.params)) > 0.0
+
+
+def test_staleness_observed_without_bound(data):
+    """Under a heterogeneous profile with no ``max_staleness``, slow
+    clients really do arrive stale — the discount has something to do."""
+    train, test = data
+    cfg = _async_cfg(async_mode={"buffer_k": 2, "concurrency": 8,
+                                 "staleness": "polynomial"})
+    eng = make_engine(cfg, train, test, 10)
+    results = list(eng.rounds())
+    assert max(r.staleness for r in results) > 0.0
+    assert all(r.n_dropped == 0 for r in results)
+
+
+# --------------------------------------------------- event clock / versions
+def test_event_clock_monotone_and_additive(data):
+    train, test = data
+    eng = make_engine(_async_cfg(), train, test, 10)
+    results = list(eng.rounds())
+    clock = 0.0
+    for r in results:
+        assert r.sim_time >= 0.0
+        assert r.sim_clock == pytest.approx(clock + r.sim_time)
+        assert r.sim_clock >= clock  # monotone, never rewinds
+        clock = r.sim_clock
+    assert clock > 0.0
+    # the async event clock lands on arrival instants, not deadline
+    # multiples — fractional by construction under a jittered profile
+    assert any(r.sim_clock % 1.0 != 0.0 for r in results)
+
+
+def test_params_version_counts_applied_aggregations(data):
+    train, test = data
+    eng = make_engine(_async_cfg(async_mode={
+        "buffer_k": 3, "concurrency": 8, "max_staleness": 1,
+    }), train, test, 10)
+    prev = 0
+    for r in eng.rounds():
+        bump = 1 if r.selected else 0  # empty/fully-stale steps don't bump
+        assert r.params_version == prev + bump
+        prev = r.params_version
+    assert prev >= 1 and eng._version == prev
+
+
+def test_inflight_clients_never_double_dispatched(data):
+    """Busy in-flight clients ride the -inf gate: at every step the
+    pending ledger holds each client at most once."""
+    train, test = data
+    eng = make_engine(_async_cfg(), train, test, 10)
+    for _ in eng.rounds():
+        pending = np.concatenate(
+            [g.sel[g.pending] for g in eng._ledger]
+        ) if eng._ledger else np.zeros(0, np.int64)
+        assert len(pending) == len(set(pending.tolist()))
+
+
+# ------------------------------------------------------------ determinism
+def test_same_seed_runs_bit_identical(data):
+    train, test = data
+    runs = []
+    for _ in range(2):
+        eng = make_engine(_async_cfg(), train, test, 10)
+        runs.append((list(eng.rounds()), jax.device_get(eng.params)))
+    (ra, pa), (rb, pb) = runs
+    assert [r.selected for r in ra] == [r.selected for r in rb]
+    assert [r.sim_clock for r in ra] == [r.sim_clock for r in rb]
+    assert [r.params_version for r in ra] == [r.params_version for r in rb]
+    assert _max_err(pa, pb) == 0.0
+
+
+def test_async_host_and_compiled_agree(data):
+    """The async loop drives the same backend hooks the conformance grid
+    certifies: identical dispatch decisions, allclose params."""
+    train, test = data
+    host = make_engine(_async_cfg(backend="host"), train, test, 10)
+    comp = make_engine(_async_cfg(backend="compiled"), train, test, 10)
+    rh, rc = list(host.rounds()), list(comp.rounds())
+    for a, b in zip(rh, rc):
+        assert a.selected == b.selected
+        assert a.params_version == b.params_version
+        assert a.sim_clock == pytest.approx(b.sim_clock)
+        assert a.comm_mb == pytest.approx(b.comm_mb)
+    assert _max_err(host.params, comp.params) < 1e-5
+
+
+# -------------------------------------------------------- kill-and-resume
+@pytest.mark.parametrize("backend", ["host", "compiled"])
+def test_async_kill_and_resume_mid_buffer_bit_identical(backend, data, tmp_path):
+    """Acceptance: kill mid-run with a non-empty in-flight ledger,
+    restore into a fresh engine, finish — selections, history, params,
+    sim_clock, and params version all bit-identical to the
+    uninterrupted run."""
+    train, test = data
+    cfg = _async_cfg(backend=backend, rounds=8, eval_every=2)
+
+    ref = make_engine(cfg, train, test, 10)
+    ref_results = list(ref.rounds())
+    ref_params = jax.device_get(ref.params)
+
+    killed = make_engine(cfg, train, test, 10)
+    it = killed.rounds()
+    pre = [next(it) for _ in range(4)]
+    it.close()  # the "kill": mid-run abandonment
+    assert killed._ledger and killed._n_inflight() > 0  # genuinely mid-buffer
+    path = str(tmp_path / "async.ckpt")
+    killed.save(path)
+
+    resumed = make_engine(cfg, train, test, 10)
+    resumed.restore(path)
+    assert resumed._round == 4
+    assert resumed._version == killed._version
+    assert resumed._n_inflight() == killed._n_inflight()
+    post = list(resumed.rounds())
+
+    full = pre + post
+    assert [r.round for r in full] == [r.round for r in ref_results]
+    assert [r.selected for r in full] == [r.selected for r in ref_results]
+    assert [r.sim_clock for r in full] == [r.sim_clock for r in ref_results]
+    assert [r.comm_mb for r in full] == [r.comm_mb for r in ref_results]
+    assert [r.params_version for r in full] == [
+        r.params_version for r in ref_results
+    ]
+    assert resumed.history.keys() == ref.history.keys()
+    for k in ref.history:
+        np.testing.assert_array_equal(
+            np.asarray(resumed.history[k]), np.asarray(ref.history[k])
+        )
+    assert _max_err(ref_params, jax.device_get(resumed.params)) == 0.0
+
+
+def test_async_restore_rejects_foreign_checkpoints(data, tmp_path):
+    """A sync checkpoint has no ledger meta — the async engine refuses
+    it loudly; and a plain engine can't restore an async checkpoint (the
+    state trees don't match)."""
+    train, test = data
+    sync_cfg = _cfg(systems=_sys())
+    async_cfg_ = _async_cfg()
+    sync_path = str(tmp_path / "sync.ckpt")
+    make_engine(sync_cfg, train, test, 10).save(sync_path)
+    with pytest.raises(ValueError, match="no async ledger"):
+        make_engine(async_cfg_, train, test, 10).restore(sync_path)
+
+    async_path = str(tmp_path / "async.ckpt")
+    eng = make_engine(async_cfg_, train, test, 10)
+    it = eng.rounds()
+    next(it)
+    it.close()
+    eng.save(async_path)
+    with pytest.raises(ValueError):
+        make_engine(sync_cfg, train, test, 10).restore(async_path)
+
+
+def test_async_compiled_requires_cohort_gather(data):
+    from repro.engine import AsyncCompiledEngine
+
+    train, test = data
+    with pytest.raises(ValueError, match="cohort_gather"):
+        AsyncCompiledEngine(_async_cfg(backend="compiled"), train, test, 10,
+                            cohort_gather=False)
+
+
+# ------------------------------------------------- fedcs (follow-up (n))
+def test_fedcs_ranks_by_predicted_round_time():
+    from repro.core.strategies import get_strategy
+
+    rng = np.random.default_rng(0)
+    hists = rng.dirichlet(np.ones(10), size=8)
+    lat = np.array([5.0, 1.0, 9.0, 2.0, 7.0, 3.0, 8.0, 4.0])
+    s = get_strategy("fedcs", m=3)
+    s.setup(hists, np.full(8, 50.0), seed=0, latency=lat)
+    losses = np.zeros(8, np.float32)
+    np.testing.assert_array_equal(s.select(0, losses, None), [1, 3, 5])
+    # offline (-inf-gated) clients fall behind every online one
+    gated = losses.copy()
+    gated[[1, 3]] = -np.inf
+    np.testing.assert_array_equal(s.select(0, gated, None), [0, 5, 7])
+    # without a latency signal, deterministic lowest-index-first
+    s2 = get_strategy("fedcs", m=3)
+    s2.setup(hists, np.full(8, 50.0), seed=0)
+    np.testing.assert_array_equal(s2.select(0, losses, None), [0, 1, 2])
+
+
+def test_fedcs_drives_the_async_runtime(data):
+    """The predicted-T_i strategy inside the async scheduler: it polls
+    no losses, dispatches the fastest idle clients, and its buffer
+    drains strictly faster than fedlecc's under the same profile."""
+    train, test = data
+    fast = make_engine(_async_cfg(strategy="fedcs"), train, test, 10)
+    slow = make_engine(_async_cfg(), train, test, 10)  # fedlecc
+    rf, rs = list(fast.rounds()), list(slow.rounds())
+    assert all(r.selected for r in rf)
+    assert rf[-1].sim_clock < rs[-1].sim_clock
+    assert rf[-1].comm_mb < rs[-1].comm_mb  # no loss polls on dispatch

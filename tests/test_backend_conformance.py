@@ -111,6 +111,48 @@ def test_compressed_aggregation_close_to_exact(task, data, lm_data):
         )
 
 
+# --------------------------------------- degenerate-async equivalence cells
+_ASYNC_SYS = dict(profile="mobile_mix", availability="markov",
+                  availability_kwargs={"p_drop": 0.2, "p_join": 0.6},
+                  deadline_s=30.0, over_select=1.3, jitter_sigma=0.1)
+
+
+@pytest.mark.parametrize("backend", ["host", "compiled"])
+@pytest.mark.parametrize("task", TASKS)
+def test_degenerate_async_conformance(task, backend, data, lm_data):
+    """Acceptance (DESIGN.md §13): the degenerate async configuration
+    (``dispatch="sync"``, ``buffer_k`` = the cohort, discount off) is
+    bit-identical to the plain sync engine on both tasks and both eager
+    backends — params, selections, history, comm, sim_clock."""
+    train, test = lm_data if task == "lm" else data
+    kw = dict(backend=backend, systems=dict(_ASYNC_SYS))
+    sync = make_engine(_task_cfg(task, **kw), train, test,
+                       n_classes=N_CLASSES[task])
+    dgen = make_engine(
+        _task_cfg(task, async_mode={"dispatch": "sync"}, **kw),
+        train, test, n_classes=N_CLASSES[task],
+    )
+    rs = list(sync.rounds(ROUNDS[task]))
+    rd = list(dgen.rounds(ROUNDS[task]))
+    for a, b in zip(rs, rd):
+        assert a.selected == b.selected, (
+            f"{task}/{backend}: degenerate async diverged from sync in "
+            f"round {a.round}: {a.selected} vs {b.selected}"
+        )
+        assert a.comm_mb == b.comm_mb
+        assert a.sim_clock == b.sim_clock and a.sim_time == b.sim_time
+        assert a.mean_selected_loss == b.mean_selected_loss or (
+            np.isnan(a.mean_selected_loss) and np.isnan(b.mean_selected_loss)
+        )
+        assert b.staleness == 0.0 and b.params_version == a.round + 1
+    assert sync.history == dgen.history
+    for x, y in zip(jax.tree.leaves(sync.params), jax.tree.leaves(dgen.params)):
+        np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y),
+            err_msg=f"{task}/{backend}: degenerate-async params diverged",
+        )
+
+
 # ------------------------------------------------- streaming API contract
 ROUND_RESULT_FIELDS = (
     "round", "selected", "mean_selected_loss", "comm_mb",
@@ -118,6 +160,9 @@ ROUND_RESULT_FIELDS = (
     # systems axis (PR 5): simulated wall clock + deadline drops; task
     # extras (LM perplexity).  Defaults keep systems-free runs identical.
     "sim_time", "sim_clock", "n_dropped", "metrics",
+    # async runtime (DESIGN.md §13): mean staleness of the aggregated
+    # buffer + the server params version.  Lock-step defaults: 0 / r+1.
+    "staleness", "params_version",
 )
 
 # every backend on the classification task + one LM cell (the LM grid

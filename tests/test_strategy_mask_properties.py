@@ -1,10 +1,17 @@
-"""Property tests for the jit-compatible strategy masks.
+"""Property tests for the jit-compatible strategy masks and the async
+server rule's pure cores.
 
 For random loss vectors, every strategy advertising
 ``supports_compiled_selection`` must produce a ``select_mask_jax`` mask
 with exactly ``n_selected`` true entries that agrees with its numpy
 ``select`` under the same inputs and rng state — the invariant the
 cross-backend conformance suite (and the mask-gated backends) rest on.
+
+The staleness-weight properties (DESIGN.md §13) pin the async
+aggregation rule for arbitrary buffers: weights are non-negative, sum
+to 1 over the surviving mass (all-zero when nothing survives), and are
+permutation-equivariant in the arrival order — so the aggregate update
+is invariant to how the buffer happened to be ordered.
 """
 
 import jax.numpy as jnp
@@ -71,6 +78,72 @@ def test_mask_agrees_with_numpy_select(name, case):
         s.select_mask_jax(jnp.asarray(losses), np.random.default_rng(seed + 1))
     )
     np.testing.assert_array_equal(np.where(mask)[0], sel)
+
+
+# ---------------------------------------- async staleness weights (§13)
+@st.composite
+def staleness_case(draw):
+    """(sizes, staleness, discount, max_staleness, perm) — an arbitrary
+    popped buffer plus a permutation of its arrival order."""
+    n = draw(st.integers(1, 12))
+    sizes = np.asarray(
+        draw(st.lists(st.floats(1.0, 500.0), min_size=n, max_size=n))
+    )
+    stal = np.asarray(
+        draw(st.lists(st.integers(0, 20), min_size=n, max_size=n)), np.int64
+    )
+    name, kwargs = draw(st.sampled_from([
+        ("constant", {}),
+        ("constant", {"factor": 0.5}),
+        ("polynomial", {"a": 0.5}),
+        ("polynomial", {"a": 2.0}),
+        ("exponential", {"gamma": 0.5}),
+    ]))
+    max_s = draw(st.one_of(st.none(), st.integers(0, 20)))
+    perm = np.random.default_rng(draw(st.integers(0, 2**31 - 1))).permutation(n)
+    return sizes, stal, name, kwargs, max_s, perm
+
+
+@given(case=staleness_case())
+@settings(max_examples=200, deadline=None)
+def test_staleness_weights_nonnegative_unit_sum(case):
+    from repro.engine.async_config import (
+        make_staleness_discount,
+        staleness_weights,
+    )
+
+    sizes, stal, name, kwargs, max_s, _perm = case
+    w = staleness_weights(sizes, stal, make_staleness_discount(name, **kwargs),
+                          max_s)
+    assert w.shape == sizes.shape and (w >= 0.0).all()
+    survivors = max_s is None or bool((stal <= max_s).any())
+    if survivors:
+        assert w.sum() == pytest.approx(1.0)
+        # the zero-weight drop is exact, not approximate
+        if max_s is not None:
+            assert (w[stal > max_s] == 0.0).all()
+    else:
+        np.testing.assert_array_equal(w, np.zeros_like(w))
+
+
+@given(case=staleness_case())
+@settings(max_examples=200, deadline=None)
+def test_staleness_weights_permutation_equivariant(case):
+    """Permuting the buffer's arrival order permutes the weights with
+    it — so the weighted aggregate is order-invariant."""
+    from repro.engine.async_config import (
+        make_staleness_discount,
+        staleness_weights,
+    )
+
+    sizes, stal, name, kwargs, max_s, perm = case
+    d = make_staleness_discount(name, **kwargs)
+    w = staleness_weights(sizes, stal, d, max_s)
+    w_perm = staleness_weights(sizes[perm], stal[perm], d, max_s)
+    np.testing.assert_allclose(w_perm, w[perm], rtol=1e-12, atol=0.0)
+    # ... hence the aggregate over any scalar client quantity agrees
+    x = sizes * 3.0 - stal
+    assert float(w_perm @ x[perm]) == pytest.approx(float(w @ x))
 
 
 def test_mask_strategies_need_rng_fail_loud():

@@ -155,6 +155,51 @@ def test_round_clock_and_deadline_outcome():
     assert sel[0] not in out2.survivors and out2.n_reached == len(sel) - 1
 
 
+def test_arrival_order_agrees_with_round_outcome_survivors():
+    """The async event queue vs the deadline policy (DESIGN.md §13):
+    with an infinite deadline, ``arrival_order``'s queue holds exactly
+    ``round_outcome``'s survivor set, ordered by (arrival time, index)."""
+    from repro.engine.async_config import arrival_order
+
+    rng = np.random.default_rng(0)
+    for _ in range(25):
+        K = 16
+        avail = rng.random(K) < 0.7
+        times = rng.uniform(1.0, 50.0, K)
+        sel = np.sort(rng.choice(K, size=6, replace=False))
+        out = round_outcome(sel, avail, times, None)
+        order = arrival_order(sel, avail[sel], times[sel])
+        np.testing.assert_array_equal(np.sort(order), out.survivors)
+        assert (np.diff(times[order]) >= 0).all()  # arrival-sorted
+
+
+def test_markov_trace_independent_of_async_event_clock(data):
+    """``SystemsRuntime.state_dict``'s contract, regression-pinned: the
+    markov availability chain is indexed by the integer aggregation-step
+    index, never by ``sim_clock`` — so after an async run has advanced
+    the event clock to non-integer arrival instants, a freshly built
+    runtime (sim_clock 0, masks queried out of order) re-derives the
+    bit-identical trace."""
+    train, test = data
+    cfg = _cfg(rounds=6, eval_every=2, systems=dict(
+        profile="mobile_mix", availability="markov",
+        availability_kwargs={"p_drop": 0.3, "p_join": 0.5},
+        jitter_sigma=0.1,
+    ), async_mode={"buffer_k": 3, "concurrency": 8})
+    eng = make_engine(cfg, train, test, 10)
+    results = list(eng.rounds())
+    assert any(r.sim_clock % 1.0 != 0.0 for r in results)  # event clock moved
+    assert eng._systems.state_dict() == {}                 # stateless contract
+    fresh = make_engine(cfg, train, test, 10)
+    for t in (5, 0, 3, 1, 4, 2):  # out-of-order vs the consumed runtime
+        np.testing.assert_array_equal(
+            fresh._systems.available(t), eng._systems.available(t)
+        )
+        np.testing.assert_array_equal(
+            fresh._systems.times(t), eng._systems.times(t)
+        )
+
+
 def test_deadline_drop_reweighting_sums_to_one_over_survivors():
     """The static-shape drop mechanism: survivors of the dispatched
     cohort keep their (renormalized) FedAvg weight, dropped clients are
@@ -394,7 +439,8 @@ def test_offline_clients_deprioritized_by_every_strategy():
     losses = rng.uniform(0.5, 3.0, K).astype(np.float32)
     gated = np.where(offline, -np.inf, losses).astype(np.float32)
     for name in ("fedlecc", "lossonly", "poc", "haccs", "random",
-                 "clusterrandom", "fedcls", "fedcor", "fedlecc_adaptive"):
+                 "clusterrandom", "fedcls", "fedcor", "fedlecc_adaptive",
+                 "fedcs"):
         s = get_strategy(name, m=m)
         s.setup(hists, sizes, seed=0)
         sel = s.select(0, gated, np.random.default_rng(1))
