@@ -1,0 +1,309 @@
+"""Accuracy and overhead under injected client faults (``repro.faults``,
+DESIGN.md §14).
+
+Sweeps fault rate × defense × selection strategy on the classification
+task with the ``sign_flip`` Byzantine model — norm-preserving, so the
+validation gate alone cannot catch it and the robust aggregators have
+to carry the recovery:
+
+- **rates** {0, 5%, 20%} of (round, client) pairs faulted;
+- **defenses** ``none`` (fedavg, no gate), ``validate`` (non-finite
+  screening + quantile norm clip, fedavg), and ``validate+trimmed_mean``
+  (the gate plus the coordinate-wise trimmed mean);
+- **strategies** fedlecc vs random.
+
+Each strategy also runs a ``faults=None`` baseline — the engine without
+the fault axis constructed at all.  Per cell the sweep records the final
+accuracy, its **recovery fraction** (final acc ÷ the same strategy's
+fault-free final acc), and the steady-state wall-clock per round
+(first round excluded, so one-off jit compilation does not pollute the
+overhead comparison).
+
+Writes ``BENCH_robustness.json`` (repo root; the CI ``perf-smoke`` job
+regenerates and uploads the ``--smoke`` config per commit).  Acceptance
+bars, evaluated in the summary block:
+
+- at 20% sign_flip, fedlecc with ``validate+trimmed_mean`` recovers
+  ≥ 90% of the fault-free final accuracy;
+- with defenses on at rate 0, steady-state wall-clock stays within 2%
+  of the ``faults=None`` engine.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+BENCH_JSON = os.path.join(ROOT, "BENCH_robustness.json")
+
+STRATEGIES = ("fedlecc", "random")
+STRATEGY_KWARGS = {"fedlecc": {"J": 3}}
+RATES = (0.0, 0.05, 0.2)
+FAULT_MODELS = ("sign_flip",)
+
+# defense label -> (FaultConfig.defense, aggregator, aggregator_kwargs)
+DEFENSES = {
+    "none": ("none", "fedavg", {}),
+    "validate": ("validate", "fedavg", {}),
+    "validate+trimmed_mean": ("validate", "trimmed_mean",
+                              {"trim_frac": 0.25}),
+}
+TIMING_REPEATS = 2  # overhead phase: chunk-paired trials per strategy
+TIMING_ROUNDS = 240  # timing horizon (non-smoke); ~120 pairs per trial
+
+
+def _cfg(strategy: str, *, smoke: bool, rounds: int, n_clients: int, m: int,
+         seed: int, faults: dict | None = None, aggregator: str = "fedavg",
+         aggregator_kwargs: dict | None = None):
+    from repro.engine import FLConfig
+
+    # Low label heterogeneity on purpose: coordinate-wise robust rules
+    # need the honest cohort deltas roughly aligned for a reflected
+    # (sign-flipped) row to land in the trim zone; under extreme
+    # non-IID skew the honest spread swallows the attack and the rules
+    # lose signal without gaining robustness (documented in DESIGN.md
+    # §14.2).  The fault axis composes with any target_hd — this sweep
+    # measures the defenses where they are meant to operate.
+    return FLConfig(
+        n_clients=n_clients, m=m, rounds=rounds, seed=seed,
+        strategy=strategy,
+        strategy_kwargs=dict(STRATEGY_KWARGS.get(strategy, {})),
+        hidden=(32,) if smoke else (256,),
+        local_epochs=1 if smoke else 5,
+        lr=0.005 if smoke else 0.05,
+        eval_samples=16 if smoke else 500,
+        eval_every=2 if smoke else 5,
+        target_hd=0.8 if smoke else 0.1,
+        aggregator=aggregator,
+        aggregator_kwargs=dict(aggregator_kwargs or {}),
+        faults=faults,
+    )
+
+
+def _run(cfg, data):
+    """Run one cell; walltime excludes the first round (jit warmup)."""
+    from repro.engine import make_engine
+
+    train, test = data
+    engine = make_engine(cfg, train, test, n_classes=10)
+    it = engine.rounds()
+    results = [next(it)]
+    t0 = time.perf_counter()
+    results.extend(it)
+    steady_s = (time.perf_counter() - t0) / max(len(results) - 1, 1)
+    return engine, results, steady_s
+
+
+def _overhead(mk_baseline, mk_defended, data, repeats: int,
+              chunk: int = 2) -> tuple[float, float, float]:
+    """Steady-state per-round overhead of the defended rate-0 engine over
+    ``faults=None``.  A 2% budget is far below the run-to-run drift of a
+    shared box, so whole-run timings (even interleaved) cannot resolve
+    it; instead both engines run live side by side, alternating
+    ``chunk``-round slices, and the overhead is the *median of per-chunk
+    time ratios* — thermal / scheduler drift hits temporally adjacent
+    chunks of both arms alike and cancels in the ratio.  The arm order
+    flips every chunk so within-pair drift (turbo decay, cache warmth)
+    does not systematically bias the second arm.  Returns
+    ``(baseline_s_per_round, defended_s_per_round, median_ratio)``."""
+    import numpy as np
+
+    from repro.engine import make_engine
+
+    train, test = data
+    ratios, base_ts, def_ts = [], [], []
+    for _ in range(max(repeats, 1)):
+        arms = []
+        for mk in (mk_baseline, mk_defended):
+            engine = make_engine(mk(), train, test, n_classes=10)
+            for _r in engine.rounds(1):  # jit warmup round
+                pass
+            arms.append(engine)
+        remaining = arms[0].cfg.rounds - 1
+        for c in range(remaining // chunk):
+            ts = [0.0, 0.0]
+            order = (0, 1) if c % 2 == 0 else (1, 0)
+            for arm in order:
+                t0 = time.perf_counter()
+                for _r in arms[arm].rounds(chunk):
+                    pass
+                ts[arm] = time.perf_counter() - t0
+            ratios.append(ts[1] / ts[0])
+            base_ts.append(ts[0] / chunk)
+            def_ts.append(ts[1] / chunk)
+    return (
+        float(np.median(base_ts)),
+        float(np.median(def_ts)),
+        float(np.median(ratios)),
+    )
+
+
+def main(args) -> dict:
+    from repro.data import make_classification
+
+    n = 1_200 if args.smoke else 20_000
+    data = (
+        make_classification(n, n_features=64, n_classes=10, seed=0),
+        make_classification(max(n // 5, 200), n_features=64, n_classes=10,
+                            seed=1),
+    )
+    run_kw = dict(smoke=args.smoke, rounds=args.rounds,
+                  n_clients=args.n_clients, m=args.m, seed=args.seed)
+
+    rows = []
+    baseline_acc: dict[str, float] = {}
+    baseline_s: dict[str, float] = {}
+    for strategy in args.strategies:
+        _, results, per_round_s = _run(_cfg(strategy, **run_kw), data)
+        evald = [r for r in results if r.test_acc is not None]
+        baseline_acc[strategy] = evald[-1].test_acc
+        baseline_s[strategy] = per_round_s
+        rows.append({
+            "strategy": strategy,
+            "scenario": "faults_none",
+            "rate": None,
+            "defense": None,
+            "aggregator": "fedavg",
+            "final_acc": round(evald[-1].test_acc, 4),
+            "best_acc": round(max(r.test_acc for r in evald), 4),
+            "recovery": 1.0,
+            "steady_s_per_round": round(per_round_s, 5),
+            "total_faulty": 0,
+            "max_quarantined": 0,
+        })
+        print(f"[robust] {strategy:<8s} faults=None              "
+              f"acc={rows[-1]['final_acc']:.3f} "
+              f"{per_round_s * 1e3:7.1f} ms/round", flush=True)
+
+        for rate in args.rates:
+            for label, (defense, aggregator, agg_kw) in DEFENSES.items():
+                faults = dict(rate=rate, models=list(FAULT_MODELS),
+                              defense=defense)
+                _, results, cell_s = _run(
+                    _cfg(strategy, faults=faults, aggregator=aggregator,
+                         aggregator_kwargs=agg_kw, **run_kw),
+                    data,
+                )
+                evald = [r for r in results if r.test_acc is not None]
+                acc = evald[-1].test_acc
+                rows.append({
+                    "strategy": strategy,
+                    "scenario": f"rate{rate:g}_{label}",
+                    "rate": rate,
+                    "defense": label,
+                    "aggregator": aggregator,
+                    "final_acc": round(acc, 4),
+                    "best_acc": round(max(r.test_acc for r in evald), 4),
+                    "recovery": round(acc / baseline_acc[strategy], 4),
+                    "steady_s_per_round": round(cell_s, 5),
+                    "total_faulty": sum(r.n_faulty for r in results),
+                    "max_quarantined": max(r.n_quarantined for r in results),
+                })
+                print(f"[robust] {strategy:<8s} rate={rate:<4g} "
+                      f"{label:<22s} acc={rows[-1]['final_acc']:.3f} "
+                      f"rec={rows[-1]['recovery']:.3f} "
+                      f"faulty={rows[-1]['total_faulty']}", flush=True)
+
+    def _cell(strategy, rate, defense):
+        for row in rows:
+            if (row["strategy"] == strategy and row["rate"] == rate
+                    and row["defense"] == defense):
+                return row
+        return None
+
+    summary = []
+    timing_kw = dict(run_kw)
+    if not args.smoke:
+        timing_kw["rounds"] = max(args.rounds, TIMING_ROUNDS)
+    for strategy in args.strategies:
+        attacked = _cell(strategy, 0.2, "none")
+        defended = _cell(strategy, 0.2, "validate+trimmed_mean")
+        base_s, defended_s, ratio = _overhead(
+            lambda s=strategy: _cfg(s, **timing_kw),
+            lambda s=strategy: _cfg(
+                s, faults={"rate": 0.0, "models": list(FAULT_MODELS),
+                           "defense": "validate"},
+                **timing_kw,
+            ),
+            data, TIMING_REPEATS,
+        )
+        overhead = ratio - 1.0
+        summary.append({
+            "strategy": strategy,
+            "baseline_acc": round(baseline_acc[strategy], 4),
+            "attacked_recovery": attacked["recovery"],
+            "defended_recovery": defended["recovery"],
+            "baseline_s_per_round": round(base_s, 5),
+            "rate0_defended_s_per_round": round(defended_s, 5),
+            "rate0_defended_overhead": round(overhead, 4),
+        })
+        print(f"[robust] {strategy:<8s} 20% sign_flip: undefended "
+              f"rec={attacked['recovery']:.3f} -> defended "
+              f"rec={defended['recovery']:.3f}; rate-0 overhead "
+              f"{overhead * 100:+.1f}%", flush=True)
+
+    # ISSUE acceptance bars are stated for fedlecc on the classification
+    # task; other strategies' rows are informational.  (The optimistic
+    # aggregation overlaps the gate's host sync with the aggregation
+    # dispatch, leaving fedlecc at ~1.5%; leaner strategies with less
+    # per-round host work to hide the gate behind (random) still show
+    # ~3% — DESIGN.md §14.2.)
+    accept = next((s for s in summary if s["strategy"] == "fedlecc"),
+                  summary[0])
+    acceptance = {
+        "strategy": accept["strategy"],
+        "recovery_bar_ge_0.9": accept["defended_recovery"] >= 0.9,
+        "overhead_bar_le_0.02": accept["rate0_defended_overhead"] <= 0.02,
+    }
+    print(f"[robust] acceptance ({acceptance['strategy']}): "
+          f"recovery>=0.9 {acceptance['recovery_bar_ge_0.9']}, "
+          f"overhead<=2% {acceptance['overhead_bar_le_0.02']}", flush=True)
+
+    import jax
+
+    payload = {
+        "benchmark": "bench_robustness",
+        "smoke": args.smoke,
+        "jax": jax.__version__,
+        "device": str(jax.devices()[0].platform),
+        "fault_models": list(FAULT_MODELS),
+        "rates": list(args.rates),
+        "defenses": list(DEFENSES),
+        "results": rows,
+        "summary": summary,
+        "acceptance": acceptance,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {args.out}")
+    return payload
+
+
+def _parse_args(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--strategies", nargs="+", default=list(STRATEGIES),
+                   choices=STRATEGIES)
+    p.add_argument("--rates", nargs="+", type=float, default=list(RATES))
+    p.add_argument("--rounds", type=int, default=None)
+    p.add_argument("--n-clients", type=int, default=40)
+    p.add_argument("--m", type=int, default=20)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny CI config: 12 clients, small model/data — "
+                        "trajectory tracking, not absolute numbers")
+    p.add_argument("--out", default=BENCH_JSON)
+    args = p.parse_args(argv)
+    if args.smoke:
+        args.n_clients, args.m = 12, 4
+        args.rounds = args.rounds or 8
+    else:
+        args.rounds = args.rounds or 60
+    return args
+
+
+if __name__ == "__main__":
+    main(_parse_args())

@@ -9,17 +9,29 @@ offline) plus save policies and the metrics-tracker seam.
   streamed ``RoundResult`` durably.
 """
 
-from repro.checkpoint.serializer import save_checkpoint, load_checkpoint, load_meta
-from repro.checkpoint.policy import CheckpointPolicy, Checkpointer, latest_checkpoint
+from repro.checkpoint.serializer import (
+    CheckpointError,
+    load_checkpoint,
+    load_meta,
+    save_checkpoint,
+)
+from repro.checkpoint.policy import (
+    CheckpointPolicy,
+    Checkpointer,
+    checkpoint_paths,
+    latest_checkpoint,
+)
 from repro.checkpoint.tracker import JsonlTracker, MetricsTracker, read_jsonl
 
 __all__ = [
     "save_checkpoint",
     "load_checkpoint",
     "load_meta",
+    "CheckpointError",
     "CheckpointPolicy",
     "Checkpointer",
     "latest_checkpoint",
+    "checkpoint_paths",
     "MetricsTracker",
     "JsonlTracker",
     "read_jsonl",

@@ -27,7 +27,12 @@ import time
 from dataclasses import dataclass
 from typing import Callable
 
-__all__ = ["CheckpointPolicy", "Checkpointer", "latest_checkpoint"]
+__all__ = [
+    "CheckpointPolicy",
+    "Checkpointer",
+    "latest_checkpoint",
+    "checkpoint_paths",
+]
 
 _CKPT_RE = re.compile(r"^round_(\d{8})\.ckpt$")
 
@@ -45,6 +50,18 @@ def latest_checkpoint(directory: str) -> str | None:
         return None
     hits = sorted(e for e in entries if _CKPT_RE.match(e))
     return os.path.join(directory, hits[-1]) if hits else None
+
+
+def checkpoint_paths(directory: str) -> list[str]:
+    """All checkpoint paths in ``directory``, newest first — the resume
+    fallback order: ``make_engine(resume=dir)`` walks this list when the
+    newest file turns out truncated or corrupt."""
+    try:
+        entries = os.listdir(directory)
+    except FileNotFoundError:
+        return []
+    hits = sorted((e for e in entries if _CKPT_RE.match(e)), reverse=True)
+    return [os.path.join(directory, e) for e in hits]
 
 
 @dataclass(frozen=True)

@@ -40,10 +40,25 @@ import jax
 import msgpack
 import numpy as np
 
-__all__ = ["save_checkpoint", "load_checkpoint", "load_meta", "FORMAT_VERSION"]
+__all__ = [
+    "save_checkpoint",
+    "load_checkpoint",
+    "load_meta",
+    "CheckpointError",
+    "FORMAT_VERSION",
+]
 
 FORMAT_VERSION = 2
 _MAGIC = b"REPROCKPT\x02"
+
+
+class CheckpointError(ValueError):
+    """The checkpoint *file* is unusable — foreign, truncated, or
+    corrupt (bad magic, unparseable envelope, wrong format version,
+    payload-length mismatch).  Distinct from the plain ``ValueError``\\ s
+    raised for structural mismatches against the caller's ``like`` /
+    config, so resume logic can fall back to an older file on
+    corruption without masking a wrong-experiment mistake."""
 
 
 def _fsync_dir(path: str) -> None:
@@ -90,20 +105,20 @@ def _read_payload(path: str) -> dict:
     with open(path, "rb") as f:
         raw = f.read()
     if not raw.startswith(_MAGIC):
-        raise ValueError(
+        raise CheckpointError(
             f"{path!r} is not a repro checkpoint (bad magic header; "
             f"expected it to start with {_MAGIC!r})"
         )
     try:
         payload = msgpack.unpackb(raw[len(_MAGIC):], raw=False)
     except Exception as e:
-        raise ValueError(
+        raise CheckpointError(
             f"checkpoint {path!r} is truncated or corrupt "
             f"(msgpack envelope failed to unpack: {e})"
         ) from None
     if not isinstance(payload, dict) or payload.get("version") != FORMAT_VERSION:
         got = payload.get("version") if isinstance(payload, dict) else None
-        raise ValueError(
+        raise CheckpointError(
             f"unsupported checkpoint version {got!r} in {path!r} "
             f"(this reader supports version {FORMAT_VERSION})"
         )
@@ -156,7 +171,7 @@ def load_checkpoint(path: str, like: Any) -> tuple[Any, dict]:
             )
         n_expected = dtype.itemsize * int(np.prod(shape, dtype=np.int64))
         if len(item["data"]) != n_expected:
-            raise ValueError(
+            raise CheckpointError(
                 f"payload length mismatch at leaf {i}: got "
                 f"{len(item['data'])} bytes, expected {n_expected} "
                 f"({dtype} × {shape}) — the checkpoint is corrupt"

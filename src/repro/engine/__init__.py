@@ -65,6 +65,15 @@ staleness-discounted weights while further cohorts stay in flight
 (``AsyncConfig(dispatch="sync")`` is the degenerate lock-step form,
 bit-identical to the plain engines).
 
+The fault axis (``FLConfig.faults``, ``repro.faults``, DESIGN.md §14)
+injects per-client faults (NaN updates, exploding/sign-flipped/label-
+flipped deltas, stale replays, truncated uploads) on a dedicated child
+rng stream and defends with a server-side validation gate, robust
+aggregators (``trimmed_mean`` / ``coordinate_median``), and the
+``ClientHealth`` quarantine ledger — on the host/compiled paths
+(eager, fused, and async); ``faults=None`` is bit-identical to an
+engine without the subsystem.
+
 The systems axis (``FLConfig.systems``, ``repro.systems``, DESIGN.md
 §10) is orthogonal to all of the above: a ``SystemsConfig`` adds device
 profiles, an availability trace, simulated wall-clock per round
@@ -148,6 +157,7 @@ __all__ = [
     "register_preset",
     "make_engine",
     "SystemsConfig",
+    "FaultConfig",
     "AsyncConfig",
     "AsyncHostEngine",
     "AsyncCompiledEngine",
@@ -170,6 +180,7 @@ _LAZY = {
     "ScaleoutEngine": ("repro.engine.scaleout", "ScaleoutEngine"),
     "make_scaleout_round": ("repro.engine.scaleout", "make_scaleout_round"),
     "SystemsConfig": ("repro.systems.config", "SystemsConfig"),
+    "FaultConfig": ("repro.faults.config", "FaultConfig"),
     "AsyncConfig": ("repro.engine.async_config", "AsyncConfig"),
     "AsyncHostEngine": ("repro.engine.async_engine", "AsyncHostEngine"),
     "AsyncCompiledEngine": ("repro.engine.async_engine", "AsyncCompiledEngine"),
@@ -260,15 +271,39 @@ def make_engine(cfg: FLConfig, train, test, n_classes: int, *,
 
         path = resume
         if os.path.isdir(path):
-            from repro.checkpoint import latest_checkpoint
+            # Walk the directory newest-first: a truncated / corrupt
+            # latest file (detected loudly as CheckpointError by the
+            # serializer) falls back to the previous valid checkpoint
+            # with a warning instead of aborting the resume.  Config /
+            # structure mismatches stay fatal — falling back would
+            # silently change the experiment.
+            import warnings
 
-            found = latest_checkpoint(path)
-            if found is None:
+            from repro.checkpoint import CheckpointError, checkpoint_paths
+
+            candidates = checkpoint_paths(path)
+            if not candidates:
                 raise FileNotFoundError(
                     f"resume directory {path!r} holds no round_*.ckpt files"
                 )
-            path = found
-        engine.restore(path)
+            for i, cand in enumerate(candidates):
+                try:
+                    engine.restore(cand)
+                    break
+                except CheckpointError as e:
+                    if i == len(candidates) - 1:
+                        raise CheckpointError(
+                            f"no valid checkpoint in {path!r} — every "
+                            f"round_*.ckpt file is corrupt (last error: {e})"
+                        ) from e
+                    warnings.warn(
+                        f"skipping corrupt checkpoint {cand!r} "
+                        f"({e}); falling back to "
+                        f"{candidates[i + 1]!r}",
+                        stacklevel=2,
+                    )
+        else:
+            engine.restore(path)
     return engine
 
 

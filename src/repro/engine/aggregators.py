@@ -28,10 +28,12 @@ import jax.numpy as jnp
 
 from repro.engine.registry import AGGREGATOR_REGISTRY, register_aggregator
 from repro.federated.aggregation import (
+    coordinate_median,
     fedavg,
     feddyn_server,
     feddyn_update_h,
     fednova,
+    trimmed_mean,
 )
 
 __all__ = [
@@ -39,18 +41,34 @@ __all__ = [
     "FedAvgAggregator",
     "FedNovaAggregator",
     "FedDynAggregator",
+    "TrimmedMeanAggregator",
+    "CoordinateMedianAggregator",
     "get_aggregator",
 ]
 
 
 class Aggregator:
-    """Base aggregator: stateless, must implement ``aggregate``."""
+    """Base aggregator: stateless, must implement ``aggregate``.
+
+    ``kwarg_names`` declares which ``FLConfig.aggregator_kwargs`` keys a
+    rule understands; unknown keys fail at construction (``FLConfig``
+    builds the aggregator eagerly), not mid-experiment.
+    """
 
     name = "base"
     needs_state = False
+    kwarg_names: tuple = ()
 
     def __init__(self, cfg):
         self.cfg = cfg
+        kw = dict(getattr(cfg, "aggregator_kwargs", None) or {})
+        unknown = set(kw) - set(self.kwarg_names)
+        if unknown:
+            raise ValueError(
+                f"aggregator {self.name!r} accepts kwargs "
+                f"{list(self.kwarg_names)}; unknown: {sorted(unknown)}"
+            )
+        self.kwargs = kw
 
     def init_state(self, global_params: Any) -> Any:
         return None
@@ -124,6 +142,42 @@ class FedDynAggregator(Aggregator):
             state, mean_params, global_params, self.cfg.mu,
             n_selected / self.cfg.n_clients,
         )
+
+
+@register_aggregator("trimmed_mean")
+class TrimmedMeanAggregator(Aggregator):
+    """Robust coordinate-wise β-trimmed mean (DESIGN.md §14.2) —
+    tolerates up to a ``trim_frac`` fraction of Byzantine participants
+    per coordinate.  Host/compiled only (the fused and scale-out paths
+    require ``fedavg``)."""
+
+    name = "trimmed_mean"
+    kwarg_names = ("trim_frac",)
+
+    def __init__(self, cfg):
+        super().__init__(cfg)
+        self.trim_frac = float(self.kwargs.get("trim_frac", 0.2))
+        if not 0.0 <= self.trim_frac < 0.5:
+            raise ValueError(
+                f"trim_frac must be in [0, 0.5), got {self.trim_frac}"
+            )
+
+    def aggregate(self, stacked, global_params, weights, taus, state,
+                  n_selected: int):
+        return trimmed_mean(stacked, weights, self.trim_frac)
+
+
+@register_aggregator("coordinate_median")
+class CoordinateMedianAggregator(Aggregator):
+    """Robust coordinate-wise median (DESIGN.md §14.2) — the strongest
+    per-coordinate breakdown point, at the cost of ignoring client
+    weights.  Host/compiled only."""
+
+    name = "coordinate_median"
+
+    def aggregate(self, stacked, global_params, weights, taus, state,
+                  n_selected: int):
+        return coordinate_median(stacked, weights)
 
 
 def get_aggregator(name: str, cfg) -> Aggregator:

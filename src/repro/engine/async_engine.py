@@ -85,6 +85,15 @@ class _InflightGroup:
     losses: np.ndarray     # (g,) float32 local training losses
     stacked: Any           # trained client params, leading axis g
     fetched: Any           # the params pytree the cohort trained against
+    # fault axis (DESIGN.md §14; arrays only when FLConfig.faults is
+    # set): the injected fault per slot (−1 honest) and its parameter —
+    # checkpointed with the ledger so a resumed run replays identically.
+    fault_kind: np.ndarray | None = None  # (g,) int64
+    fault_u: np.ndarray | None = None     # (g,) float32
+    # per-slot (norm, finite) of stacked − fetched, computed lazily for
+    # the validation gate; a cache, never checkpointed (deterministic
+    # recompute from stacked/fetched)
+    norms: Any = None
 
 
 class AsyncRounds:
@@ -144,15 +153,18 @@ class AsyncRounds:
         the dispatchable population (online ∧ idle) runs dry.  Each
         dispatch consumes one 3-way split of the round carry."""
         while self._n_inflight() + self.m_eff <= self._concurrency:
-            gate = (
-                np.asarray(self._systems.available(rnd), bool)
-                & ~self._inflight_mask()
-            )
+            # admission (systems availability ∧ fault-ledger health — a
+            # quarantined client is simply not re-dispatched until its
+            # backoff expires, which *is* the bounded async retry) plus
+            # the async-only idle gate: nobody is dispatched twice
+            idle = ~self._inflight_mask()
+            gate = self._selection_gate(rnd)
+            gate = idle if gate is None else gate & idle
             if not gate.any():
                 break
             key, k_poll, k_train = jax.random.split(key, 3)
             losses = self.poll_losses(rnd, k_poll)
-            losses = np.where(gate, losses, -np.inf).astype(np.float32)
+            losses = self._gated_losses(rnd, losses, extra_gate=idle)
             sel = np.asarray(self.select(rnd, losses))
             # strategies return m_eff indices even when supply is short;
             # busy/offline clients cannot be dispatched twice
@@ -160,6 +172,16 @@ class AsyncRounds:
             if sel.size == 0:
                 break
             payload, sel_losses = self.local_train(rnd, sel, k_train)
+            stacked = self._dispatch_stack(payload)
+            fault_kind = fault_u = None
+            if self._faults is not None:
+                # faults are upload properties: corrupt at dispatch so
+                # the poisoned stack rides the ledger — and therefore the
+                # checkpoint — making a killed run resumed mid-buffer
+                # replay bit-identically
+                stacked, fault_kind, fault_u = self._faults.inject_eager(
+                    rnd, sel, np.ones(sel.size, bool), stacked, self.params
+                )
             times = np.asarray(self._systems.times(rnd), np.float64)[sel]
             self._ledger.append(_InflightGroup(
                 sel=np.asarray(sel, np.int64),
@@ -169,8 +191,10 @@ class AsyncRounds:
                 arrival_t=np.asarray(self.sim_clock + times, np.float64),
                 pending=np.ones(sel.size, bool),
                 losses=np.asarray(sel_losses, np.float32),
-                stacked=self._dispatch_stack(payload),
+                stacked=stacked,
                 fetched=self.params,
+                fault_kind=fault_kind,
+                fault_u=fault_u,
             ))
             # downloads + the loss poll are paid at dispatch; uploads
             # are paid when the arrivals are popped
@@ -181,9 +205,9 @@ class AsyncRounds:
                 break  # partial cohort: the idle population is exhausted
         return key
 
-    def _pop_buffer(self) -> list[tuple[float, int, int, int]]:
-        """The first ``buffer_k`` pending arrivals as ``(arrival_t,
-        client, group_idx, slot)``, in deterministic event order."""
+    def _pending_entries(self) -> list[tuple[float, int, int, int]]:
+        """Every pending arrival as ``(arrival_t, client, group_idx,
+        slot)``, in deterministic event order."""
         entries = []
         for gi, g in enumerate(self._ledger):
             for si in np.flatnonzero(g.pending):
@@ -191,9 +215,84 @@ class AsyncRounds:
                     (float(g.arrival_t[si]), int(g.sel[si]), gi, int(si))
                 )
         entries.sort()
-        return entries[: self._buffer_k]
+        return entries
 
-    def _aggregate_buffer(self, take) -> tuple[np.ndarray, float, int, float]:
+    def _pop_buffer(self) -> list[tuple[float, int, int, int]]:
+        """The first ``buffer_k`` pending arrivals in event order."""
+        return self._pending_entries()[: self._buffer_k]
+
+    def _group_norms(self, gi: int):
+        g = self._ledger[gi]
+        if g.norms is None:
+            g.norms = self._faults.entry_norms(g.stacked, g.fetched)
+        return g.norms
+
+    def _pop_buffer_validated(self, rnd: int):
+        """Fault-axis pop: examine pending arrivals in event order,
+        ``buffer_k`` at a time, screening each batch jointly through the
+        robust-quantile norm gate.  A flagged arrival is *consumed* —
+        pending cleared, upload bytes paid, ledger-recorded — but never
+        fills a buffer slot: the next arrival takes its place, so a
+        faulty client costs the server wait time, not model mass.  The
+        flagged client's health strike starts its quarantine; expiry
+        re-admits it at ``_fill_inflight``'s gate (exponential-backoff
+        re-dispatch).
+
+        Returns ``(take, scales, consumed, n_faulty, uploaded)`` —
+        ``take`` the clean entries (≤ buffer_k) with their clip
+        ``scales``, ``consumed`` everything examined (the event clock
+        advances over all of it), ``uploaded`` Σ upload fractions."""
+        fr = self._faults
+        entries = self._pending_entries()
+        take: list[tuple[float, int, int, int]] = []
+        scales: list[float] = []
+        consumed: list[tuple[float, int, int, int]] = []
+        flagged_clients: list[int] = []
+        pos = 0
+        while len(take) < self._buffer_k and pos < len(entries):
+            batch = entries[pos: pos + (self._buffer_k - len(take))]
+            pos += len(batch)
+            consumed.extend(batch)
+            if fr.defended:
+                norms = np.array(
+                    [self._group_norms(gi)[0][si] for (_t, _c, gi, si) in batch]
+                )
+                finite = np.array(
+                    [self._group_norms(gi)[1][si] for (_t, _c, gi, si) in batch]
+                )
+                flagged, sc, _thr = fr.screen_entry_norms(
+                    norms, finite, np.ones(len(batch), bool)
+                )
+            else:
+                flagged = np.zeros(len(batch), bool)
+                sc = np.ones(len(batch))
+            for e, f, s in zip(batch, flagged, sc):
+                if f:
+                    flagged_clients.append(e[1])
+                    self._ledger[e[2]].pending[e[3]] = False
+                else:
+                    take.append(e)
+                    scales.append(float(s))
+        # ground-truth fault count + upload fractions over the consumed
+        # entries (the injected kinds ride the ledger)
+        kind = np.array(
+            [int(self._ledger[gi].fault_kind[si]) for (_t, _c, gi, si) in consumed],
+            np.int64,
+        )
+        u = np.array(
+            [float(self._ledger[gi].fault_u[si]) for (_t, _c, gi, si) in consumed],
+            np.float32,
+        )
+        uploaded = float(fr.upload_fractions(kind, u).sum())
+        self.comm_mb += self.comm.round_mb(0, False, m_uploaded=uploaded)
+        fr.health.record(
+            rnd,
+            np.array([c for (_t, c, _gi, _si) in consumed], np.int64),
+            np.array(flagged_clients, np.int64),
+        )
+        return take, scales, consumed, int((kind >= 0).sum()), uploaded
+
+    def _aggregate_buffer(self, take, scales=None) -> tuple[np.ndarray, float, int, float]:
         """Apply the staleness-weighted delta rule over the popped
         arrivals.  Returns ``(aggregated_clients, mean_loss, n_dropped,
         mean_staleness)``; bumps ``_version`` iff an update applied."""
@@ -207,9 +306,16 @@ class AsyncRounds:
             self.sizes[clients], stal, self._discount,
             self.async_cfg.max_staleness,
         )
+        if scales is not None:
+            # the validation gate's norm clip: scaling the delta by s is
+            # exactly scaling its weight by s under the delta rule
+            w = w * np.asarray(scales, w.dtype)
         kept = w > 0.0
-        # stale uploads still arrived — the ledger pays them either way
-        self.comm_mb += self.comm.round_mb(0, False, m_uploaded=len(take))
+        if self._faults is None:
+            # stale uploads still arrived — the ledger pays them either
+            # way (with faults active, _pop_buffer_validated already paid
+            # every consumed arrival at its upload fraction)
+            self.comm_mb += self.comm.round_mb(0, False, m_uploaded=len(take))
         if kept.any():
             delta = None
             # batch the kept entries per group so the tree math runs
@@ -268,23 +374,37 @@ class AsyncRounds:
         start = self._round
         for rnd in range(start, start + n_rounds):
             key = self._fill_inflight(rnd, key)
-            take = self._pop_buffer()
-            if take:
-                # the event clock jumps to the last popped arrival
-                # (monotone: remaining pending arrivals are never
-                # earlier than a previously popped buffer's tail)
-                t_agg = max(self.sim_clock, take[-1][0])
-                sim_time = t_agg - self.sim_clock
-                self.sim_clock = t_agg
-                surv, mean_loss, n_dropped, mean_stal = (
-                    self._aggregate_buffer(take)
+            n_faulty = 0
+            if self._faults is not None:
+                take, scales, consumed, n_faulty, _up = (
+                    self._pop_buffer_validated(rnd)
                 )
             else:
-                # nobody in flight and nobody dispatchable: the model
-                # (and the clock) stand still this step
+                take = self._pop_buffer()
+                scales, consumed = None, take
+            if consumed:
+                # the event clock jumps to the last consumed arrival
+                # (monotone: remaining pending arrivals are never
+                # earlier than a previously popped buffer's tail) — a
+                # flagged arrival costs the server its wait time even
+                # though it never fills a buffer slot
+                t_agg = max(self.sim_clock, consumed[-1][0])
+                sim_time = t_agg - self.sim_clock
+                self.sim_clock = t_agg
+            else:
+                sim_time = 0.0
+            if take:
+                surv, mean_loss, n_dropped, mean_stal = (
+                    self._aggregate_buffer(take, scales)
+                )
+            else:
+                # nobody aggregatable this step: the model stands still
+                # (every consumed arrival was flagged, or nobody is in
+                # flight and nobody dispatchable)
                 surv = np.zeros(0, np.int64)
-                sim_time, mean_loss = 0.0, float("nan")
+                mean_loss = float("nan")
                 n_dropped, mean_stal = 0, 0.0
+                self._ledger = [g for g in self._ledger if g.pending.any()]
 
             test_loss = test_acc = metrics = None
             if rnd % cfg.eval_every == 0 or rnd == cfg.rounds - 1:
@@ -306,6 +426,11 @@ class AsyncRounds:
                 metrics=metrics,
                 staleness=float(mean_stal),
                 params_version=int(self._version),
+                n_faulty=int(n_faulty),
+                n_quarantined=(
+                    self._faults.health.n_quarantined(rnd)
+                    if self._faults is not None else 0
+                ),
             )
             self._emit(result, callback)
             yield result
@@ -330,6 +455,16 @@ class AsyncRounds:
                 "losses": np.asarray(g.losses, np.float32),
                 "stacked": g.stacked,
                 "fetched": g.fetched,
+                # injected-fault slots ride the ledger checkpoint (the
+                # stacks are already poisoned — DESIGN.md §14.3) so a
+                # resumed pop screens and accounts identically
+                **(
+                    {
+                        "fault_kind": np.asarray(g.fault_kind, np.int64),
+                        "fault_u": np.asarray(g.fault_u, np.float32),
+                    }
+                    if self._faults is not None else {}
+                ),
             }
             for g in self._ledger
         ]
@@ -372,6 +507,12 @@ class AsyncRounds:
             fetched=jax.tree.map(
                 lambda p: np.zeros_like(np.asarray(p)), self.params
             ),
+            fault_kind=(
+                np.zeros(n, np.int64) if self._faults is not None else None
+            ),
+            fault_u=(
+                np.zeros(n, np.float32) if self._faults is not None else None
+            ),
         )
 
     def restore(self, path: str) -> dict:
@@ -399,6 +540,9 @@ class AsyncRounds:
             g.losses = np.asarray(arrs["losses"], np.float32)
             g.stacked = jax.tree.map(jnp.asarray, arrs["stacked"])
             g.fetched = jax.tree.map(jnp.asarray, arrs["fetched"])
+            if self._faults is not None:
+                g.fault_kind = np.asarray(arrs["fault_kind"], np.int64)
+                g.fault_u = np.asarray(arrs["fault_u"], np.float32)
 
 
 class AsyncHostEngine(AsyncRounds, HostEngine):

@@ -117,6 +117,10 @@ class RoundResult:
       aggregation.  The lock-step engines bump once per round
       (``round + 1``); the async runtime's version lags the step index
       whenever a step's buffer was empty or fully stale.
+    - ``n_faulty``/``n_quarantined`` — fault axis (``FLConfig.faults``,
+      DESIGN.md §14): updates that arrived carrying an injected fault
+      this round, and clients serving a quarantine after it.  Inert
+      zeros when no fault config is active.
     """
 
     round: int
@@ -131,6 +135,8 @@ class RoundResult:
     metrics: dict | None = None
     staleness: float = 0.0
     params_version: int = 0
+    n_faulty: int = 0
+    n_quarantined: int = 0
 
     @property
     def evaluated(self) -> bool:
@@ -274,6 +280,20 @@ class Engine:
         )
         self.comm_mb = self.comm.one_time_mb(self.strategy.needs_histograms)
 
+        # --- fault axis (DESIGN.md §14): injection on a dedicated child
+        # rng stream, the server-side validation gate, and the
+        # ClientHealth quarantine ledger.  None = bit-identical engine.
+        self._faults: Any = None
+        if cfg.faults is not None:
+            from repro.faults.runtime import FaultRuntime
+
+            self._faults = FaultRuntime(
+                cfg.faults,
+                n_clients=cfg.n_clients,
+                seed=cfg.seed,
+                params_template=self.params,
+            )
+
         self._build_shared_jits()
         self._round = 0
         # the rounds() PRNG carry, persisted across calls
@@ -345,6 +365,32 @@ class Engine:
             )
         return np.zeros(self.cfg.n_clients, np.float32)
 
+    def _selection_gate(self, rnd: int) -> np.ndarray | None:
+        """(K,) bool admission gate for round ``rnd`` — systems
+        availability ∧ fault-ledger health; ``None`` when ungated."""
+        gate: np.ndarray | None = None
+        if self._systems is not None:
+            gate = np.asarray(self._systems.available(rnd), bool)
+        if self._faults is not None:
+            admit = self._faults.health.admitted(rnd)
+            gate = admit if gate is None else gate & admit
+        return gate
+
+    def _gated_losses(self, rnd: int, losses: np.ndarray,
+                      extra_gate: np.ndarray | None = None) -> np.ndarray:
+        """Apply the admission gate to the polled losses as ``-inf`` —
+        the single place every selection path (lock-step, async
+        dispatch, fused chunk driver) excludes offline or quarantined
+        clients before the strategy sees the loss vector (DESIGN.md
+        §10/§14).  ``extra_gate`` is a caller-side AND (the async
+        engine's not-already-in-flight mask)."""
+        gate = self._selection_gate(rnd)
+        if extra_gate is not None:
+            gate = extra_gate if gate is None else gate & extra_gate
+        if gate is None:
+            return losses
+        return np.where(gate, losses, -np.inf).astype(np.float32)
+
     def select(self, rnd: int, losses: np.ndarray) -> np.ndarray:
         """Sorted indices of this round's participants."""
         raise NotImplementedError
@@ -369,6 +415,49 @@ class Engine:
         arrived (the frictionless call shape, unchanged from before the
         systems axis)."""
         raise NotImplementedError
+
+    # -- fault seam (backend contract; called only when ``cfg.faults``
+    # is active, so backends without faults support never implement it) -
+    def _payload_stack(self, payload):
+        """The stacked trained-params pytree inside a ``local_train``
+        payload (leading axis = rows), handed to fault injection and the
+        validation gate."""
+        raise NotImplementedError
+
+    def _payload_replace(self, payload, stacked):
+        """The same payload with its stacked params swapped for the
+        (injected / clipped) replacement."""
+        raise NotImplementedError
+
+    def _payload_clients(self, sel: np.ndarray) -> np.ndarray:
+        """Client id per row of the payload stack.  Row i of the default
+        eager payload was trained by ``sel[i]``; the compiled all-K path
+        overrides this with the identity."""
+        return np.asarray(sel, np.int64)
+
+    def _aggregate_state(self) -> tuple:
+        """References to everything ``aggregate`` rebinds, for the
+        optimistic-aggregation undo.  Every backend's ``aggregate``
+        updates state *functionally* (new pytrees / new floats bound to
+        ``self``), so holding the old references is a complete, free
+        snapshot — covering ``params``, ``agg_state``, the host tier's
+        per-client state, and the compiled compress path's
+        ``last_quant_error``."""
+        return (
+            self.params,
+            self.agg_state,
+            getattr(self, "h_clients", None),
+            getattr(self, "last_quant_error", None),
+        )
+
+    def _restore_aggregate_state(self, saved: tuple) -> None:
+        params, agg_state, h_clients, qerr = saved
+        self.params = params
+        self.agg_state = agg_state
+        if h_clients is not None:
+            self.h_clients = h_clients
+        if qerr is not None:
+            self.last_quant_error = qerr
 
     def evaluate(self) -> tuple[float, float]:
         tl, ta = self._evaluate(self.params, self.test_x, self.test_y)
@@ -404,13 +493,18 @@ class Engine:
         checkpoint pytree (structure doubles as the restore ``like``):
         params, aggregator server state (FedDyn ``h``), per-client state
         (FedDyn ``h_i``), the jax PRNG carry, and any strategy state."""
-        return {
+        state = {
             "params": self.params,
             "agg_state": self.agg_state,
             "h_clients": self.h_clients,
             "prng_key": self._carry_key(),
             "strategy": self.strategy.state_dict(),
         }
+        if self._faults is not None and self._faults.has_stale:
+            # stale_replay's per-client replay cache is array-valued
+            # round carry — it rides the pytree, not the meta
+            state["fault_stale"] = self._faults.stale_state()
+        return state
 
     def _config_fingerprint(self) -> dict:
         from repro.checkpoint.tracker import _to_builtin
@@ -446,7 +540,11 @@ class Engine:
         """Execution-mode hook: extra scalar-valued meta merged into the
         checkpoint (the async runtime records its ledger structure here
         so ``restore`` can rebuild the ``like`` skeleton before the
-        arrays load).  Base engines have none."""
+        arrays load).  The base contribution is the fault-axis
+        ``ClientHealth`` ledger, so kill-and-resume mid-quarantine is
+        bit-identical (DESIGN.md §14.3)."""
+        if self._faults is not None:
+            return {"faults": self._faults.meta_state()}
         return {}
 
     def restore(self, path: str) -> dict:
@@ -502,6 +600,10 @@ class Engine:
         self.history = {k: list(v) for k, v in meta["history"].items()}
         if self._systems is not None:
             self._systems.load_state_dict(meta.get("systems", {}))
+        if self._faults is not None:
+            self._faults.load_meta_state(meta["faults"])
+            if self._faults.has_stale:
+                self._faults.load_stale_state(state["fault_stale"])
 
     # -- per-round emission (history / trackers / checkpoints) ----------
     def _record_history(self, r: RoundResult) -> None:
@@ -524,6 +626,9 @@ class Engine:
         if self._systems is not None:
             self.history.setdefault("sim_clock", []).append(r.sim_clock)
             self.history.setdefault("n_dropped", []).append(r.n_dropped)
+        if self._faults is not None:
+            self.history.setdefault("n_faulty", []).append(r.n_faulty)
+            self.history.setdefault("n_quarantined", []).append(r.n_quarantined)
         for k, v in (r.metrics or {}).items():
             self.history.setdefault(k, []).append(v)
 
@@ -571,12 +676,9 @@ class Engine:
             key, k_poll, k_train = jax.random.split(key, 3)
 
             losses = self.poll_losses(rnd, k_poll)
-            # systems availability gate (DESIGN.md §10): offline clients
-            # enter every selection path as -inf before select is called
-            if self._systems is not None:
-                losses = np.where(
-                    self._systems.available(rnd), losses, -np.inf
-                ).astype(np.float32)
+            # admission gate (DESIGN.md §10/§14): offline or quarantined
+            # clients enter every selection path as -inf before select
+            losses = self._gated_losses(rnd, losses)
             sel = np.asarray(self.select(rnd, losses))
 
             # deadline / availability outcome of the dispatched cohort:
@@ -585,28 +687,73 @@ class Engine:
             if self._systems is not None:
                 outcome = self._systems.outcome(rnd, sel)
                 surv = outcome.survivors
+                n_reached = outcome.n_reached
+                sim_time, n_dropped = outcome.sim_time, outcome.n_dropped
                 payload, sel_losses = self.local_train(
                     rnd, sel, k_train, survivors=surv
                 )
+            else:
+                surv = sel
+                n_reached = len(sel)
+                sim_time, n_dropped = 0.0, 0
+                payload, sel_losses = self.local_train(rnd, sel, k_train)
+
+            n_faulty = n_quarantined = 0
+            uploaded: float = float(len(surv))
+            if self._faults is not None:
+                # quarantined clients picked anyway (loss-blind
+                # strategies) are dropped like stragglers, before their
+                # update can reach the aggregation
+                admit = self._faults.health.admitted(rnd)
+                surv = np.asarray(surv, np.int64)
+                surv = surv[admit[surv]]
+                clients = self._payload_clients(sel)
+                arrived = np.isin(clients, surv)
+                stacked = self._payload_stack(payload)
+                injected, pending = self._faults.process_begin(
+                    rnd, clients, arrived, stacked, self.params
+                )
+                if injected is not stacked:
+                    payload = self._payload_replace(payload, injected)
+                # Optimistic aggregation (DESIGN.md §14.2): dispatch the
+                # aggregation assuming the gate flags nobody — true on
+                # every honest round — so it overlaps the gate's flagged
+                # read-back instead of serializing behind it.  On the
+                # rare flagged round, drop the optimistic result (all
+                # aggregate paths rebind state functionally, so the
+                # saved refs are the untouched pre-round state) and redo
+                # with the true survivors — the exact same call either
+                # way, so both orders are bit-identical.
+                optimistic = clients[arrived]
+                saved = self._aggregate_state()
+                self.aggregate(rnd, sel, payload, survivors=optimistic)
+                finfo = self._faults.process_finish(pending)
+                surv = finfo.survivors
+                if len(surv) != len(optimistic):
+                    self._restore_aggregate_state(saved)
+                    self.aggregate(rnd, sel, payload, survivors=surv)
+                n_faulty, n_quarantined = finfo.n_faulty, finfo.n_quarantined
+                uploaded = finfo.uploaded
+            elif self._systems is not None:
                 self.aggregate(rnd, sel, payload, survivors=surv)
+            else:
+                self.aggregate(rnd, sel, payload)
+
+            if self._systems is not None or self._faults is not None:
                 # the server observes survivor losses only
                 keep = np.isin(sel, surv)
                 mean_loss = _mean_loss(np.asarray(sel_losses)[keep])
                 self.comm_mb += self.comm.round_mb(
-                    outcome.n_reached, self.strategy.needs_losses,
-                    m_uploaded=len(surv),
+                    n_reached, self.strategy.needs_losses,
+                    m_uploaded=uploaded,
                 )
-                self.sim_clock += outcome.sim_time
-                sim_time, n_dropped = outcome.sim_time, outcome.n_dropped
             else:
-                surv = sel
-                payload, sel_losses = self.local_train(rnd, sel, k_train)
-                self.aggregate(rnd, sel, payload)
                 mean_loss = _mean_loss(sel_losses)
                 self.comm_mb += self.comm.round_mb(
                     len(sel), self.strategy.needs_losses
                 )
-                sim_time, n_dropped = 0.0, 0
+            if self._systems is not None:
+                self.sim_clock += sim_time
 
             test_loss = test_acc = metrics = None
             # absolute cadence keyed to the *configured* terminal round,
@@ -631,6 +778,8 @@ class Engine:
                 n_dropped=int(n_dropped),
                 metrics=metrics,
                 params_version=rnd + 1,
+                n_faulty=int(n_faulty),
+                n_quarantined=int(n_quarantined),
             )
             self._emit(result, callback)
             yield result

@@ -152,6 +152,19 @@ class CompiledEngine(MaskSelectionMixin, Engine):
         )
         return stacked, np.asarray(losses)[sel]
 
+    # -- fault seam (DESIGN.md §14): the payload *is* the stack ---------
+    def _payload_stack(self, payload):
+        return payload
+
+    def _payload_replace(self, payload, stacked):
+        return stacked
+
+    def _payload_clients(self, sel: np.ndarray) -> np.ndarray:
+        if self.cohort_gather:
+            return np.asarray(sel, np.int64)
+        # legacy all-K path: row i of the payload is client i
+        return np.arange(self.cfg.n_clients, dtype=np.int64)
+
     def aggregate(self, rnd: int, sel: np.ndarray, payload,
                   survivors: np.ndarray | None = None) -> None:
         stacked = payload

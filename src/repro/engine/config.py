@@ -128,6 +128,23 @@ def compress_backend_error(backend: str, aggregator: str) -> str:
     )
 
 
+def faults_backend_error(backend: str) -> str:
+    return (
+        "FLConfig.faults injects and screens client updates through the "
+        "host/compiled round paths (eager, fused, and async); "
+        f"backend={backend!r} has no fault seam — use backend='host' or "
+        "'compiled', or set faults=None"
+    )
+
+
+def stale_fused_error() -> str:
+    return (
+        "fault model 'stale_replay' replays from a host-side cross-round "
+        "cache, which the fused scan chunk cannot consult; set "
+        "fuse_rounds=0 or drop 'stale_replay' from FaultConfig.models"
+    )
+
+
 @dataclass
 class FLConfig:
     n_clients: int = 100
@@ -139,6 +156,8 @@ class FLConfig:
     strategy: str = "fedlecc"
     strategy_kwargs: dict = field(default_factory=dict)
     aggregator: str = "fedavg"     # any registered aggregator
+    aggregator_kwargs: dict = field(default_factory=dict)  # rule params
+                                   # (e.g. trimmed_mean trim_frac)
     client_mode: str = "plain"     # any registered client mode
     mu: float = 0.0                # fedprox mu / feddyn alpha
     partition: str = "shards"      # shards | dirichlet (see partition.py:
@@ -159,6 +178,7 @@ class FLConfig:
     compress_bits: int = 0         # >0: quantized cohort-delta aggregation
     systems: Any = None  # SystemsConfig | dict | None (repro.systems)
     async_mode: Any = None  # AsyncConfig | dict | None (DESIGN.md §13)
+    faults: Any = None  # FaultConfig | dict | None (DESIGN.md §14)
 
     # ------------------------------------------------------------------
     def __post_init__(self) -> None:
@@ -185,6 +205,8 @@ class FLConfig:
             raise ValueError("strategy_kwargs must be a dict")
         if not isinstance(self.task_kwargs, dict):
             raise ValueError("task_kwargs must be a dict")
+        if not isinstance(self.aggregator_kwargs, dict):
+            raise ValueError("aggregator_kwargs must be a dict")
         # Component names resolve against the registries (lazy provider
         # import — this is the single lookup path for all four axes).
         from repro.engine.registry import (
@@ -216,6 +238,12 @@ class FLConfig:
             raise ValueError(
                 f"invalid task_kwargs for task {self.task!r}: {e}"
             ) from None
+        # aggregator_kwargs validate eagerly too: building the aggregator
+        # is cheap (no state is materialized) and surfaces unknown /
+        # out-of-range rule kwargs here rather than at engine build.
+        from repro.engine.aggregators import get_aggregator
+
+        get_aggregator(self.aggregator, self)
         # Mask-gated backends need a jit-compatible selection: reject the
         # combination at construction (previously this surfaced only when
         # the engine was built) with the list of strategies that qualify.
@@ -289,6 +317,24 @@ class FLConfig:
                     f"None; got {type(self.async_mode).__name__}"
                 )
             validate_async_combination(self)
+        # Fault axis (DESIGN.md §14): normalize the dict form to a
+        # validated FaultConfig, then cross-check against the execution
+        # mode — every fault seam lives on the host/compiled paths, and
+        # stale_replay's replay cache is host-tier.
+        if self.faults is not None:
+            from repro.faults.config import FaultConfig
+
+            if isinstance(self.faults, dict):
+                self.faults = FaultConfig.from_dict(self.faults)
+            elif not isinstance(self.faults, FaultConfig):
+                raise ValueError(
+                    f"faults must be a FaultConfig, its dict form, or "
+                    f"None; got {type(self.faults).__name__}"
+                )
+            if self.backend not in ("host", "compiled"):
+                raise ValueError(faults_backend_error(self.backend))
+            if self.fuse_rounds > 0 and "stale_replay" in self.faults.models:
+                raise ValueError(stale_fused_error())
 
     # ------------------------------------------------------------------
     def to_dict(self) -> dict:

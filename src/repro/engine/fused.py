@@ -98,6 +98,9 @@ class FusedEngine(CompiledEngine):
         poll = self._poll_losses
         cohort_train = self._cohort_train_raw
         systems = self._systems is not None
+        faults = self._faults is not None
+        fruntime = self._faults
+        defended = faults and fruntime.defended
         compress = cfg.compress_bits
         if compress:
             from functools import partial
@@ -115,12 +118,20 @@ class FusedEngine(CompiledEngine):
                 losses = poll(params, xs, ys, dmask, k_poll)
             else:
                 losses = jnp.zeros((K,), jnp.float32)
+            # the availability / deadline traces (DESIGN.md §10) and the
+            # fault-axis admission + injection decisions (§14) are all
+            # exogenous host-precomputed scan inputs; the -inf gate below
+            # is the same one the eager loop applies (_gated_losses)
+            gate = None
             if systems:
-                # the availability / deadline traces are exogenous
-                # host-precomputed scan inputs (DESIGN.md §10): the -inf
-                # gate below is the same one the eager loop applies
-                avail, arrived = inputs
-                losses = jnp.where(avail, losses, -jnp.inf)
+                gate = inputs["avail"]
+            if faults:
+                gate = (
+                    inputs["admit"] if gate is None
+                    else gate & inputs["admit"]
+                )
+            if gate is not None:
+                losses = jnp.where(gate, losses, -jnp.inf)
             # selection randomness rides a stream the eager path never
             # consumes (fold tag K ≥ any client index), so deterministic
             # strategies stay bit-compatible with the eager loop
@@ -129,24 +140,54 @@ class FusedEngine(CompiledEngine):
             )
             # survivors: offline-at-dispatch and past-deadline clients
             # keep their static cohort slot but aggregate at weight zero
-            final = mask & avail & arrived if systems else mask
+            final = mask
+            if systems:
+                final = final & inputs["avail"] & inputs["arrived"]
+            if faults:
+                final = final & inputs["admit"]
+            arrivals = final  # pre-flag: the updates reaching the server
             idx = cohort_indices(mask, m)
-            w = jnp.take(selection_weights(final, sizes), idx)
             stacked, sel_losses = cohort_train(params, idx, k_train)
+            if faults:
+                # faults are upload properties: only rows whose upload
+                # reaches the server are injected (a zero-weight NaN row
+                # would still poison the mask-gated sum)
+                arrived_rows = jnp.take(arrivals, idx)
+                kind_rows = jnp.where(
+                    arrived_rows, jnp.take(inputs["fkind"], idx), -1
+                )
+                u_rows = jnp.take(inputs["fu"], idx)
+                stacked = fruntime.apply_traced(
+                    stacked, params, kind_rows, u_rows
+                )
+                if defended:
+                    stacked, flagged_rows, _ = fruntime.validate_traced(
+                        stacked, params, arrived_rows
+                    )
+                    # quarantine takes effect at weight exactly zero
+                    flag_full = (
+                        jnp.zeros((K,), bool).at[idx].max(flagged_rows)
+                    )
+                    final = final & ~flag_full
+            w = jnp.take(selection_weights(final, sizes), idx)
             if compress:
                 new_params, _ = compressed(
                     stacked, params, w, self._quant_key(k_train, K)
                 )
             else:
                 new_params = fedavg(stacked, w)
-            if systems:
-                # nobody uploaded → the global model stands still (the
-                # all-zero weight vector would otherwise zero the params)
+            if systems or faults:
+                # nobody uploaded (or everyone was flagged) → the global
+                # model stands still (the all-zero weight vector would
+                # otherwise zero the params)
                 any_up = final.any()
                 new_params = jax.tree.map(
                     lambda n, o: jnp.where(any_up, n, o), new_params, params
                 )
-            return (new_params, key), (mask, final, sel_losses)
+            outs = (mask, final, sel_losses)
+            if faults:
+                outs = outs + (arrivals,)
+            return (new_params, key), outs
 
         self._round_body = _round_body
 
@@ -160,10 +201,10 @@ class FusedEngine(CompiledEngine):
         fn = self._chunk_cache.get(length)
         if fn is None:
             body = self._round_body
-            if self._systems is not None:
-                def run(params, key, avail, arrived):
+            if self._systems is not None or self._faults is not None:
+                def run(params, key, inputs):
                     (params, key), out = jax.lax.scan(
-                        body, (params, key), (avail, arrived), length=length
+                        body, (params, key), inputs, length=length
                     )
                     return params, key, *out
             else:
@@ -219,21 +260,46 @@ class FusedEngine(CompiledEngine):
         while rnd < end:
             length = self._chunk_len(rnd, end)
             step = self._chunk_step(length)
+            fkind = fu = None
+            inputs: dict[str, np.ndarray] = {}
             if self._systems is not None:
                 # exogenous availability / deadline-arrival traces for
                 # the chunk (host-deterministic per round, so the fused
                 # run sees exactly what the eager backends see)
-                avail = np.stack(
+                inputs["avail"] = np.stack(
                     [self._systems.available(rnd + i) for i in range(length)]
                 )
-                arrived = np.stack(
+                inputs["arrived"] = np.stack(
                     [self._systems.arrived(rnd + i) for i in range(length)]
                 )
-                params, key, masks, finals, sel_losses = step(
-                    self.params, key, jnp.asarray(avail), jnp.asarray(arrived)
+            if self._faults is not None:
+                # per-round fault decisions are host-deterministic too;
+                # the admission gate is evaluated against the health
+                # ledger at *chunk start* — a fault flagged mid-chunk
+                # starts its quarantine at the next chunk boundary
+                # (eager runs quarantine one round earlier; DESIGN.md
+                # §14 documents the chunk-granular lag)
+                inputs["admit"] = np.stack(
+                    [self._faults.health.admitted(rnd + i) for i in range(length)]
+                )
+                decisions = [self._faults.decide(rnd + i) for i in range(length)]
+                fkind = np.stack([k for k, _ in decisions])
+                fu = np.stack([u for _, u in decisions])
+                inputs["fkind"] = fkind
+                inputs["fu"] = fu
+            if inputs:
+                outs = step(
+                    self.params, key,
+                    {k: jnp.asarray(v) for k, v in inputs.items()},
                 )
             else:
-                params, key, masks, finals, sel_losses = step(self.params, key)
+                outs = step(self.params, key)
+            if self._faults is not None:
+                params, key, masks, finals, sel_losses, arrivals = outs
+                arrivals = np.asarray(arrivals)
+            else:
+                params, key, masks, finals, sel_losses = outs
+                arrivals = None
             # commit the chunk before yielding anything from it
             self.params, self._key = params, key
             self._round = rnd + length
@@ -245,16 +311,44 @@ class FusedEngine(CompiledEngine):
                 r = rnd + i
                 sel = np.where(masks[i])[0]
                 surv = np.where(finals[i])[0]
+                n_faulty = n_quarantined = 0
+                uploaded: float | None = None
+                if self._faults is not None:
+                    # per-round ledger replay off the scanned outputs:
+                    # arrivals feed the health record, the host-side
+                    # decisions give ground-truth fault counts + the
+                    # partial-upload byte fractions
+                    arr = np.where(arrivals[i])[0]
+                    flagged = np.where(arrivals[i] & ~finals[i])[0]
+                    self._faults.health.record(r, arr, flagged)
+                    kind_r = np.where(arrivals[i], fkind[i], -1)
+                    n_faulty = int((kind_r >= 0).sum())
+                    n_quarantined = self._faults.health.n_quarantined(r)
+                    uploaded = float(
+                        self._faults.upload_fractions(
+                            kind_r[arr], fu[i][arr]
+                        ).sum()
+                    )
                 if self._systems is not None:
                     # same accounting core as the eager loop's outcome()
                     out = self._systems.outcome_from_mask(r, masks[i])
                     self.comm_mb += self.comm.round_mb(
                         out.n_reached, self.strategy.needs_losses,
-                        m_uploaded=len(surv),
+                        m_uploaded=(
+                            len(surv) if uploaded is None else uploaded
+                        ),
                     )
                     self.sim_clock += out.sim_time
                     sim_time, n_dropped = out.sim_time, out.n_dropped
                     keep = finals[i][sel]  # survivor slots in cohort order
+                    mean_loss = _mean_loss(sel_losses[i][keep])
+                elif self._faults is not None:
+                    self.comm_mb += self.comm.round_mb(
+                        len(sel), self.strategy.needs_losses,
+                        m_uploaded=uploaded,
+                    )
+                    sim_time, n_dropped = 0.0, 0
+                    keep = finals[i][sel]
                     mean_loss = _mean_loss(sel_losses[i][keep])
                 else:
                     self.comm_mb += self.comm.round_mb(
@@ -283,6 +377,8 @@ class FusedEngine(CompiledEngine):
                     n_dropped=int(n_dropped),
                     metrics=metrics,
                     params_version=r + 1,
+                    n_faulty=int(n_faulty),
+                    n_quarantined=int(n_quarantined),
                 ))
             rnd += length
             for i, result in enumerate(results):

@@ -70,6 +70,13 @@ class HostEngine(Engine):
         )
         return (stacked, h_sel), np.asarray(local_losses)
 
+    # -- fault seam (DESIGN.md §14): payload rows are the cohort stack --
+    def _payload_stack(self, payload):
+        return payload[0]
+
+    def _payload_replace(self, payload, stacked):
+        return (stacked, payload[1])
+
     def aggregate(self, rnd: int, sel: np.ndarray, payload,
                   survivors: np.ndarray | None = None) -> None:
         stacked, h_sel = payload

@@ -1,0 +1,46 @@
+"""``repro.faults`` — fault injection, update validation, and client
+health for the federated engine (DESIGN.md §14).
+
+Three layers, configured by ``FLConfig.faults = FaultConfig(...)``
+(``None`` default keeps the engine bit-identical):
+
+- **Injection** (``models``) — a ``@register_fault`` registry of
+  per-client fault models, deterministic per (seed, round, client) on
+  the dedicated ``FAULT_STREAM`` child rng, composable with
+  ``repro.systems`` availability.
+- **Defense** (``defense``) — a pure-``jnp`` server-side validation
+  gate (non-finite screening + quantile norm clipping) plus the robust
+  aggregators registered in ``repro.engine.aggregators``.
+- **Feedback** (``health``) — the ``ClientHealth`` quarantine/backoff
+  ledger fed into selection as a ``-inf`` gate and carried through the
+  checkpoint seams.
+"""
+
+from repro.faults.config import FaultConfig
+from repro.faults.defense import screen_norms, update_norms, validate_updates
+from repro.faults.health import ClientHealth
+from repro.faults.models import (
+    FAULT_REGISTRY,
+    FAULT_STREAM,
+    FaultModel,
+    build_fault,
+    list_faults,
+    register_fault,
+)
+from repro.faults.runtime import FaultInfo, FaultRuntime
+
+__all__ = [
+    "FaultConfig",
+    "FaultRuntime",
+    "FaultInfo",
+    "FaultModel",
+    "ClientHealth",
+    "FAULT_REGISTRY",
+    "FAULT_STREAM",
+    "register_fault",
+    "build_fault",
+    "list_faults",
+    "validate_updates",
+    "update_norms",
+    "screen_norms",
+]

@@ -1,0 +1,107 @@
+"""Server-side update validation gate (DESIGN.md §14.2).
+
+Two-stage screening of arrived client updates, purely in ``jnp`` so the
+identical code runs eagerly, under ``jit`` (host/compiled rounds), and
+inside the fused ``lax.scan`` body without host syncs:
+
+1. **Non-finite screening** — any NaN/Inf leaf entry flags the row.
+2. **Norm gating at a robust quantile** — with ``thr`` the
+   ``clip_quantile`` of the finite valid cohort delta norms, rows with
+   ``norm > norm_tolerance · thr`` are flagged (quarantine candidates),
+   and rows in the band ``(thr, tol·thr]`` are norm-clipped back to
+   ``thr``.
+
+Invariants the tests pin down:
+
+- Rows with ``norm <= thr`` pass through **bit-exactly** (the clip is a
+  ``jnp.where(scale >= 1, original, ...)``), so with
+  ``clip_quantile=1.0`` the defended path is bit-identical to the
+  undefended one on an honest cohort.
+- When *no* valid finite row exists the quantile is NaN and every valid
+  row is flagged — the caller's all-quarantined round then leaves the
+  params unchanged (graceful degradation, mirroring the all-dropped
+  systems invariant).
+- Flagged rows are never clipped (their aggregation weight is exactly
+  zero anyway), and non-finite rows are *neutralized* — replaced by the
+  fetched params — because a zero weight does not protect a mask-gated
+  sum from ``0 · NaN = NaN``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["update_norms", "validate_updates", "screen_norms"]
+
+
+def update_norms(stacked, fetched):
+    """Per-row global L2 delta norm and all-finite flag.
+
+    Returns ``(norm, finite)`` — ``norm`` is ``inf`` on non-finite rows
+    so downstream comparisons never propagate NaN.
+    """
+    leaves = jax.tree.leaves(stacked)
+    got = jax.tree.leaves(fetched)
+    n = leaves[0].shape[0]
+    sq = jnp.zeros((n,), jnp.float32)
+    finite = jnp.ones((n,), bool)
+    for s, f in zip(leaves, got):
+        flat = s.astype(jnp.float32).reshape(n, -1)
+        finite = finite & jnp.all(jnp.isfinite(flat), axis=1)
+        d = flat - f.astype(jnp.float32).reshape(-1)[None]
+        sq = sq + jnp.sum(jnp.square(d), axis=1)
+    norm = jnp.sqrt(sq)
+    return jnp.where(finite, norm, jnp.inf), finite
+
+
+def validate_updates(stacked, fetched, valid, *, q: float, tol: float):
+    """The full traced gate: screen + clip one stacked cohort.
+
+    ``valid`` marks rows that actually arrived (systems survivors /
+    admitted clients); invalid rows are ignored by the quantile and
+    never flagged or clipped.
+
+    Returns ``(clipped_stack, flagged, norm)``.
+    """
+    norm, finite = update_norms(stacked, fetched)
+    masked = jnp.where(valid & finite, norm, jnp.float32(jnp.nan))
+    thr = jnp.nanquantile(masked, q)
+    # NaN thr (no valid finite row) makes `norm <= tol*thr` False for
+    # every row -> all valid rows flagged, none clipped.
+    flagged = valid & (~finite | ~(norm <= tol * thr))
+    scale = jnp.where(norm > thr, thr / jnp.maximum(norm, 1e-30), jnp.float32(1.0))
+    scale = jnp.where(flagged | ~valid, jnp.float32(1.0), scale)
+
+    neutral = ~finite  # 0-weight gating cannot survive 0·NaN — replace
+
+    def one(s, f):
+        sc = scale.reshape((-1,) + (1,) * (s.ndim - 1))
+        nt = neutral.reshape((-1,) + (1,) * (s.ndim - 1))
+        f32, g32 = s.astype(jnp.float32), f[None].astype(jnp.float32)
+        clipped = (g32 + (f32 - g32) * sc).astype(s.dtype)
+        out = jnp.where(sc >= 1.0, s, clipped)
+        return jnp.where(nt, jnp.broadcast_to(f[None], s.shape).astype(s.dtype), out)
+
+    return jax.tree.map(one, stacked, fetched), flagged, norm
+
+
+def screen_norms(norms, finite, valid, *, q: float, tol: float):
+    """Host-side (numpy) twin of the norm gate for the async buffer,
+    where candidate sets are small and data-dependent so a traced form
+    would retrace per shape.  Same thresholds and flagging rule as
+    ``validate_updates``; returns ``(flagged, scales, thr)`` with
+    ``scales`` the per-row clip factor (1.0 where untouched)."""
+    norms = np.asarray(norms, np.float64)
+    finite = np.asarray(finite, bool)
+    valid = np.asarray(valid, bool)
+    ok = valid & finite
+    thr = float(np.quantile(norms[ok], q)) if ok.any() else float("nan")
+    if not np.isfinite(thr):
+        return valid.copy(), np.ones_like(norms), thr
+    flagged = valid & (~finite | ~(norms <= tol * thr))
+    with np.errstate(divide="ignore", invalid="ignore"):
+        scales = np.where(norms > thr, thr / norms, 1.0)
+    scales = np.where(valid & ~flagged, scales, 1.0)
+    return flagged, scales, thr

@@ -1,0 +1,203 @@
+"""Registered per-client fault models (DESIGN.md §14).
+
+A fault model transforms the *trained* client payload before it reaches
+the server: ``apply(stacked, fetched, u)`` maps the stacked cohort
+params (leading axis = rows) plus the fetched global params to a
+corrupted stack, purely in ``jnp`` so the same transform runs eagerly
+(host/compiled rounds) and inside the fused ``lax.scan`` body.  The
+engine mixes the transformed rows back in with a per-row kind mask, so
+``apply`` never needs to know *which* rows are faulty.
+
+Per-model randomness is a single scalar ``u`` per (round, client) drawn
+host-side on the dedicated fault stream (``FAULT_STREAM``) — every model
+draws exactly one uniform per client per round regardless of the fault
+rate, so enabling faults at ``rate=0`` consumes no engine PRNG and
+perturbs nothing.
+
+``traced = False`` models (``stale_replay`` — it needs the cross-round
+replay cache) are rejected with ``fuse_rounds > 0`` by ``FLConfig``
+validation and handled host-side by ``FaultRuntime``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine.registry import Registry
+
+__all__ = [
+    "FAULT_REGISTRY",
+    "FAULT_STREAM",
+    "FaultModel",
+    "register_fault",
+    "list_faults",
+    "build_fault",
+]
+
+# Child-stream tag for the fault axis — sibling of the systems streams
+# (PROFILE/AVAILABILITY/JITTER = 0x5E3D_0001..3, DESIGN.md §10).
+FAULT_STREAM = 0x5E3D_0004
+
+FAULT_REGISTRY = Registry("fault")
+register_fault = FAULT_REGISTRY.register
+
+
+def list_faults() -> list[str]:
+    return FAULT_REGISTRY.names()
+
+
+def build_fault(name: str, **kwargs):
+    return FAULT_REGISTRY.build(name, **kwargs)
+
+
+def _rowwise(u, leaf):
+    """Reshape a per-row scalar vector for broadcasting against ``leaf``."""
+    return u.reshape((-1,) + (1,) * (leaf.ndim - 1))
+
+
+class FaultModel:
+    """Base class: one registered client-fault behavior.
+
+    - ``draw_param(rng, n)`` — one float per client from the dedicated
+      fault rng; models that need no parameter still draw (fixed stream
+      consumption keeps (seed, round, client) determinism independent of
+      the configured model mix).
+    - ``upload_fraction(u)`` — fraction of the update's bytes that reach
+      the server (``CommModel`` partial-byte accounting); 1.0 for
+      everything except ``truncated_upload``.
+    - ``apply(stacked, fetched, u)`` — pure-``jnp`` corruption of the
+      whole stack; the caller masks in the faulty rows.
+    """
+
+    name: str = ""
+    traced: bool = True
+
+    def draw_param(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        return rng.random(n)
+
+    def upload_fraction(self, u: np.ndarray) -> np.ndarray:
+        return np.ones_like(np.asarray(u, dtype=np.float64))
+
+    def apply(self, stacked, fetched, u):
+        raise NotImplementedError
+
+
+@register_fault("nan_update")
+class NanUpdate(FaultModel):
+    """Client returns non-finite leaves (crashed optimizer, fp overflow)."""
+
+    name = "nan_update"
+
+    def apply(self, stacked, fetched, u):
+        return jax.tree.map(lambda s: jnp.full_like(s, jnp.nan), stacked)
+
+
+@register_fault("exploding")
+class Exploding(FaultModel):
+    """Client delta scaled by ``eta`` — the classic scaled-gradient
+    poisoning / diverged-local-training failure."""
+
+    name = "exploding"
+
+    def __init__(self, eta: float = 100.0):
+        if not eta > 1.0:
+            raise ValueError(f"exploding eta must be > 1, got {eta}")
+        self.eta = float(eta)
+
+    def apply(self, stacked, fetched, u):
+        def one(s, f):
+            f32, g32 = s.astype(jnp.float32), f[None].astype(jnp.float32)
+            return (g32 + self.eta * (f32 - g32)).astype(s.dtype)
+
+        return jax.tree.map(one, stacked, fetched)
+
+
+@register_fault("sign_flip")
+class SignFlip(FaultModel):
+    """Byzantine sign flip: θ′ = θ_g − (θ_i − θ_g).  Norm-preserving, so
+    norm screening alone cannot catch it — the robust aggregators can."""
+
+    name = "sign_flip"
+
+    def apply(self, stacked, fetched, u):
+        def one(s, f):
+            f32, g32 = s.astype(jnp.float32), f[None].astype(jnp.float32)
+            return (2.0 * g32 - f32).astype(s.dtype)
+
+        return jax.tree.map(one, stacked, fetched)
+
+
+@register_fault("label_flip")
+class LabelFlip(FaultModel):
+    """Proxy for label-flipped local training: the delta is replaced by a
+    norm-preserving garbage direction (per-leaf reversed and negated), so
+    the update looks statistically plausible but pulls the model toward
+    a systematically wrong optimum."""
+
+    name = "label_flip"
+
+    def apply(self, stacked, fetched, u):
+        def one(s, f):
+            f32, g32 = s.astype(jnp.float32), f[None].astype(jnp.float32)
+            delta = (f32 - g32).reshape(s.shape[0], -1)
+            garbled = -jnp.flip(delta, axis=1)
+            return (g32 + garbled.reshape(s.shape)).astype(s.dtype)
+
+        return jax.tree.map(one, stacked, fetched)
+
+
+@register_fault("stale_replay")
+class StaleReplay(FaultModel):
+    """Client re-sends its *previous* trained params instead of fresh
+    work (stuck cache, duplicated upload).  Needs the cross-round replay
+    cache held by ``FaultRuntime``, so it is host-tier (``traced=False``,
+    rejected with ``fuse_rounds > 0``); ``apply`` is the first-offense
+    fallback — nothing cached yet, the client echoes the fetched params
+    (a zero delta)."""
+
+    name = "stale_replay"
+    traced = False
+
+    def apply(self, stacked, fetched, u):
+        return jax.tree.map(
+            lambda s, f: jnp.broadcast_to(f[None], s.shape).astype(s.dtype),
+            stacked,
+            fetched,
+        )
+
+
+@register_fault("truncated_upload")
+class TruncatedUpload(FaultModel):
+    """Upload cut short at a uniform fraction ``u ∈ [min_frac, max_frac]``
+    of the flattened payload: the first ``u·size`` entries of each leaf
+    arrive, the tail keeps the fetched (stale) values.  Only the partial
+    bytes are charged to ``CommModel`` via ``upload_fraction``."""
+
+    name = "truncated_upload"
+
+    def __init__(self, min_frac: float = 0.25, max_frac: float = 0.75):
+        if not (0.0 <= min_frac <= max_frac <= 1.0):
+            raise ValueError(
+                f"need 0 <= min_frac <= max_frac <= 1, got "
+                f"({min_frac}, {max_frac})"
+            )
+        self.min_frac = float(min_frac)
+        self.max_frac = float(max_frac)
+
+    def draw_param(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        return self.min_frac + (self.max_frac - self.min_frac) * rng.random(n)
+
+    def upload_fraction(self, u: np.ndarray) -> np.ndarray:
+        return np.asarray(u, dtype=np.float64)
+
+    def apply(self, stacked, fetched, u):
+        def one(s, f):
+            flat = s.reshape(s.shape[0], -1)
+            got = f.reshape(-1)[None].astype(s.dtype)
+            pos = jnp.arange(flat.shape[1], dtype=jnp.float32)[None, :]
+            keep = pos < u[:, None].astype(jnp.float32) * flat.shape[1]
+            return jnp.where(keep, flat, got).reshape(s.shape)
+
+        return jax.tree.map(one, stacked, fetched)

@@ -1,0 +1,277 @@
+"""``FaultRuntime`` — builds the configured fault models once and owns
+every engine-facing fault operation (DESIGN.md §14).
+
+Determinism contract: all fault randomness comes from the dedicated
+child stream ``default_rng([seed, FAULT_STREAM, round])`` with a fixed
+draw order (hit vector, model pick, then one ``draw_param`` vector per
+configured model), so the decision for (seed, round, client) is
+reproducible in isolation, independent of cohort composition, and never
+touches the engine's numpy or JAX PRNG streams — ``faults=None`` vs
+``rate=0`` is bit-identical.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.faults.defense import screen_norms, update_norms, validate_updates
+from repro.faults.health import ClientHealth
+from repro.faults.models import FAULT_STREAM, build_fault
+
+__all__ = ["FaultRuntime", "FaultInfo"]
+
+
+@dataclass(frozen=True)
+class FaultInfo:
+    """What one eager round's fault processing did — feeds
+    ``RoundResult`` and the comm model."""
+
+    survivors: np.ndarray  # client ids passing arrival ∩ validation
+    n_faulty: int  # injected-faulty among arrivals (ground truth)
+    n_quarantined: int  # clients in quarantine after this round
+    uploaded: float  # Σ upload fractions over arrivals (partial bytes)
+
+
+class FaultRuntime:
+    def __init__(self, cfg, *, n_clients: int, seed: int, params_template):
+        self.cfg = cfg
+        self.n = int(n_clients)
+        self.seed = int(cfg.seed if cfg.seed is not None else seed)
+        self.models = [
+            build_fault(name, **cfg.model_kwargs.get(name, {}))
+            for name in cfg.models
+        ]
+        self.defended = cfg.defended
+        self.health = ClientHealth(
+            n_clients,
+            quarantine_rounds=cfg.quarantine_rounds,
+            backoff=cfg.backoff,
+            max_backoff_exp=cfg.max_backoff_exp,
+            fail_threshold=cfg.fail_threshold,
+        )
+        # The traced gate, reused (jitted) by the eager paths and (inlined)
+        # by the fused scan body.
+        self.validate_traced = partial(
+            validate_updates, q=cfg.clip_quantile, tol=cfg.norm_tolerance
+        )
+        self._validate_jit = jax.jit(self.validate_traced, donate_argnums=())
+        self._norms_jit = jax.jit(update_norms, donate_argnums=())
+        # stale_replay cross-round cache: last honest trained params per
+        # client (+ a sent flag), host-tier only.
+        self._stale_idx = next(
+            (j for j, m in enumerate(self.models) if not m.traced), None
+        )
+        if self._stale_idx is not None:
+            self._stale_cache = jax.tree.map(
+                lambda p: jnp.zeros((self.n,) + p.shape, p.dtype), params_template
+            )
+            self._stale_sent = np.zeros(self.n, bool)
+
+    # -- per-round decisions -------------------------------------------
+    def decide(self, rnd: int) -> tuple[np.ndarray, np.ndarray]:
+        """(kind, u) over the whole population for round ``rnd`` —
+        ``kind[c]`` is the model index injected for client ``c`` (−1 =
+        honest), ``u[c]`` its scalar parameter."""
+        rng = np.random.default_rng([self.seed, FAULT_STREAM, int(rnd)])
+        hit = rng.random(self.n) < self.cfg.rate
+        which = rng.integers(0, len(self.models), self.n)
+        us = np.stack([m.draw_param(rng, self.n) for m in self.models])
+        kind = np.where(hit, which, -1).astype(np.int64)
+        u = us[which, np.arange(self.n)].astype(np.float32)
+        return kind, u
+
+    def upload_fractions(self, kind_rows: np.ndarray, u_rows: np.ndarray) -> np.ndarray:
+        """Per-row fraction of update bytes that reach the server."""
+        fr = np.ones(len(kind_rows), np.float64)
+        for j, m in enumerate(self.models):
+            rows = kind_rows == j
+            if rows.any():
+                fr[rows] = m.upload_fraction(u_rows[rows])
+        return fr
+
+    # -- injection ------------------------------------------------------
+    def apply_traced(self, stacked, fetched, kind_rows, u_rows):
+        """Mix each traced model's corruption into its rows — pure jnp,
+        shared by the eager paths and the fused scan body."""
+        out = stacked
+        u = jnp.asarray(u_rows, jnp.float32)
+        for j, m in enumerate(self.models):
+            if not m.traced:
+                continue
+            hit = jnp.asarray(kind_rows) == j
+            bad = m.apply(stacked, fetched, u)
+            out = jax.tree.map(
+                lambda o, b: jnp.where(
+                    hit.reshape((-1,) + (1,) * (o.ndim - 1)), b, o
+                ),
+                out,
+                bad,
+            )
+        return out
+
+    def inject_eager(self, rnd: int, clients: np.ndarray, arrived: np.ndarray,
+                     stacked, fetched):
+        """Corrupt the rows of ``stacked`` (row i trained by client
+        ``clients[i]``) per this round's decisions.  Faults are
+        properties of *uploads*, so only ``arrived`` rows are touched —
+        a faulty-but-dropped client never reaches the server (and, on
+        the compiled all-K payload, a zero-weight NaN row would still
+        poison the mask-gated sum).  Zero work — and the unchanged input
+        object — when nothing hits."""
+        clients = np.asarray(clients, np.int64)
+        arrived = np.asarray(arrived, bool)
+        kind, u = self.decide(rnd)
+        kind_rows = np.where(arrived, kind[clients], -1)
+        u_rows = u[clients]
+        if not (kind_rows >= 0).any():
+            self._refresh_stale_cache(clients, arrived, stacked, kind_rows)
+            return stacked, kind_rows, u_rows
+        out = self.apply_traced(stacked, fetched, kind_rows, u_rows)
+        if self._stale_idx is not None:
+            out = self._apply_stale(out, clients, kind_rows, fetched)
+        self._refresh_stale_cache(clients, arrived, stacked, kind_rows)
+        return out, kind_rows, u_rows
+
+    def _refresh_stale_cache(self, clients, arrived, stacked, kind_rows) -> None:
+        # cache = the client's last *uploaded* honest params, so the
+        # replay is identical whichever backend (and cohort shape) ran it
+        if self._stale_idx is None:
+            return
+        fresh = arrived & (kind_rows != self._stale_idx)
+        idx = clients[fresh]
+        if len(idx) == 0:
+            return
+        rows = np.flatnonzero(fresh)
+        self._stale_cache = jax.tree.map(
+            lambda c, s: c.at[idx].set(s[rows].astype(c.dtype)),
+            self._stale_cache,
+            stacked,
+        )
+        self._stale_sent[idx] = True
+
+    def _apply_stale(self, out, clients, kind_rows, fetched):
+        for r in np.flatnonzero(kind_rows == self._stale_idx):
+            c = int(clients[r])
+            repl = (
+                jax.tree.map(lambda cache: cache[c], self._stale_cache)
+                if self._stale_sent[c]
+                else fetched
+            )
+            out = jax.tree.map(
+                lambda o, rp: o.at[r].set(rp.astype(o.dtype)), out, repl
+            )
+        return out
+
+    # -- defense --------------------------------------------------------
+    def screen(self, stacked, fetched, valid: np.ndarray):
+        """Validation gate over one stacked cohort (jitted).  Returns
+        ``(clipped_stack, flagged_rows)``; identity when undefended.
+
+        One fused jit call on purpose: the gate's screen + clip are a
+        single XLA program (elementwise chain fused into ~2 stack
+        passes), so the defended round adds one dispatch and one small
+        host read — splitting screen from repair doubles the work,
+        because the norm clip touches the cohort's top-``clip_quantile``
+        tail on *honest* rounds too (DESIGN.md §14.2)."""
+        if not self.defended:
+            return stacked, np.zeros(len(valid), bool)
+        clipped, flagged, _ = self._validate_jit(
+            stacked, fetched, jnp.asarray(np.asarray(valid, bool))
+        )
+        return clipped, np.asarray(flagged)
+
+    def entry_norms(self, stacked, fetched) -> tuple[np.ndarray, np.ndarray]:
+        """Per-row (norm, finite) for the async buffer's host-side
+        screening (``screen_norms``)."""
+        norm, finite = self._norms_jit(stacked, fetched)
+        return np.asarray(norm), np.asarray(finite)
+
+    def screen_entry_norms(self, norms, finite, valid):
+        return screen_norms(
+            norms,
+            finite,
+            valid,
+            q=self.cfg.clip_quantile,
+            tol=self.cfg.norm_tolerance,
+        )
+
+    # -- the eager one-stop ---------------------------------------------
+    def process_begin(self, rnd: int, clients: np.ndarray,
+                      arrived: np.ndarray, stacked, fetched):
+        """Device half of :meth:`process`: inject and *dispatch* the
+        gate without reading its verdict back.  Returns
+        ``(new_stacked, pending)`` — the caller dispatches downstream
+        device work (the optimistic aggregation) and only then resolves
+        ``pending`` via :meth:`process_finish`, so the flagged read
+        overlaps the device queue instead of stalling it
+        (DESIGN.md §14.2)."""
+        clients = np.asarray(clients, np.int64)
+        arrived = np.asarray(arrived, bool)
+        out, kind_rows, u_rows = self.inject_eager(
+            rnd, clients, arrived, stacked, fetched
+        )
+        flagged = None
+        if self.defended:
+            out, flagged, _ = self._validate_jit(
+                out, fetched, jnp.asarray(arrived)
+            )
+        return out, (rnd, clients, arrived, kind_rows, u_rows, flagged)
+
+    def process_finish(self, pending) -> FaultInfo:
+        """Host half of :meth:`process`: materialize the gate verdict,
+        feed the health ledger, and build the round's ``FaultInfo``."""
+        rnd, clients, arrived, kind_rows, u_rows, flagged = pending
+        flagged_rows = (
+            np.asarray(flagged) if flagged is not None
+            else np.zeros(len(arrived), bool)
+        )
+        flagged_rows = flagged_rows & arrived
+        surv = clients[arrived & ~flagged_rows]
+        self.health.record(rnd, clients[arrived], clients[flagged_rows])
+        fracs = self.upload_fractions(kind_rows, u_rows)
+        return FaultInfo(
+            survivors=surv,
+            n_faulty=int((kind_rows >= 0).sum()),
+            n_quarantined=self.health.n_quarantined(rnd),
+            uploaded=float(fracs[arrived].sum()),
+        )
+
+    def process(self, rnd: int, clients: np.ndarray, arrived: np.ndarray, stacked, fetched):
+        """Inject → screen → ledger for one eager round.
+
+        ``clients[i]`` trained row ``i`` of ``stacked``; ``arrived[i]``
+        marks rows that reached the server (systems survivors ∩ admitted
+        clients).  Returns ``(new_stacked, FaultInfo)``.
+        """
+        out, pending = self.process_begin(rnd, clients, arrived, stacked, fetched)
+        return out, self.process_finish(pending)
+
+    # -- checkpoint seams -----------------------------------------------
+    def meta_state(self) -> dict:
+        return {"health": self.health.state_dict()}
+
+    def load_meta_state(self, d: dict) -> None:
+        self.health.load_state_dict(d["health"])
+
+    @property
+    def has_stale(self) -> bool:
+        return self._stale_idx is not None
+
+    def stale_state(self) -> dict:
+        """Array-valued stale-replay state for ``_state_pytree`` (the
+        ``sent`` flags ride as an int array leaf)."""
+        return {
+            "cache": self._stale_cache,
+            "sent": jnp.asarray(self._stale_sent.astype(np.int8)),
+        }
+
+    def load_stale_state(self, d: dict) -> None:
+        # the checkpoint loader hands back numpy leaves; the cache must be
+        # jnp so `.at[].set` updates keep working after a resume
+        self._stale_cache = jax.tree.map(jnp.asarray, d["cache"])
+        self._stale_sent = np.asarray(d["sent"]).astype(bool)

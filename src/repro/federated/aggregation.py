@@ -11,7 +11,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["fedavg", "fednova", "feddyn_server", "weighted_delta"]
+__all__ = [
+    "fedavg",
+    "fednova",
+    "feddyn_server",
+    "weighted_delta",
+    "trimmed_mean",
+    "coordinate_median",
+]
 
 
 def _wsum(stacked, weights):
@@ -73,6 +80,60 @@ def feddyn_server(stacked_params, weights, h_server, alpha: float, frac_particip
         h_server,
     )
     return theta, mean_params
+
+
+def trimmed_mean(stacked_params, weights, trim_frac: float):
+    """Coordinate-wise β-trimmed weighted mean (Yin et al., 2018).
+
+    Participants are the rows with ``weights > 0`` — the same zero-weight
+    gating both backends already use — so the function accepts either the
+    host cohort stack or the compiled all-K mask-gated stack unchanged.
+    Per coordinate, the ``floor(trim_frac · n)`` largest and smallest
+    participant values are dropped and the survivors averaged with
+    renormalized weights; ``trim_frac = 0`` reduces to ``fedavg`` (up to
+    summation order).  All index arithmetic is traced (static shapes),
+    so the rule jits without retracing per cohort composition.
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    valid = w > 0
+    nv = jnp.sum(valid.astype(jnp.int32))
+    k = jnp.floor(jnp.float32(trim_frac) * nv.astype(jnp.float32)).astype(jnp.int32)
+
+    def one(leaf):
+        rows = leaf.shape[0]
+        x = leaf.astype(jnp.float32).reshape(rows, -1)
+        key = jnp.where(valid[:, None], x, jnp.inf)  # non-participants last
+        order = jnp.argsort(key, axis=0)
+        xs = jnp.take_along_axis(x, order, axis=0)
+        ws = jnp.take_along_axis(jnp.broadcast_to(w[:, None], x.shape), order, axis=0)
+        pos = jnp.arange(rows, dtype=jnp.int32)[:, None]
+        keep = (pos >= k) & (pos < nv - k)
+        wk = jnp.where(keep, ws, 0.0)
+        num = jnp.sum(jnp.where(keep, xs * ws, 0.0), axis=0)
+        den = jnp.maximum(jnp.sum(wk, axis=0), 1e-12)
+        return (num / den).astype(leaf.dtype).reshape(leaf.shape[1:])
+
+    return jax.tree.map(one, stacked_params)
+
+
+def coordinate_median(stacked_params, weights):
+    """Coordinate-wise (unweighted) median over participants — rows with
+    ``weights > 0`` (Yin et al., 2018).  Even participant counts average
+    the two middle order statistics; the gather indices are traced
+    scalars so cohort composition never retraces."""
+    w = jnp.asarray(weights, jnp.float32)
+    valid = w > 0
+    nv = jnp.sum(valid.astype(jnp.int32))
+    lo, hi = (nv - 1) // 2, nv // 2
+
+    def one(leaf):
+        rows = leaf.shape[0]
+        x = leaf.astype(jnp.float32).reshape(rows, -1)
+        xs = jnp.sort(jnp.where(valid[:, None], x, jnp.inf), axis=0)
+        med = 0.5 * (jnp.take(xs, lo, axis=0) + jnp.take(xs, hi, axis=0))
+        return med.astype(leaf.dtype).reshape(leaf.shape[1:])
+
+    return jax.tree.map(one, stacked_params)
 
 
 def feddyn_update_h(h_server, mean_params, global_params, alpha: float, frac: float):

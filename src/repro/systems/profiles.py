@@ -29,6 +29,10 @@ into its scanned round as ``lax.scan`` inputs).  Presets:
 - ``markov``     — per-client two-state chain: on→off w.p. ``p_drop``,
                    off→on w.p. ``p_join``; round-0 states drawn from
                    the stationary distribution.
+- ``trace``      — replay a recorded on/off schedule from a CSV or JSON
+                   file (ROADMAP (p)): fully deterministic, no rng at
+                   all — the seed is ignored.  ``examples/
+                   availability_trace.csv`` is a ready-made schedule.
 
 All randomness derives from ``np.random.default_rng`` seeded on a
 dedicated child stream of the engine seed — the engine's own selection
@@ -279,3 +283,74 @@ class MarkovAvailability(AvailabilityModel):
                 state = np.where(prev, u >= self.p_drop, u < self.p_join)
             self._trace.append(state)
         return self._trace[t]
+
+
+@register_availability("trace")
+class TraceAvailability(AvailabilityModel):
+    """Replay a recorded per-client on/off schedule from a file —
+    measured fleet traces instead of a synthetic process (ROADMAP (p)).
+
+    Formats (chosen by file extension):
+
+    - ``.csv``  — one row per round, ``n_clients`` comma-separated 0/1
+      columns; ``#`` lines are comments.
+    - ``.json`` — ``{"rounds": [[0/1, ...], ...]}``.
+
+    ``wrap=True`` (default) cycles the schedule past its last row (round
+    ``t`` replays row ``t mod T``); ``wrap=False`` holds the final row
+    forever.  The trace is fully deterministic — no rng is ever drawn,
+    the seed is ignored — so every backend (and a resumed run) replays
+    the identical fleet history.
+    """
+
+    name = "trace"
+
+    def __init__(self, n_clients: int, seed: int = 0, *,
+                 path: str, wrap: bool = True):
+        super().__init__(n_clients, seed)
+        rows = self._load(str(path))
+        sched = np.asarray(rows)
+        if sched.ndim != 2 or sched.shape[0] == 0:
+            raise ValueError(
+                f"availability trace {path!r} must be a non-empty 2-D "
+                f"(rounds × clients) schedule, got shape {sched.shape}"
+            )
+        if sched.shape[1] != self.K:
+            raise ValueError(
+                f"availability trace {path!r} has {sched.shape[1]} client "
+                f"columns but the run has n_clients={self.K}"
+            )
+        vals = sched.astype(np.float64)
+        if not np.isin(vals, (0.0, 1.0)).all():
+            raise ValueError(
+                f"availability trace {path!r} must contain only 0/1 "
+                f"entries"
+            )
+        self.path = str(path)
+        self.schedule = vals.astype(bool)
+        self.wrap = bool(wrap)
+
+    @staticmethod
+    def _load(path: str):
+        if path.endswith(".json"):
+            import json
+
+            with open(path) as f:
+                doc = json.load(f)
+            if not isinstance(doc, dict) or "rounds" not in doc:
+                raise ValueError(
+                    f"JSON availability trace {path!r} must be an object "
+                    f'with a "rounds" key holding the schedule'
+                )
+            return doc["rounds"]
+        if path.endswith(".csv"):
+            rows = np.loadtxt(path, delimiter=",", comments="#", ndmin=2)
+            return rows
+        raise ValueError(
+            f"availability trace {path!r} must be a .csv or .json file"
+        )
+
+    def mask(self, t: int) -> np.ndarray:
+        n = self.schedule.shape[0]
+        i = int(t) % n if self.wrap else min(int(t), n - 1)
+        return self.schedule[i].copy()

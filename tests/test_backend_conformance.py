@@ -163,6 +163,9 @@ ROUND_RESULT_FIELDS = (
     # async runtime (DESIGN.md §13): mean staleness of the aggregated
     # buffer + the server params version.  Lock-step defaults: 0 / r+1.
     "staleness", "params_version",
+    # fault axis (DESIGN.md §14): injected-faulty arrivals this round +
+    # clients serving a quarantine after it.  Inert zeros without faults.
+    "n_faulty", "n_quarantined",
 )
 
 # every backend on the classification task + one LM cell (the LM grid

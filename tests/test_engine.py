@@ -24,7 +24,9 @@ from repro.engine.presets import get_preset, list_presets
 # ---------------------------------------------------------------- registry
 def test_registries_populated():
     assert "fedlecc" in list_strategies() and "random" in list_strategies()
-    assert list_aggregators() == ["fedavg", "feddyn", "fednova"]
+    assert list_aggregators() == [
+        "coordinate_median", "fedavg", "feddyn", "fednova", "trimmed_mean",
+    ]
     assert list_client_modes() == ["feddyn", "fedprox", "plain"]
     assert list_tasks() == ["classification", "lm"]
 

@@ -1,0 +1,608 @@
+"""The fault axis (``FLConfig.faults``, DESIGN.md §14): injection on a
+dedicated child PRNG stream, the server-side validation gate, robust
+aggregators, the ``ClientHealth`` quarantine ledger, and the wiring
+through every execution path.
+
+Covers the PR's acceptance surface:
+
+- ``FaultConfig`` validation + dict round-tripping;
+- injection determinism: ``decide`` is a pure function of
+  (seed, round), independent of rate-irrelevant stream consumption;
+- per-model transform units and the validation gate (non-finite
+  screening, robust-quantile norm clip, NaN *neutralization* so a
+  zero-weight row can never poison a mask-gated sum);
+- rate-0 bit-identity: ``faults=None`` vs ``FaultConfig(rate=0)`` —
+  with and without the defended path — on both tasks × host/compiled,
+  on the fused chunks, and under the async runtime;
+- host vs compiled lockstep at a 20% fault rate (defended);
+- quarantine: trip / exponential-backoff re-admission / all-quarantined
+  rounds leave the params untouched;
+- kill-and-resume mid-quarantine is bit-identical (host, compiled,
+  async), incl. the ``stale_replay`` cache riding the pytree;
+- async: a flagged arrival never consumes a ``buffer_k`` slot;
+- robust aggregators: hypothesis properties (permutation invariance,
+  bounded-by-cohort-range, trim=0 ≡ fedavg) + engine integration;
+- the ``trace`` availability preset (ROADMAP (p));
+- ``make_engine(resume=dir)`` falling back past a corrupt newest
+  checkpoint (``CheckpointError``) with a warning.
+"""
+
+import json
+import os
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import LM_VOCAB, fl_cfg as _cfg, lm_fl_cfg as _lm_cfg
+from repro.engine import FLConfig, make_engine
+from repro.faults import (
+    FAULT_STREAM,
+    ClientHealth,
+    FaultConfig,
+    build_fault,
+    list_faults,
+    validate_updates,
+)
+from repro.faults.runtime import FaultRuntime
+
+
+def _params(engine):
+    return np.concatenate([
+        np.asarray(x).ravel() for x in jax.tree.leaves(engine.params)
+    ])
+
+
+def _engine(datasets, n_classes, **kw):
+    cfg = _cfg(**kw)
+    train, test = datasets
+    return make_engine(cfg, train, test, n_classes)
+
+
+SYS = dict(profile="uniform", availability="bernoulli",
+           availability_kwargs={"p": 0.8})
+
+
+# ---------------------------------------------------------------- config
+def test_fault_config_validation():
+    with pytest.raises(ValueError, match="rate"):
+        FaultConfig(rate=1.5)
+    with pytest.raises(ValueError, match="unknown fault model"):
+        FaultConfig(models=["gremlin"])
+    with pytest.raises(ValueError, match="defense"):
+        FaultConfig(defense="hope")
+    with pytest.raises(ValueError, match="clip_quantile"):
+        FaultConfig(clip_quantile=0.0)
+    with pytest.raises(ValueError, match="norm_tolerance"):
+        FaultConfig(norm_tolerance=0.5)
+    with pytest.raises(ValueError, match="model_kwargs"):
+        FaultConfig(models=["sign_flip"], model_kwargs={"exploding": {}})
+    with pytest.raises(ValueError, match="unknown FaultConfig keys"):
+        FaultConfig.from_dict({"rate": 0.1, "bogus": 1})
+    # kwargs are validated eagerly against the model constructor
+    with pytest.raises(TypeError):
+        FaultConfig(models=["exploding"],
+                    model_kwargs={"exploding": {"nope": 1}})
+    c = FaultConfig.from_dict(
+        {"rate": 0.2, "models": "sign_flip", "defense": "validate"}
+    )
+    assert c.models == ["sign_flip"] and c.defended
+    assert not FaultConfig().defended
+
+
+def test_fault_config_rides_flconfig_dict_roundtrip():
+    cfg = _cfg(faults={"rate": 0.1, "models": ["nan_update"],
+                       "defense": "validate"})
+    assert isinstance(cfg.faults, FaultConfig)
+    cfg2 = FLConfig.from_dict(cfg.to_dict())
+    assert cfg2.faults is not None and cfg2.faults.rate == 0.1
+    assert FLConfig.from_dict(_cfg().to_dict()).faults is None
+
+
+def test_faults_rejected_on_scaleout_and_stale_on_fused():
+    with pytest.raises(ValueError, match="backend"):
+        _cfg(backend="scaleout", faults={"rate": 0.1})
+    with pytest.raises(ValueError, match="stale_replay"):
+        _cfg(backend="compiled", fuse_rounds=2,
+             faults={"rate": 0.1, "models": ["stale_replay"]})
+    # every other model fuses fine
+    _cfg(backend="compiled", fuse_rounds=2,
+         faults={"rate": 0.1, "models": ["sign_flip"]})
+
+
+def test_registry_lists_all_six_models():
+    assert set(list_faults()) >= {
+        "nan_update", "exploding", "sign_flip", "label_flip",
+        "stale_replay", "truncated_upload",
+    }
+
+
+# ------------------------------------------------------------- injection
+def test_decide_is_deterministic_and_on_its_own_stream():
+    cfg = FaultConfig(rate=0.5, models=["sign_flip", "exploding"])
+    template = {"w": jnp.zeros((3,))}
+    rt1 = FaultRuntime(cfg, n_clients=40, seed=9, params_template=template)
+    rt2 = FaultRuntime(cfg, n_clients=40, seed=9, params_template=template)
+    k1, u1 = rt1.decide(7)
+    k2, u2 = rt2.decide(7)
+    assert np.array_equal(k1, k2) and np.array_equal(u1, u2)
+    assert (k1 >= 0).any() and (k1 == -1).any()
+    # a different round gives a different draw; a different seed too
+    assert not np.array_equal(k1, rt1.decide(8)[0]) or not np.array_equal(
+        u1, rt1.decide(8)[1]
+    )
+    rt3 = FaultRuntime(cfg, n_clients=40, seed=10, params_template=template)
+    assert not np.array_equal(k1, rt3.decide(7)[0]) or not np.array_equal(
+        u1, rt3.decide(7)[1]
+    )
+    # the stream is the documented child stream — rate only thresholds it
+    rng = np.random.default_rng([9, FAULT_STREAM, 7])
+    assert np.array_equal(k1 >= 0, rng.random(40) < 0.5)
+
+
+def test_fault_model_transforms():
+    g = {"w": jnp.ones((4, 3))}           # fetched (global) params
+    s = {"w": jnp.full((4, 3), 2.0)}      # stacked trained params
+    u = jnp.zeros(4)
+    nan = build_fault("nan_update").apply(s, {"w": g["w"][0]}, u)
+    assert np.isnan(np.asarray(nan["w"])).all()
+    flip = build_fault("sign_flip").apply(s, {"w": g["w"][0]}, u)
+    assert np.allclose(np.asarray(flip["w"]), 0.0)  # 2g − s = 2·1 − 2
+    # exploding: g + eta·(s − g) = 1 + 10·(2 − 1)
+    boom = build_fault("exploding", eta=10.0).apply(s, {"w": g["w"][0]}, u)
+    assert np.allclose(np.asarray(boom["w"]), 11.0)
+    trunc = build_fault("truncated_upload")
+    draws = trunc.draw_param(np.random.default_rng(0), 500)
+    assert draws.min() >= 0.25 and draws.max() <= 0.75
+    np.testing.assert_allclose(
+        trunc.upload_fraction(np.array([0.3, 0.7])), [0.3, 0.7]
+    )
+    cut = trunc.apply(s, {"w": g["w"][0]}, jnp.full(4, 0.5))
+    row = np.asarray(cut["w"][0]).ravel()  # first half arrives, tail stale
+    assert (row[:1] == 2.0).all() and (row[-1:] == 1.0).all()
+
+
+def test_validation_gate_flags_clips_and_neutralizes():
+    fetched = {"w": jnp.zeros((4,))}
+    stacked = {"w": jnp.stack([
+        jnp.full((4,), 0.1),
+        jnp.full((4,), 0.12),
+        jnp.full((4,), 50.0),            # norm way past tolerance
+        jnp.full((4,), jnp.nan),         # non-finite
+    ])}
+    valid = jnp.ones(4, bool)
+    clipped, flagged, _ = validate_updates(
+        stacked, fetched, valid, q=0.5, tol=3.0
+    )
+    assert list(np.asarray(flagged)) == [False, False, True, True]
+    out = np.asarray(clipped["w"])
+    assert np.isfinite(out).all()          # the NaN row was neutralized
+    np.testing.assert_allclose(out[3], 0.0)  # ... to the fetched params
+    # invalid rows are never flagged
+    _, flagged2, _ = validate_updates(
+        stacked, fetched, jnp.array([True, True, False, False]),
+        q=0.5, tol=3.0,
+    )
+    assert not np.asarray(flagged2)[2:].any()
+
+
+def test_all_nonfinite_cohort_flags_everyone():
+    fetched = {"w": jnp.zeros((2,))}
+    stacked = {"w": jnp.full((3, 2), jnp.nan)}
+    _, flagged, _ = validate_updates(
+        stacked, fetched, jnp.ones(3, bool), q=0.9, tol=3.0
+    )
+    assert np.asarray(flagged).all()
+
+
+# ---------------------------------------------------------------- health
+def test_client_health_quarantine_and_backoff():
+    h = ClientHealth(4, quarantine_rounds=2, backoff=2.0, fail_threshold=1)
+    assert h.admitted(0).all() and h.n_quarantined(0) == 0
+    h.record(0, arrivals=np.array([0, 1]), flagged=np.array([1]))
+    # client 1 trips: out for rounds 1..2, back at 3
+    assert h.admitted(1)[0] and not h.admitted(1)[1]
+    assert not h.admitted(2)[1] and h.admitted(3)[1]
+    assert h.n_quarantined(1) == 1
+    # second strike doubles the sentence (exponential backoff)
+    h.record(3, arrivals=np.array([1]), flagged=np.array([1]))
+    assert not h.admitted(7)[1] and h.admitted(8)[1]
+    # a clean arrival resets the consecutive count, not the strikes
+    h.record(8, arrivals=np.array([1]), flagged=np.array([], np.int64))
+    st = h.state_dict()
+    h2 = ClientHealth(4, quarantine_rounds=2, backoff=2.0, fail_threshold=1)
+    h2.load_state_dict(st)
+    assert np.array_equal(h2.admitted(9), h.admitted(9))
+
+
+def test_fail_threshold_needs_consecutive_faults():
+    h = ClientHealth(2, quarantine_rounds=2, fail_threshold=2)
+    h.record(0, arrivals=np.array([0]), flagged=np.array([0]))
+    assert h.admitted(1).all()            # one strike is below threshold
+    h.record(1, arrivals=np.array([0]), flagged=np.array([0]))
+    assert not h.admitted(2)[0]           # two consecutive trips it
+
+
+# ---------------------------------------- rate-0 bit-identity conformance
+_CELLS = [
+    ("classification", "host"), ("classification", "compiled"),
+    ("lm", "host"), ("lm", "compiled"),
+]
+
+
+@pytest.mark.parametrize("task,backend", _CELLS,
+                         ids=[f"{t}-{b}" for t, b in _CELLS])
+def test_rate_zero_is_bit_identical(task, backend, data, lm_data):
+    mk, datasets, n_cls = (
+        (_lm_cfg, lm_data, LM_VOCAB) if task == "lm" else (_cfg, data, 10)
+    )
+    train, test = datasets
+    runs = {}
+    for name, faults in (
+        ("off", None),
+        ("rate0", {"rate": 0.0}),
+        # clip_quantile=1.0 makes the *defended* path a pass-through:
+        # thr = max norm, nothing clips, nothing flags
+        ("defended0", {"rate": 0.0, "defense": "validate",
+                       "clip_quantile": 1.0}),
+    ):
+        eng = make_engine(mk(backend=backend, faults=faults),
+                          train, test, n_cls)
+        hist = list(eng.rounds())
+        runs[name] = (_params(eng), hist)
+    p0, h0 = runs["off"]
+    for name in ("rate0", "defended0"):
+        p, h = runs[name]
+        assert np.array_equal(p0, p), f"{name} params diverged"
+        for a, b in zip(h0, h):
+            assert a.selected == b.selected
+            assert a.comm_mb == b.comm_mb
+            assert a.test_loss == b.test_loss
+            assert (b.n_faulty, b.n_quarantined) == (0, 0)
+
+
+def test_host_compiled_lockstep_under_20pct_faults(data):
+    faults = {"rate": 0.2, "models": ["sign_flip", "nan_update"],
+              "defense": "validate"}
+    engines, hists = {}, {}
+    for backend in ("host", "compiled"):
+        eng = _engine(data, 10, backend=backend, rounds=4, faults=faults)
+        hists[backend] = list(eng.rounds())
+        engines[backend] = eng
+    for a, b in zip(hists["host"], hists["compiled"]):
+        assert a.selected == b.selected
+        assert (a.n_faulty, a.n_quarantined) == (b.n_faulty, b.n_quarantined)
+    d = np.abs(_params(engines["host"]) - _params(engines["compiled"]))
+    assert float(d.max()) < 5e-5
+    assert np.isfinite(_params(engines["host"])).all()
+    assert sum(r.n_faulty for r in hists["host"]) > 0
+
+
+def test_all_quarantined_round_leaves_params_unchanged(data):
+    for backend in ("host", "compiled"):
+        eng = _engine(data, 10, backend=backend, rounds=2, n_clients=8, m=3,
+                      faults={"rate": 1.0, "models": ["nan_update"],
+                              "defense": "validate"})
+        before = _params(eng).copy()
+        hist = list(eng.rounds())
+        assert np.array_equal(before, _params(eng))
+        assert all(r.selected == () for r in hist)
+        assert hist[-1].n_quarantined > 0
+
+
+def test_truncated_upload_reduces_comm(data):
+    full = _engine(data, 10, rounds=3, faults={"rate": 0.0})
+    part = _engine(data, 10, rounds=3,
+                   faults={"rate": 0.9, "models": ["truncated_upload"]})
+    h_full = list(full.rounds())
+    h_part = list(part.rounds())
+    assert h_part[-1].comm_mb < h_full[-1].comm_mb
+
+
+def test_stale_replay_resends_last_honest_params(data):
+    eng = _engine(data, 10, rounds=4, n_clients=6, m=6, strategy="random",
+                  faults={"rate": 0.5, "models": ["stale_replay"]})
+    hist = list(eng.rounds())
+    assert sum(r.n_faulty for r in hist) > 0
+    assert np.isfinite(_params(eng)).all()
+
+
+# ------------------------------------------------- checkpoints: mid-quarantine
+@pytest.mark.parametrize("backend", ["host", "compiled"])
+def test_kill_and_resume_mid_quarantine_bit_identical(backend, data, tmp_path):
+    faults = {"rate": 0.3, "models": ["nan_update", "stale_replay"],
+              "defense": "validate", "quarantine_rounds": 3}
+    kw = dict(backend=backend, rounds=6, faults=faults)
+    train, test = data
+    ref = make_engine(_cfg(**kw), train, test, 10)
+    href = list(ref.rounds())
+    assert any(r.n_quarantined > 0 for r in href[:3])  # quarantine spans the cut
+    live = make_engine(_cfg(**kw), train, test, 10,
+                       checkpointer=str(tmp_path))
+    it = live.rounds()
+    for _ in range(3):
+        next(it)
+    it.close()
+    res = make_engine(_cfg(**kw), train, test, 10, resume=str(tmp_path))
+    hres = list(res.rounds())
+    assert np.array_equal(_params(ref), _params(res))
+    for a, b in zip(href[3:], hres):
+        assert a.selected == b.selected
+        assert (a.n_faulty, a.n_quarantined) == (b.n_faulty, b.n_quarantined)
+        assert a.test_loss == b.test_loss
+
+
+def test_resume_falls_back_past_corrupt_latest_checkpoint(data, tmp_path):
+    train, test = data
+    cfg = _cfg(rounds=3)
+    eng = make_engine(cfg, train, test, 10, checkpointer=str(tmp_path))
+    list(eng.rounds())
+    ckpts = sorted(os.listdir(tmp_path))
+    assert len(ckpts) >= 2
+    latest = tmp_path / ckpts[-1]
+    latest.write_bytes(latest.read_bytes()[:37])  # truncate mid-envelope
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        res = make_engine(cfg, train, test, 10, resume=str(tmp_path))
+    assert any("skipping corrupt checkpoint" in str(x.message) for x in w)
+    assert res._round == 2                 # the previous save carried round 2
+    # every candidate corrupt → a loud CheckpointError, not silence
+    for name in os.listdir(tmp_path):
+        (tmp_path / name).write_bytes(b"junk")
+    from repro.checkpoint import CheckpointError
+
+    with pytest.raises(CheckpointError, match="no valid checkpoint"):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            make_engine(cfg, train, test, 10, resume=str(tmp_path))
+    # structural mismatch (different config) must NOT fall back silently
+    eng2 = make_engine(cfg, train, test, 10, checkpointer=str(tmp_path))
+    list(eng2.rounds())
+    other = _cfg(rounds=3, m=3)
+    with pytest.raises(ValueError, match="config does not match"):
+        make_engine(other, train, test, 10, resume=str(tmp_path))
+
+
+# ----------------------------------------------------------------- fused
+def test_fused_rate_zero_bit_identical_and_lockstep(data):
+    train, test = data
+    kw = dict(backend="compiled", rounds=4, eval_every=1)
+    base = make_engine(_cfg(fuse_rounds=4, **kw), train, test, 10)
+    hb = list(base.rounds())
+    z = make_engine(_cfg(fuse_rounds=4, faults={"rate": 0.0}, **kw),
+                    train, test, 10)
+    hz = list(z.rounds())
+    assert np.array_equal(_params(base), _params(z))
+    for a, b in zip(hb, hz):
+        assert a.selected == b.selected and a.comm_mb == b.comm_mb
+    # eval_every=1 → chunk length 1 → per-round health updates: the fused
+    # faulty run must walk in lockstep with the eager compiled one
+    faults = {"rate": 0.3, "models": ["sign_flip", "nan_update"],
+              "defense": "validate"}
+    eager = make_engine(_cfg(faults=faults, **kw), train, test, 10)
+    he = list(eager.rounds())
+    fused = make_engine(_cfg(fuse_rounds=4, faults=faults, **kw),
+                        train, test, 10)
+    hf = list(fused.rounds())
+    for a, b in zip(he, hf):
+        assert a.selected == b.selected
+        assert (a.n_faulty, a.n_quarantined) == (b.n_faulty, b.n_quarantined)
+    assert np.isfinite(_params(fused)).all()
+
+
+def test_fused_long_chunks_contain_nans(data):
+    train, test = data
+    eng = make_engine(
+        _cfg(backend="compiled", fuse_rounds=3, rounds=6, eval_every=3,
+             faults={"rate": 1.0, "models": ["nan_update"],
+                     "defense": "validate"}),
+        train, test, 10,
+    )
+    hist = list(eng.rounds())
+    assert np.isfinite(_params(eng)).all()
+    assert all(r.selected == () for r in hist)
+
+
+# ----------------------------------------------------------------- async
+def _async_kw(**over):
+    kw = dict(systems=SYS, async_mode={"buffer_k": 2, "concurrency": 6},
+              rounds=6, eval_every=2)
+    kw.update(over)
+    return kw
+
+
+@pytest.mark.parametrize("backend", ["host", "compiled"])
+def test_async_rate_zero_bit_identical(backend, data):
+    train, test = data
+    e0 = make_engine(_cfg(backend=backend, **_async_kw()), train, test, 10)
+    h0 = list(e0.rounds())
+    e1 = make_engine(_cfg(backend=backend, **_async_kw(faults={"rate": 0.0})),
+                     train, test, 10)
+    h1 = list(e1.rounds())
+    assert np.array_equal(_params(e0), _params(e1))
+    for a, b in zip(h0, h1):
+        assert a.selected == b.selected and a.comm_mb == b.comm_mb
+        assert a.sim_clock == b.sim_clock
+        assert a.params_version == b.params_version
+
+
+def test_async_flagged_arrival_never_consumes_buffer_slot(data):
+    train, test = data
+    faults = {"rate": 0.4, "models": ["nan_update"], "defense": "validate",
+              "quarantine_rounds": 1}
+    eng = make_engine(_cfg(**_async_kw(rounds=10, faults=faults)),
+                      train, test, 10)
+    hist = list(eng.rounds())
+    assert sum(r.n_faulty for r in hist) > 0
+    assert np.isfinite(_params(eng)).all()
+    k = eng._buffer_k
+    # a flagged arrival is consumed but never fills a slot, so no step
+    # aggregates more than buffer_k clean updates — and steps where
+    # faults *were* consumed still fill the buffer from replacements
+    assert all(len(r.selected) <= k for r in hist)
+    assert any(r.n_faulty > 0 and len(r.selected) == k for r in hist)
+
+
+def test_async_faulty_resume_bit_identical(data, tmp_path):
+    train, test = data
+    kw = _async_kw(rounds=8, faults={"rate": 0.3,
+                                     "models": ["sign_flip", "nan_update"],
+                                     "defense": "validate"})
+    ref = make_engine(_cfg(**kw), train, test, 10)
+    href = list(ref.rounds())
+    live = make_engine(_cfg(**kw), train, test, 10, checkpointer=str(tmp_path))
+    it = live.rounds()
+    for _ in range(4):
+        next(it)
+    it.close()
+    res = make_engine(_cfg(**kw), train, test, 10, resume=str(tmp_path))
+    hres = list(res.rounds())
+    assert np.array_equal(_params(ref), _params(res))
+    for a, b in zip(href[4:], hres):
+        assert a.selected == b.selected and a.sim_clock == b.sim_clock
+        assert (a.n_faulty, a.n_quarantined) == (b.n_faulty, b.n_quarantined)
+
+
+# --------------------------------------------------- robust aggregators
+def test_robust_aggregator_registry_and_kwargs():
+    from repro.engine.aggregators import get_aggregator
+    from repro.engine.registry import list_aggregators
+
+    assert {"trimmed_mean", "coordinate_median"} <= set(list_aggregators())
+    with pytest.raises(ValueError, match="trim_frac"):
+        _cfg(aggregator="trimmed_mean",
+             aggregator_kwargs={"trim_frac": 0.7})
+    with pytest.raises(ValueError, match="unknown"):
+        _cfg(aggregator="trimmed_mean", aggregator_kwargs={"bogus": 1})
+    agg = get_aggregator(
+        "trimmed_mean",
+        _cfg(aggregator="trimmed_mean", aggregator_kwargs={"trim_frac": 0.1}),
+    )
+    assert agg.kwargs["trim_frac"] == 0.1
+
+
+def test_robust_aggregators_defend_the_model(data):
+    faults = {"rate": 0.25, "models": ["exploding"], "defense": "validate"}
+    for aggregator, kwargs in (
+        ("trimmed_mean", {"trim_frac": 0.25}),
+        ("coordinate_median", {}),
+    ):
+        for backend in ("host", "compiled"):
+            eng = _engine(data, 10, backend=backend, rounds=3,
+                          aggregator=aggregator, aggregator_kwargs=kwargs,
+                          faults=faults)
+            list(eng.rounds())
+            assert np.isfinite(_params(eng)).all()
+
+
+def test_trimmed_mean_at_zero_trim_matches_fedavg():
+    from repro.federated.aggregation import fedavg, trimmed_mean
+
+    rng = np.random.default_rng(0)
+    stacked = {"w": jnp.asarray(rng.normal(size=(6, 5)).astype(np.float32))}
+    w = jnp.asarray(rng.random(6).astype(np.float32))
+    w = w / w.sum()
+    a = fedavg(stacked, w)
+    b = trimmed_mean(stacked, w, trim_frac=0.0)
+    np.testing.assert_allclose(np.asarray(a["w"]), np.asarray(b["w"]),
+                               rtol=1e-6)
+
+
+def test_robust_aggregation_hypothesis_properties():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    from repro.federated.aggregation import coordinate_median, trimmed_mean
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        st.integers(3, 9),
+        st.integers(1, 4),
+        st.integers(0, 2 ** 31 - 1),
+        st.floats(0.0, 0.33),
+    )
+    def _prop(n, d, seed, trim):
+        rng = np.random.default_rng(seed)
+        x = rng.normal(size=(n, d)).astype(np.float32)
+        w = (rng.random(n) + 0.1).astype(np.float32)
+        stacked = {"w": jnp.asarray(x)}
+        wv = jnp.asarray(w)
+        tm = np.asarray(trimmed_mean(stacked, wv, trim_frac=trim)["w"])
+        cm = np.asarray(coordinate_median(stacked, wv)["w"])
+        # bounded by the cohort's coordinate-wise range
+        lo, hi = x.min(axis=0), x.max(axis=0)
+        eps = 1e-5 + 1e-5 * np.abs(x).max()
+        assert (tm >= lo - eps).all() and (tm <= hi + eps).all()
+        assert (cm >= lo - eps).all() and (cm <= hi + eps).all()
+        # permutation invariance
+        perm = rng.permutation(n)
+        tm2 = np.asarray(
+            trimmed_mean({"w": jnp.asarray(x[perm])}, jnp.asarray(w[perm]),
+                         trim_frac=trim)["w"]
+        )
+        cm2 = np.asarray(
+            coordinate_median({"w": jnp.asarray(x[perm])},
+                              jnp.asarray(w[perm]))["w"]
+        )
+        np.testing.assert_allclose(tm, tm2, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(cm, cm2, rtol=1e-4, atol=1e-5)
+
+    _prop()
+
+
+def test_robust_aggregators_ignore_zero_weight_rows():
+    from repro.federated.aggregation import coordinate_median, trimmed_mean
+
+    x = jnp.asarray(np.array(
+        [[1.0, 1.0], [2.0, 2.0], [3.0, 3.0], [1e9, -1e9]], np.float32
+    ))
+    w = jnp.asarray(np.array([1.0, 1.0, 1.0, 0.0], np.float32))
+    tm = np.asarray(trimmed_mean({"w": x}, w, trim_frac=0.0)["w"])
+    cm = np.asarray(coordinate_median({"w": x}, w)["w"])
+    np.testing.assert_allclose(tm, [2.0, 2.0], rtol=1e-6)
+    np.testing.assert_allclose(cm, [2.0, 2.0], rtol=1e-6)
+
+
+# -------------------------------------------------- trace availability
+def test_trace_availability_csv_and_json(tmp_path):
+    from repro.systems.profiles import make_availability
+
+    a = make_availability(
+        "trace", 12, seed=5,
+        path=os.path.join(os.path.dirname(__file__), "..", "examples",
+                          "availability_trace.csv"),
+    )
+    assert a.mask(0).all()
+    assert np.array_equal(a.mask(0), a.mask(12))  # wraps
+    p = tmp_path / "t.json"
+    p.write_text(json.dumps({"rounds": [[1, 0], [0, 1]]}))
+    b = make_availability("trace", 2, path=str(p))
+    assert list(b.mask(0)) == [True, False]
+    assert list(b.mask(3)) == [False, True]
+    c = make_availability("trace", 2, path=str(p), wrap=False)
+    assert list(c.mask(99)) == [False, True]
+    with pytest.raises(ValueError, match="client columns"):
+        make_availability("trace", 5, path=str(p))
+    bad = tmp_path / "bad.csv"
+    bad.write_text("1,2\n0,1\n")
+    with pytest.raises(ValueError, match="only 0/1"):
+        make_availability("trace", 2, path=str(bad))
+
+
+def test_trace_availability_drives_the_engine(data, tmp_path):
+    train, test = data
+    # round 0: everyone on; round 1: only clients {0, 1} — selection must
+    # respect the schedule exactly (deterministic, no rng)
+    rows = np.ones((2, 12), int)
+    rows[1, 2:] = 0
+    p = tmp_path / "sched.csv"
+    p.write_text("\n".join(",".join(map(str, r)) for r in rows) + "\n")
+    cfg = _cfg(rounds=2, systems=dict(
+        profile="uniform", availability="trace",
+        availability_kwargs={"path": str(p)},
+    ))
+    eng = make_engine(cfg, train, test, 10)
+    h = list(eng.rounds())
+    assert set(h[1].selected) <= {0, 1}
