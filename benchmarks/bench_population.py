@@ -1,0 +1,257 @@
+"""Population-scale selection + training (``repro.population``,
+DESIGN.md §15).
+
+Sweeps the client population K ∈ {10³, 10⁴, 10⁵, 10⁶} (``--smoke``:
+{10³, 10⁴}) and measures, per K:
+
+- **store build**    — ``ShardedStore`` summary construction (sizes +
+  label histograms for every shard, *no* feature synthesis);
+- **selector build** — shard clustering (OPTICS over the blocked HD
+  matrix up to 2048 shards, on-demand k-medoids beyond — K = 10⁶
+  exercises the k-medoids path);
+- **per-round selection** — ``begin_round`` (shard-level Algorithm 1 +
+  member concat), ``observe`` (estimate update), ``select_cohort``
+  (resident-local top-m) — the full server-side selection loop a
+  population round runs;
+- **memory** — bytes device-gathered per round (resident poll rows +
+  cohort rows; *flat in K* because the shard size and shards_per_round
+  are fixed) against the flat engine's device-resident full stack and
+  the dense K² HD matrix (both population-proportional).
+
+K = 10³ additionally runs the *end-to-end engines* — flat fedlecc vs
+hierarchical population fedlecc on the same synthetic task — and
+reports final-accuracy parity (the acceptance bar: the hierarchy's
+restriction to resident shards costs ~nothing at equal m).  K ≥ 10⁵
+rows are selection-only (no engine training) and say so in-row.
+
+Writes ``BENCH_population.json`` (repo root; CI ``perf-smoke``
+regenerates and uploads the ``--smoke`` config per commit — the
+committed file is a full run).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+BENCH_JSON = os.path.join(ROOT, "BENCH_population.json")
+
+# fixed shard geometry: resident rows per round stay constant across K,
+# which is exactly the flat-device-memory claim the sweep demonstrates
+SHARD_SIZE = 256
+SHARDS_PER_ROUND = 4
+J_SHARDS = 3
+M_COHORT = 32
+
+_MB = 1024.0 * 1024.0
+
+
+def _mb(n_bytes: float) -> float:
+    return round(n_bytes / _MB, 4)
+
+
+def _row_bytes(n_features: int, n_max: int) -> int:
+    # one packed client row: xs (N_max, F) f32 + ys (N_max,) i32 +
+    # mask (N_max,) f32
+    return n_max * (n_features * 4 + 4 + 4)
+
+
+def selection_row(K: int, rounds: int, seed: int = 0) -> dict:
+    """Selection-only sweep cell: store summaries + hierarchy + the
+    per-round selection loop, with simulated member losses standing in
+    for the poll (no training, no device work — noted in-row)."""
+    from repro.population import (
+        HierarchicalSelector,
+        PopulationConfig,
+        ShardedStore,
+        SyntheticShardLoader,
+    )
+
+    n_shards = max(SHARDS_PER_ROUND, K // SHARD_SIZE)
+    n_feat, n_max = 64, 16
+
+    t0 = time.perf_counter()
+    store = ShardedStore(
+        SyntheticShardLoader(seed=seed, n_features=n_feat, n_classes=10,
+                             samples=(8, n_max)),
+        n_clients=K, n_shards=n_shards,
+    )
+    t_store = time.perf_counter() - t0
+
+    cfg = PopulationConfig(n_shards=n_shards,
+                           shards_per_round=min(SHARDS_PER_ROUND, n_shards),
+                           j_shards=J_SHARDS)
+    t0 = time.perf_counter()
+    sel = HierarchicalSelector(cfg, store, seed=seed, needs_losses=True)
+    t_selector = time.perf_counter() - t0
+
+    rng = np.random.default_rng(seed)
+    t_rounds = []
+    resident = 0
+    for rnd in range(rounds):
+        t0 = time.perf_counter()
+        _, members = sel.begin_round(rnd)
+        # simulated poll: the loss vector only exists for the residents
+        member_losses = rng.random(len(members)).astype(np.float32)
+        losses = np.full(store.n_clients, -np.inf, np.float32)
+        losses[members] = member_losses
+        sel.observe(losses)
+        cohort = sel.select_cohort(member_losses, m=M_COHORT)
+        t_rounds.append(time.perf_counter() - t0)
+        resident = len(members)
+        assert len(cohort) == min(M_COHORT, resident)
+
+    rb = _row_bytes(n_feat, n_max)
+    return {
+        "K": K,
+        "mode": "selection-only",
+        "note": ("no training at this scale — selection loop + summaries "
+                 "only; losses simulated in place of the device poll"),
+        "n_shards": n_shards,
+        "shard_size": int(np.ceil(K / n_shards)),
+        "resident_clients_per_round": resident,
+        "shard_cluster_algo": ("optics" if n_shards <= 2048 else "kmedoids"),
+        "t_store_build_s": round(t_store, 3),
+        "t_selector_build_s": round(t_selector, 3),
+        "t_round_select_ms": round(float(np.mean(t_rounds)) * 1e3, 3),
+        # memory story: what a round moves to device vs what the flat
+        # engine keeps device-resident, and the dense-HD matrix neither
+        # side ever builds
+        "gather_mb_per_round": _mb((resident + M_COHORT) * rb),
+        "flat_full_stack_mb": _mb(K * rb),
+        "dense_hd_matrix_mb": _mb(K * K * 4.0),
+        "poll_bytes_per_round": int(resident * 4),
+        "flat_poll_bytes_per_round": int(K * 4),
+        "materialized_shards": len(store.materialized_shards()),
+    }
+
+
+def training_row(K: int, rounds: int, smoke: bool, seed: int = 0) -> dict:
+    """End-to-end engine cell at K = 10³: flat fedlecc vs hierarchical
+    population fedlecc on one synthetic task — accuracy parity is the
+    acceptance bar."""
+    from repro.data import make_classification
+    from repro.engine import FLConfig, make_engine
+
+    n = 32 * K
+    train = make_classification(n, n_features=64, n_classes=10, seed=seed)
+    test = make_classification(1000, n_features=64, n_classes=10,
+                               seed=seed + 1)
+    # finer shards than the selection-only geometry so residency is
+    # genuinely partial at K = 10³ (16 shards, 4 resident per round)
+    n_shards = max(8, K // 64)
+
+    def _cfg(population):
+        return FLConfig(
+            n_clients=K, m=M_COHORT, rounds=rounds, seed=seed,
+            strategy="fedlecc", strategy_kwargs={"J": 5},
+            hidden=(64,), eval_samples=8 if smoke else 16,
+            eval_every=max(rounds // 4, 1), target_hd=0.8,
+            batch_size=16, local_epochs=2, lr=0.05,
+            population=population,
+        )
+
+    out: dict = {"K": K, "mode": "train+selection", "rounds": rounds,
+                 "n_shards": n_shards}
+    for name, population in (
+        ("flat", None),
+        ("population", {"n_shards": n_shards,
+                        "shards_per_round": min(SHARDS_PER_ROUND, n_shards),
+                        "j_shards": J_SHARDS}),
+    ):
+        eng = make_engine(_cfg(population), train, test, n_classes=10)
+        t0 = time.perf_counter()
+        results = list(eng.rounds())
+        wall = time.perf_counter() - t0
+        evald = [r for r in results if r.test_acc is not None]
+        out[f"{name}_final_acc"] = round(evald[-1].test_acc, 4)
+        out[f"{name}_best_acc"] = round(max(r.test_acc for r in evald), 4)
+        out[f"{name}_comm_mb"] = round(results[-1].comm_mb, 3)
+        out[f"{name}_wall_s_per_round"] = round(wall / rounds, 3)
+        if population is not None:
+            members = eng._pop_members
+            rb = _row_bytes(64, int(eng._store._xs.shape[1]))
+            out["resident_clients_per_round"] = int(len(members))
+            out["gather_mb_per_round"] = _mb((len(members) + M_COHORT) * rb)
+            out["flat_full_stack_mb"] = _mb(K * rb)
+        print(f"[population] K={K} {name:<10s} "
+              f"acc={out[f'{name}_final_acc']:.3f} "
+              f"comm={out[f'{name}_comm_mb']:.1f}MB "
+              f"wall={out[f'{name}_wall_s_per_round']:.2f}s/rnd", flush=True)
+    out["acc_gap"] = round(
+        abs(out["flat_final_acc"] - out["population_final_acc"]), 4
+    )
+    return out
+
+
+def main(args) -> dict:
+    ks = (1_000, 10_000) if args.smoke else (1_000, 10_000, 100_000, 1_000_000)
+    rows = []
+    for K in ks:
+        if K <= 1_000:
+            rows.append(
+                training_row(K, rounds=args.train_rounds, smoke=args.smoke,
+                             seed=args.seed)
+            )
+            # the same K also gets a selection-only cell so the sweep's
+            # timing/memory columns are comparable across every K
+        rows.append(selection_row(K, rounds=args.select_rounds,
+                                  seed=args.seed))
+        r = rows[-1]
+        print(f"[population] K={K:>9,d} shards={r['n_shards']:>6d} "
+              f"select={r['t_round_select_ms']:8.3f}ms/rnd "
+              f"gather={r['gather_mb_per_round']:8.2f}MB "
+              f"(flat stack {r['flat_full_stack_mb']:11.1f}MB)", flush=True)
+
+    sel_rows = [r for r in rows if r["mode"] == "selection-only"]
+    k0, k1 = sel_rows[0], sel_rows[-1]
+    train_rows = [r for r in rows if r["mode"] == "train+selection"]
+    summary = {
+        # sub-linear selection: time grows far slower than K
+        "k_growth": round(k1["K"] / k0["K"], 1),
+        "select_time_growth": round(
+            k1["t_round_select_ms"] / max(k0["t_round_select_ms"], 1e-6), 1
+        ),
+        # flat device memory: per-round gather is constant across K
+        "gather_mb_min": min(r["gather_mb_per_round"] for r in sel_rows),
+        "gather_mb_max": max(r["gather_mb_per_round"] for r in sel_rows),
+        "acc_gap_at_1k": (train_rows[0]["acc_gap"] if train_rows else None),
+    }
+    payload = {
+        "bench": "population",
+        "smoke": bool(args.smoke),
+        "shard_size": SHARD_SIZE,
+        "shards_per_round": SHARDS_PER_ROUND,
+        "m": M_COHORT,
+        "rows": rows,
+        "summary": summary,
+    }
+    out = args.out or BENCH_JSON
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"[population] wrote {out}: select-time x"
+          f"{summary['select_time_growth']} over Kx{summary['k_growth']}, "
+          f"gather {summary['gather_mb_min']}-{summary['gather_mb_max']}MB, "
+          f"acc gap {summary['acc_gap_at_1k']}", flush=True)
+    return payload
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--smoke", action="store_true",
+                   help="K in {1e3, 1e4} with a short training run (CI)")
+    p.add_argument("--train-rounds", type=int, default=None)
+    p.add_argument("--select-rounds", type=int, default=None)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--out", default=None)
+    a = p.parse_args()
+    if a.train_rounds is None:
+        a.train_rounds = 12 if a.smoke else 30
+    if a.select_rounds is None:
+        a.select_rounds = 20 if a.smoke else 40
+    main(a)

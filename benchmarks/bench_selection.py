@@ -4,6 +4,12 @@ Times each server-side stage (HD matrix, OPTICS, Algorithm 1, baselines)
 at the paper's scales K ∈ {100, 250}.  All stages are O(K²) or better
 and sit in the microsecond-to-millisecond band — vanishingly small next
 to a training round.
+
+``--clients`` sweeps other population sizes instead (e.g.
+``--clients 1000 10000``): past 2048 clients the HD build switches to
+the blocked strip assembly and the clustering to on-demand k-medoids
+(``repro.population`` / DESIGN.md §15 — the dense matrix + OPTICS pair
+stops being the right tool there), and the rows say which path ran.
 """
 
 from __future__ import annotations
@@ -14,9 +20,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.clustering import extract_clusters, optics
-from repro.core.hellinger import hellinger_matrix
+from repro.core.clustering import extract_clusters, kmedoids_hists, optics
+from repro.core.hellinger import hellinger_blocked, hellinger_matrix
 from repro.core.selection import fedlecc_select, fedlecc_select_jax
+
+# past this K the dense-matrix + OPTICS pair gives way to the blocked /
+# k-medoids population path (matches repro.population.hierarchy)
+_DENSE_MAX_K = 2048
 
 
 def _time(fn, reps=20):
@@ -27,32 +37,55 @@ def _time(fn, reps=20):
     return (time.perf_counter() - t0) / reps * 1e6  # us
 
 
-def main(full: bool = False) -> list[tuple]:
+def main(full: bool = False, clients: list[int] | None = None) -> list[tuple]:
     rows = []
-    for K in (100, 250):
+    for K in (clients if clients else (100, 250)):
         rng = np.random.default_rng(K)
         hists = rng.dirichlet(np.ones(10) * 0.1, size=K)
-        h_j = jnp.asarray(hists)
+        reps = 20 if K <= 2048 else 3
 
-        t_hd = _time(lambda: jax.block_until_ready(hellinger_matrix(h_j)))
-        d = hellinger_matrix(h_j)
-        t_optics = _time(lambda: jax.block_until_ready(optics(d).reachability))
-        res = optics(d)
-        t_extract = _time(lambda: extract_clusters(res))
-        labels = extract_clusters(res)
+        if K <= _DENSE_MAX_K:
+            h_j = jnp.asarray(hists)
+            t_hd = _time(
+                lambda: jax.block_until_ready(hellinger_matrix(h_j)), reps
+            )
+            d = hellinger_matrix(h_j)
+            t_cluster = _time(
+                lambda: jax.block_until_ready(optics(d).reachability), reps
+            )
+            res = optics(d)
+            t_extract = _time(lambda: extract_clusters(res), reps)
+            labels = extract_clusters(res)
+            hd_name, clu_name = "hellinger", "optics"
+        else:
+            # population scale: the dense K² matrix never materializes —
+            # strips via hellinger_blocked, clusters via k-medoids over
+            # on-demand rows (DESIGN.md §15)
+            t_hd = _time(lambda: hellinger_blocked(hists, block=1024), reps)
+            k_clu = max(8, K // 64)
+            t_cluster = _time(
+                lambda: kmedoids_hists(hists, k=k_clu, seed=0, iters=5), reps
+            )
+            t_extract = 0.0
+            labels = kmedoids_hists(hists, k=k_clu, seed=0, iters=5)
+            hd_name, clu_name = "hellinger_blocked", "kmedoids"
+
         losses = rng.uniform(0.5, 3.0, K).astype(np.float32)
-        t_select = _time(lambda: fedlecc_select(labels, losses, m=10, J=5))
+        t_select = _time(lambda: fedlecc_select(labels, losses, m=10, J=5),
+                         reps)
         nclu = int(labels.max()) + 1
         lab_j, los_j = jnp.asarray(labels), jnp.asarray(losses)
         t_select_jax = _time(
             lambda: jax.block_until_ready(
                 fedlecc_select_jax(lab_j, los_j, m=10, J=min(5, nclu), n_clusters=nclu)
-            )
+            ),
+            reps,
         )
-        total = t_hd + t_optics + t_extract + t_select
+        total = t_hd + t_cluster + t_extract + t_select
         rows += [
-            (f"selection/hellinger_K{K}", round(t_hd, 1), f"K={K};C=10"),
-            (f"selection/optics_K{K}", round(t_optics, 1), f"clusters={nclu}"),
+            (f"selection/{hd_name}_K{K}", round(t_hd, 1), f"K={K};C=10"),
+            (f"selection/{clu_name}_K{K}", round(t_cluster, 1),
+             f"clusters={nclu}"),
             (f"selection/extract_K{K}", round(t_extract, 1), ""),
             (f"selection/algorithm1_K{K}", round(t_select, 1), "numpy"),
             (f"selection/algorithm1_jax_K{K}", round(t_select_jax, 1), "jit"),
@@ -63,5 +96,12 @@ def main(full: bool = False) -> list[tuple]:
 
 
 if __name__ == "__main__":
-    for r in main():
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--clients", type=int, nargs="+", default=None,
+                    help="population sizes to sweep instead of {100, 250}")
+    args = ap.parse_args()
+    for r in main(full=args.full, clients=args.clients):
         print(",".join(str(x) for x in r))

@@ -31,7 +31,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["OpticsResult", "optics", "extract_clusters", "cluster_label_histograms"]
+__all__ = [
+    "OpticsResult",
+    "optics",
+    "extract_clusters",
+    "cluster_label_histograms",
+    "kmedoids",
+    "kmedoids_hists",
+    "best_clustering",
+    "silhouette_score",
+]
 
 _INF = jnp.inf
 
@@ -136,10 +145,17 @@ def cluster_label_histograms(
     min_samples: int = 3,
     eps: float | str = "auto",
 ) -> tuple[np.ndarray, OpticsResult]:
-    """End-to-end: label histograms -> HD matrix -> OPTICS -> cluster labels."""
-    from repro.core.hellinger import hellinger_matrix
+    """End-to-end: label histograms -> HD matrix -> OPTICS -> cluster labels.
 
-    d = hellinger_matrix(jnp.asarray(hists))
+    The matrix is assembled strip-wise (``hellinger_blocked``): device
+    memory stays O(K·block) during the build, and the dense host matrix
+    warns past the configurable budget.  OPTICS itself still consumes
+    the full matrix — population-scale callers cluster shard *summaries*
+    instead (``repro.population``, DESIGN.md §15) or use
+    ``kmedoids_hists``, which never forms K² at all."""
+    from repro.core.hellinger import hellinger_blocked
+
+    d = jnp.asarray(hellinger_blocked(hists))
     res = optics(d, min_samples=min_samples)
     labels = extract_clusters(res, eps=eps)
     return labels, res
@@ -176,6 +192,54 @@ def kmedoids(dist: np.ndarray, k: int, seed: int = 0, iters: int = 25) -> np.nda
             break
         medoids = new
     return np.argmin(dist[:, medoids], axis=1).astype(np.int64)
+
+
+def kmedoids_hists(
+    hists: np.ndarray, k: int, seed: int = 0, iters: int = 25
+) -> np.ndarray:
+    """k-medoids over Hellinger distances computed *on demand* from the
+    histograms — O(K·k) memory, never forming the K x K matrix.
+
+    Same seeding as ``kmedoids`` (k-means++-style on squared distance to
+    the nearest chosen medoid), but every distance column comes from a
+    ``hellinger_rows`` strip against the current medoid panel.  One
+    documented deviation from PAM: the medoid update picks the member
+    nearest the cluster's *mean histogram* (O(|cluster|·C)) instead of
+    minimizing the within-cluster distance sum (O(|cluster|²)) — on
+    label-skew geometries the two agree (see tests), and it is what
+    keeps the whole procedure population-scalable.  This is the
+    clustering the population hierarchy falls back to when the shard
+    count itself is too large for OPTICS (DESIGN.md §15)."""
+    from repro.core.hellinger import hellinger_rows
+
+    h = np.asarray(hists, np.float32)
+    rng = np.random.default_rng(seed)
+    n = h.shape[0]
+    k = max(1, min(int(k), n))
+    medoids = [int(rng.integers(n))]
+    d_near = hellinger_rows(h[medoids[-1:]], h)[0].astype(np.float64)
+    for _ in range(k - 1):
+        p = d_near**2
+        p = p / p.sum() if p.sum() > 0 else np.full(n, 1.0 / n)
+        nxt = int(rng.choice(n, p=p))
+        medoids.append(nxt)
+        d_near = np.minimum(d_near, hellinger_rows(h[nxt : nxt + 1], h)[0])
+    med = np.array(medoids)
+    for _ in range(iters):
+        labels = np.argmin(hellinger_rows(h[med], h), axis=0)
+        new = med.copy()
+        for c in range(k):
+            members = np.where(labels == c)[0]
+            if members.size == 0:
+                continue
+            mean_h = h[members].mean(axis=0, keepdims=True)
+            new[c] = members[
+                int(np.argmin(hellinger_rows(mean_h, h[members])[0]))
+            ]
+        if np.array_equal(new, med):
+            break
+        med = new
+    return np.argmin(hellinger_rows(h[med], h), axis=0).astype(np.int64)
 
 
 def best_clustering(

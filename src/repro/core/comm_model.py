@@ -63,18 +63,25 @@ class CommModel:
         return (hist + assignments) / _MB
 
     def round_mb(self, m_selected: int, needs_losses: bool,
-                 m_uploaded: int | None = None) -> float:
+                 m_uploaded: int | None = None,
+                 n_polled: int | None = None) -> float:
         """Bytes of one round.  ``m_uploaded`` (default: ``m_selected``)
         counts the updates that actually arrived — under a systems
         deadline (``repro.systems``, DESIGN.md §10) dropped stragglers
-        paid the download but never completed the upload."""
+        paid the download but never completed the upload.  ``n_polled``
+        (default: ``K``) counts the clients the loss poll reached —
+        population mode (DESIGN.md §15) polls only the resident shards,
+        so the poll traffic scales with the cohort, not the
+        population."""
         if m_uploaded is None:
             m_uploaded = m_selected
+        if n_polled is None:
+            n_polled = self.K
         model_traffic = self.n_params * (
             m_selected * self.bytes_per_param
             + m_uploaded * self.upload_bytes_per_param
         )
-        loss_poll = self.K * 4 if needs_losses else 0
+        loss_poll = n_polled * 4 if needs_losses else 0
         return (model_traffic + loss_poll) / _MB
 
     def total_mb(

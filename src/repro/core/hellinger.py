@@ -15,14 +15,33 @@ matmul — which is what the Pallas kernel in ``repro.kernels.hellinger``
 tiles for the MXU.  This module is the framework-facing API; it routes to
 the pure-jnp implementation (always correct, used on CPU) and exists as
 the oracle the kernel is tested against.
+
+At population scale (``repro.population``, DESIGN.md §15) the dense
+K x K build is the memory wall: ``hellinger_blocked`` assembles the same
+matrix from (block, K) row strips — each strip is one device matmul (the
+Pallas strip kernel on TPU, a jitted lax matmul elsewhere) immediately
+copied to a host buffer, so peak *device* memory is O(K·block) instead
+of O(K²).  ``hellinger_rows`` is the strip primitive itself, exposed for
+consumers (blocked k-medoids) that never need the full matrix at all.
 """
 
 from __future__ import annotations
 
+import warnings
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-__all__ = ["hellinger_distance", "hellinger_matrix", "average_hd"]
+__all__ = [
+    "hellinger_distance",
+    "hellinger_matrix",
+    "hellinger_rows",
+    "hellinger_blocked",
+    "average_hd",
+    "dense_budget_bytes",
+    "set_dense_budget_bytes",
+]
 
 
 def _normalize(h: jax.Array, axis: int = -1) -> jax.Array:
@@ -54,6 +73,131 @@ def hellinger_matrix(hists: jax.Array) -> jax.Array:
     d = jnp.sqrt(jnp.clip(1.0 - bc, 0.0, 1.0))
     # Exact zeros on the diagonal (numerical noise otherwise).
     return d * (1.0 - jnp.eye(h.shape[0], dtype=d.dtype))
+
+
+# ---------------------------------------------------------------- blocked
+# Memory guard: consumers that materialize the dense K x K float32 matrix
+# (host-side) warn past this budget so a population-scale K does not
+# silently eat the server's RAM.  Configurable because benchmarks probe
+# above it deliberately.
+_DENSE_BUDGET_BYTES = 1 << 30  # 1 GiB ≈ K = 16384
+
+
+def dense_budget_bytes() -> int:
+    """The current dense-matrix warning budget in bytes."""
+    return _DENSE_BUDGET_BYTES
+
+
+def set_dense_budget_bytes(n_bytes: int) -> int:
+    """Set the dense-matrix warning budget; returns the previous value."""
+    global _DENSE_BUDGET_BYTES
+    if int(n_bytes) < 1:
+        raise ValueError(f"dense budget must be >= 1 byte, got {n_bytes}")
+    old = _DENSE_BUDGET_BYTES
+    _DENSE_BUDGET_BYTES = int(n_bytes)
+    return old
+
+
+def _warn_if_over_budget(k: int, budget_bytes: int | None) -> None:
+    budget = _DENSE_BUDGET_BYTES if budget_bytes is None else int(budget_bytes)
+    need = k * k * 4
+    if need > budget:
+        warnings.warn(
+            f"dense {k}x{k} Hellinger matrix needs {need / 2**20:.0f} MiB "
+            f"(budget {budget / 2**20:.0f} MiB) — at this population scale "
+            f"prefer shard-level clustering (repro.population, DESIGN.md "
+            f"§15) or raise the budget via "
+            f"repro.core.hellinger.set_dense_budget_bytes",
+            ResourceWarning,
+            stacklevel=3,
+        )
+
+
+def _strip(rb: jax.Array, r: jax.Array) -> jax.Array:
+    """(B, C) x (K, C) *sqrt-histogram* panels → (B, K) HD strip."""
+    bc = rb @ r.T
+    return jnp.sqrt(jnp.clip(1.0 - bc, 0.0, 1.0))
+
+
+_strip_jit = jax.jit(_strip, donate_argnums=())
+
+
+def _sqrt_rows(hists: np.ndarray) -> np.ndarray:
+    h = np.asarray(hists, np.float32)
+    h = h / np.maximum(h.sum(axis=-1, keepdims=True), 1e-12)
+    return np.sqrt(h)
+
+
+def hellinger_rows(rows, hists) -> np.ndarray:
+    """HD between each of B query histograms and all K histograms.
+
+    Args:
+      rows:  (B, C) histograms (normalized internally).
+      hists: (K, C) histograms.
+
+    Returns:
+      (B, K) float32 distance strip (no diagonal treatment — callers
+      assembling a square matrix zero it themselves).  This is the
+      O(K·B)-memory primitive behind ``hellinger_blocked`` and the
+      blocked k-medoids in ``repro.core.clustering``.
+    """
+    rb = jnp.asarray(_sqrt_rows(np.atleast_2d(rows)))
+    r = jnp.asarray(_sqrt_rows(hists))
+    return np.asarray(_strip_jit(rb, r))
+
+
+def hellinger_blocked(
+    hists,
+    block: int = 4096,
+    *,
+    use_kernel: bool | str = "auto",
+    budget_bytes: int | None = None,
+) -> np.ndarray:
+    """Pairwise K x K Hellinger matrix assembled from (block, K) strips.
+
+    Numerically the same matrix as ``hellinger_matrix`` (each entry is
+    the identical sqrt-clip of a row inner product; the regression test
+    pins ``allclose``), but peak *device* memory is O(K·block): each
+    strip is one matmul on device, copied straight into the host output
+    buffer.  ``use_kernel`` picks the strip backend — ``"auto"`` uses the
+    Pallas MXU kernel on TPU and the jitted lax matmul elsewhere;
+    ``True`` forces the Pallas path (interpret mode off-TPU, for tests);
+    ``False`` forces the lax fallback.
+
+    The K x K float32 *host* result still gets allocated; past the
+    configurable dense budget (``set_dense_budget_bytes``) a
+    ``ResourceWarning`` points at shard-level clustering instead
+    (``repro.population``, DESIGN.md §15).
+    """
+    h = np.atleast_2d(np.asarray(hists, np.float32))
+    k = h.shape[0]
+    if block < 1:
+        raise ValueError(f"block must be >= 1, got {block}")
+    _warn_if_over_budget(k, budget_bytes)
+    r_host = _sqrt_rows(h)
+    r = jnp.asarray(r_host)
+
+    if use_kernel == "auto":
+        on_tpu = jax.default_backend() == "tpu"
+        kernel, interpret = on_tpu, False
+    elif use_kernel:
+        kernel, interpret = True, jax.default_backend() != "tpu"
+    else:
+        kernel, interpret = False, False
+    if kernel:
+        from repro.kernels.hellinger.ops import hellinger_strip_pallas
+
+    out = np.empty((k, k), np.float32)
+    for i0 in range(0, k, block):
+        i1 = min(i0 + block, k)
+        rb = r[i0:i1]
+        if kernel:
+            strip = hellinger_strip_pallas(rb, r, interpret=interpret)
+        else:
+            strip = _strip_jit(rb, r)
+        out[i0:i1] = np.asarray(strip)
+    np.fill_diagonal(out, 0.0)
+    return out
 
 
 def average_hd(hists: jax.Array) -> jax.Array:

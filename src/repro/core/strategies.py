@@ -69,7 +69,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.clustering import cluster_label_histograms
-from repro.core.hellinger import hellinger_matrix
+from repro.core.hellinger import hellinger_blocked
 from repro.core.selection import fedlecc_select, fedlecc_select_jax
 from repro.engine.registry import STRATEGY_REGISTRY, register_strategy
 
@@ -235,7 +235,9 @@ class FedLECC(SelectionStrategy):
         if self.cluster == "auto":
             from repro.core.clustering import best_clustering
 
-            d = np.asarray(hellinger_matrix(np.asarray(hists)))
+            # blocked build: O(K·block) device memory, and the dense
+            # host matrix warns past the configurable budget (§15)
+            d = hellinger_blocked(np.asarray(hists))
             self.labels, self.cluster_method = best_clustering(
                 d, min_samples=self.min_samples, seed=seed
             )
@@ -579,7 +581,7 @@ class FedCor(SelectionStrategy):
 
     def setup(self, hists, client_sizes, seed: int = 0, latency=None) -> None:
         super().setup(hists, client_sizes, seed, latency=latency)
-        d = np.asarray(hellinger_matrix(np.asarray(hists)))
+        d = hellinger_blocked(np.asarray(hists))
         self.Kmat = np.exp(-(d**2) / (2 * self.length_scale**2))
 
     def select(self, rnd, losses, rng) -> np.ndarray:

@@ -74,6 +74,15 @@ aggregators (``trimmed_mean`` / ``coordinate_median``), and the
 (eager, fused, and async); ``faults=None`` is bit-identical to an
 engine without the subsystem.
 
+The population axis (``FLConfig.population``, ``repro.population``,
+DESIGN.md §15) scales the host/compiled engines to cross-device client
+counts: the packed client stacks stay host-side behind a
+``ClientStore``, a shard-level Algorithm 1 (``HierarchicalSelector``)
+picks the round's resident shards, and only resident rows are ever
+polled, gathered to device, or charged to the comm ledger — per-round
+cost becomes cohort-proportional.  ``PopulationConfig(n_shards=1)`` (and
+``population=None``) are bit-identical to the flat engines.
+
 The systems axis (``FLConfig.systems``, ``repro.systems``, DESIGN.md
 §10) is orthogonal to all of the above: a ``SystemsConfig`` adds device
 profiles, an availability trace, simulated wall-clock per round
@@ -157,6 +166,7 @@ __all__ = [
     "register_preset",
     "make_engine",
     "SystemsConfig",
+    "PopulationConfig",
     "FaultConfig",
     "AsyncConfig",
     "AsyncHostEngine",
@@ -180,6 +190,7 @@ _LAZY = {
     "ScaleoutEngine": ("repro.engine.scaleout", "ScaleoutEngine"),
     "make_scaleout_round": ("repro.engine.scaleout", "make_scaleout_round"),
     "SystemsConfig": ("repro.systems.config", "SystemsConfig"),
+    "PopulationConfig": ("repro.population.config", "PopulationConfig"),
     "FaultConfig": ("repro.faults.config", "FaultConfig"),
     "AsyncConfig": ("repro.engine.async_config", "AsyncConfig"),
     "AsyncHostEngine": ("repro.engine.async_engine", "AsyncHostEngine"),

@@ -108,7 +108,10 @@ class RoundResult:
     - ``metrics``            — optional task-defined extra evaluation
       metrics (e.g. the LM task's held-out perplexity, total and per
       topic cluster); ``None`` on unevaluated rounds and for tasks
-      without extras.
+      without extras.  Energy-tracking runs (``SystemsConfig.
+      track_energy``, ROADMAP (q)) additionally carry the round's
+      cohort battery spend (``energy_mah`` / ``energy_total_mah`` /
+      ``n_depleted``) here on *every* round.
     - ``staleness``          — mean staleness (in params versions) of
       the updates aggregated this round.  Always 0.0 on the lock-step
       engines (every update trains against the current params); > 0
@@ -207,10 +210,28 @@ class Engine:
             )
         self.hists = self.task.client_features(train, self.client_idx, n_classes)
         xs, ys, mask = pack_clients(train.x, train.y, self.client_idx)
-        self.xs, self.ys, self.mask = (
-            jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(mask),
-        )
         self.sizes = np.array([len(ix) for ix in self.client_idx])
+        # --- population axis (DESIGN.md §15): with a PopulationConfig the
+        # packed stacks stay *host-side* behind a ClientStore — only the
+        # rows a round actually touches (the resident shards' poll subset
+        # and the dispatched cohort) are ever device-put, so per-round
+        # device memory is cohort-proportional.  None = today's
+        # device-resident stacks, bit-identical.
+        self._store: Any = None       # ClientStore in population mode
+        self._population: Any = None  # HierarchicalSelector (built below,
+        #                               after the strategy fixes needs_losses)
+        if cfg.population is not None:
+            from repro.population.store import InMemoryStore
+
+            self._store = InMemoryStore(
+                xs, ys, mask, self.sizes, np.asarray(self.hists),
+                n_shards=cfg.population.n_shards,
+            )
+            self.xs = self.ys = self.mask = None
+        else:
+            self.xs, self.ys, self.mask = (
+                jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(mask),
+            )
         self.test_x, self.test_y = jnp.asarray(test.x), jnp.asarray(test.y)
         self._train_data = train  # handed to the task when building fns
         self._test_data = test    # handed to the task for extra eval metrics
@@ -261,6 +282,30 @@ class Engine:
         else:
             self.strategy.setup(self.hists, self.sizes, seed=cfg.seed,
                                 latency=self._systems.latency_hint())
+        # --- hierarchical shard selection (population mode): built after
+        # the strategy so ``needs_losses`` decides whether shards rank by
+        # running loss estimates or by the dedicated loss-blind stream ---
+        if cfg.population is not None:
+            from repro.population.hierarchy import HierarchicalSelector
+
+            self._population = HierarchicalSelector(
+                cfg.population, self._store, seed=cfg.seed,
+                needs_losses=self.strategy.needs_losses,
+            )
+            shard_sizes = np.sort([
+                len(self._store.shard_members(s))
+                for s in range(cfg.population.n_shards)
+            ])
+            worst = int(shard_sizes[:cfg.population.shards_per_round].sum())
+            if worst < self.m_eff:
+                raise ValueError(
+                    f"population.shards_per_round="
+                    f"{cfg.population.shards_per_round} resident shards can "
+                    f"hold as few as {worst} clients but the round needs "
+                    f"m_eff={self.m_eff} — raise shards_per_round or lower "
+                    f"n_shards/m"
+                )
+        self._pop_members: np.ndarray | None = None  # set per round
         self.aggregator = get_aggregator(cfg.aggregator, cfg)
         self.agg_state = self.aggregator.init_state(self.params)
         self.client_mode = get_client_mode(cfg.client_mode)
@@ -334,6 +379,30 @@ class Engine:
 
         self._poll_losses = jax.jit(_poll_losses, donate_argnums=())
 
+        if cfg.population is not None:
+            K = cfg.n_clients
+
+            def _poll_subset(params, xs, ys, mask, members, key):
+                """The flat poll restricted to the resident members.
+                Per-client subsample keys come from the *same* K-way
+                split ``_poll_losses`` performs, indexed by global client
+                id, so with one shard (members = arange(K)) this
+                reproduces the flat poll bit for bit."""
+
+                def one(x, y, m, k):
+                    n = x.shape[0]
+                    p = m / jnp.maximum(m.sum(), 1e-9)
+                    idx = jax.random.choice(
+                        k, n, shape=(cfg.eval_samples,), p=p
+                    )
+                    out = apply_fn(params, jnp.take(x, idx, axis=0))
+                    return loss_fn(out, jnp.take(y, idx, axis=0), None)
+
+                keys = jnp.take(jax.random.split(key, K), members, axis=0)
+                return jax.vmap(one)(xs, ys, mask, keys)
+
+            self._poll_subset = jax.jit(_poll_subset, donate_argnums=())
+
         def _evaluate(params, x, y):
             out = apply_fn(params, x)
             return loss_fn(out, y, None), metric_fn(out, y)
@@ -358,7 +427,22 @@ class Engine:
 
     # -- hooks (backend contract) --------------------------------------
     def poll_losses(self, rnd: int, key: jax.Array) -> np.ndarray:
-        """(K,) polled losses — zeros when the strategy never polls."""
+        """(K,) polled losses — zeros when the strategy never polls.
+        Population mode polls only the round's resident members (the
+        others stay 0 here and are ``-inf``-gated before selection)."""
+        if self._population is not None:
+            out = np.zeros(self.cfg.n_clients, np.float32)
+            if self.strategy.needs_losses:
+                members = self._pop_members
+                assert members is not None, "poll before begin_round"
+                xs, ys, mask = self._store.gather(members)
+                out[members] = np.asarray(
+                    self._poll_subset(
+                        self.params, xs, ys, mask,
+                        jnp.asarray(members), key,
+                    )
+                )
+            return out
         if self.strategy.needs_losses:
             return np.asarray(
                 self._poll_losses(self.params, self.xs, self.ys, self.mask, key)
@@ -542,10 +626,15 @@ class Engine:
         so ``restore`` can rebuild the ``like`` skeleton before the
         arrays load).  The base contribution is the fault-axis
         ``ClientHealth`` ledger, so kill-and-resume mid-quarantine is
-        bit-identical (DESIGN.md §14.3)."""
+        bit-identical (DESIGN.md §14.3) — plus the population axis's
+        shard loss estimates (DESIGN.md §15), the hierarchy's only
+        cross-round state."""
+        meta: dict[str, Any] = {}
         if self._faults is not None:
-            return {"faults": self._faults.meta_state()}
-        return {}
+            meta["faults"] = self._faults.meta_state()
+        if self._population is not None:
+            meta["population"] = self._population.state_dict()
+        return meta
 
     def restore(self, path: str) -> dict:
         """Install a checkpoint written by ``save`` into this engine.
@@ -604,6 +693,8 @@ class Engine:
             self._faults.load_meta_state(meta["faults"])
             if self._faults.has_stale:
                 self._faults.load_stale_state(state["fault_stale"])
+        if self._population is not None:
+            self._population.load_state_dict(meta["population"])
 
     # -- per-round emission (history / trackers / checkpoints) ----------
     def _record_history(self, r: RoundResult) -> None:
@@ -675,10 +766,22 @@ class Engine:
         for rnd in range(start, start + n_rounds):
             key, k_poll, k_train = jax.random.split(key, 3)
 
+            # population mode (DESIGN.md §15): pick the round's resident
+            # shards first — they bound what gets polled and gathered
+            pop_gate = None
+            if self._population is not None:
+                _, self._pop_members = self._population.begin_round(rnd)
+                pop_gate = self._population.resident_mask()
+
             losses = self.poll_losses(rnd, k_poll)
-            # admission gate (DESIGN.md §10/§14): offline or quarantined
-            # clients enter every selection path as -inf before select
-            losses = self._gated_losses(rnd, losses)
+            if self._population is not None:
+                # fold raw polled member losses into the shard estimates
+                # *before* any gating zeroes them out
+                self._population.observe(losses)
+            # admission gate (DESIGN.md §10/§14/§15): offline,
+            # quarantined, or non-resident clients enter every selection
+            # path as -inf before select
+            losses = self._gated_losses(rnd, losses, extra_gate=pop_gate)
             sel = np.asarray(self.select(rnd, losses))
 
             # deadline / availability outcome of the dispatched cohort:
@@ -739,21 +842,33 @@ class Engine:
             else:
                 self.aggregate(rnd, sel, payload)
 
+            # population mode polls only the resident members; everyone
+            # else is free on the ledger too
+            n_polled = (
+                None if self._pop_members is None else len(self._pop_members)
+            )
             if self._systems is not None or self._faults is not None:
                 # the server observes survivor losses only
                 keep = np.isin(sel, surv)
                 mean_loss = _mean_loss(np.asarray(sel_losses)[keep])
                 self.comm_mb += self.comm.round_mb(
                     n_reached, self.strategy.needs_losses,
-                    m_uploaded=uploaded,
+                    m_uploaded=uploaded, n_polled=n_polled,
                 )
             else:
                 mean_loss = _mean_loss(sel_losses)
                 self.comm_mb += self.comm.round_mb(
-                    len(sel), self.strategy.needs_losses
+                    len(sel), self.strategy.needs_losses, n_polled=n_polled,
                 )
             if self._systems is not None:
                 self.sim_clock += sim_time
+
+            # energy ledger (ROADMAP (q)): the dispatched-and-online
+            # cohort spends its local-training charge; reported every
+            # round (not just evaluated ones) via RoundResult.metrics
+            energy = None
+            if self._systems is not None and self._systems.tracks_energy:
+                energy = self._systems.spend_energy(rnd, sel)
 
             test_loss = test_acc = metrics = None
             # absolute cadence keyed to the *configured* terminal round,
@@ -763,6 +878,8 @@ class Engine:
             if rnd % cfg.eval_every == 0 or rnd == cfg.rounds - 1:
                 test_loss, test_acc = self.evaluate()
                 metrics = self.eval_metrics()
+            if energy is not None:
+                metrics = {**(metrics or {}), **energy}
 
             self._round = rnd + 1
             self._key = key

@@ -71,6 +71,13 @@ class CompiledEngine(MaskSelectionMixin, Engine):
                          partition_labels=partition_labels)
         self._check_mask_backend()
         self.cohort_gather = bool(cohort_gather)
+        if cfg.population is not None and not self.cohort_gather:
+            raise ValueError(
+                "FLConfig.population keeps the client stacks host-side, so "
+                "the legacy every-client-trains path (cohort_gather=False) "
+                "has nothing device-resident to train on — use "
+                "cohort_gather=True or set population=None"
+            )
         self._taus_j = jnp.asarray(self.taus)
         self._sizes_j = jnp.asarray(self.sizes, jnp.float32)
         self._build_compiled_jits()
@@ -115,6 +122,18 @@ class CompiledEngine(MaskSelectionMixin, Engine):
         self._cohort_train_raw = _cohort_train
         self._train_cohort = jax.jit(_cohort_train, donate_argnums=())
 
+        def _train_gathered(params, xs, ys, mask, taus, idx, key):
+            """Population mode (DESIGN.md §15): the cohort stacks arrive
+            from the host-side ClientStore instead of the device-resident
+            all-K stacks ``_cohort_train`` closes over.  Keys still
+            derive *inside* the jit by global client index, exactly like
+            ``_cohort_train``, so the same cohort trains bit-identically
+            either way."""
+            keys = self._client_keys(key, idx)
+            return vmapped(params, xs, ys, mask, taus, keys)
+
+        self._train_gathered = jax.jit(_train_gathered, donate_argnums=())
+
         def _masked_weights(mask):
             return selection_weights(mask, self._sizes_j)
 
@@ -142,6 +161,14 @@ class CompiledEngine(MaskSelectionMixin, Engine):
         del survivors  # static-shape cohort always trains; drops are zeroed
         if self.cfg.compress_bits:
             self._qkey = self._quant_key(key, self.cfg.n_clients)
+        if self._population is not None:
+            xs, ys, mask = self._store.gather(sel)
+            stacked, losses = self._train_gathered(
+                self.params, xs, ys, mask,
+                jnp.asarray(self.taus[sel]),
+                jnp.asarray(sel, jnp.int32), key,
+            )
+            return stacked, np.asarray(losses)
         if self.cohort_gather:
             stacked, losses = self._train_cohort(
                 self.params, jnp.asarray(sel, jnp.int32), key

@@ -145,6 +145,49 @@ def stale_fused_error() -> str:
     )
 
 
+def population_backend_error(backend: str) -> str:
+    return (
+        "FLConfig.population gathers per-round cohorts from a host-side "
+        "client store (DESIGN.md §15), which the mesh-resident scaleout "
+        f"round cannot consult; backend={backend!r} has no store seam — "
+        "use backend='host' or 'compiled', or set population=None"
+    )
+
+
+def population_fused_error() -> str:
+    return (
+        "FLConfig.population picks resident shards host-side each round "
+        "(the shard-level Algorithm 1), which the fused scan chunk cannot "
+        "consult mid-scan; set fuse_rounds=0 or population=None"
+    )
+
+
+def population_async_error() -> str:
+    return (
+        "FLConfig.population assumes the lock-step round loop (resident "
+        "shards are chosen per aggregation round); the async runtime's "
+        "event clock has no round-resident notion yet — set "
+        "async_mode=None or population=None"
+    )
+
+
+def population_client_mode_error(client_mode: str) -> str:
+    return (
+        "FLConfig.population keeps per-round state cohort-proportional; "
+        f"client_mode={client_mode!r} carries a per-client params-shaped "
+        "state array (O(K·P), population-proportional by construction) — "
+        "use client_mode='plain' or set population=None"
+    )
+
+
+def energy_mode_error(what: str) -> str:
+    return (
+        "SystemsConfig.track_energy accounts battery spend from each "
+        "round's dispatched cohort on the host-side round loop, which "
+        f"{what} cannot consult; disable track_energy or drop {what}"
+    )
+
+
 @dataclass
 class FLConfig:
     n_clients: int = 100
@@ -179,6 +222,7 @@ class FLConfig:
     systems: Any = None  # SystemsConfig | dict | None (repro.systems)
     async_mode: Any = None  # AsyncConfig | dict | None (DESIGN.md §13)
     faults: Any = None  # FaultConfig | dict | None (DESIGN.md §14)
+    population: Any = None  # PopulationConfig | dict | None (DESIGN.md §15)
 
     # ------------------------------------------------------------------
     def __post_init__(self) -> None:
@@ -335,6 +379,44 @@ class FLConfig:
                 raise ValueError(faults_backend_error(self.backend))
             if self.fuse_rounds > 0 and "stale_replay" in self.faults.models:
                 raise ValueError(stale_fused_error())
+        # Population axis (DESIGN.md §15): normalize the dict form to a
+        # validated PopulationConfig, then cross-check — the client store
+        # and the per-round resident-shard pick live on the host round
+        # loop, so the mesh, fused-scan, and async execution modes reject
+        # the axis up front (the same shape as the fault axis).
+        if self.population is not None:
+            from repro.population.config import PopulationConfig
+
+            if isinstance(self.population, dict):
+                self.population = PopulationConfig.from_dict(self.population)
+            elif not isinstance(self.population, PopulationConfig):
+                raise ValueError(
+                    f"population must be a PopulationConfig, its dict form, "
+                    f"or None; got {type(self.population).__name__}"
+                )
+            if self.backend not in ("host", "compiled"):
+                raise ValueError(population_backend_error(self.backend))
+            if self.fuse_rounds > 0:
+                raise ValueError(population_fused_error())
+            if self.async_mode is not None:
+                raise ValueError(population_async_error())
+            if self.client_mode != "plain":
+                raise ValueError(
+                    population_client_mode_error(self.client_mode)
+                )
+            if self.population.n_shards > self.n_clients:
+                raise ValueError(
+                    f"population.n_shards={self.population.n_shards} "
+                    f"exceeds n_clients={self.n_clients}"
+                )
+        # Energy accounting (ROADMAP (q)) rides the systems axis; its
+        # battery ledger is selection-dependent cross-round state the
+        # fused scan and the async event loop cannot carry.
+        if self.systems is not None and self.systems.track_energy:
+            if self.fuse_rounds > 0:
+                raise ValueError(energy_mode_error("fuse_rounds > 0"))
+            if self.async_mode is not None:
+                raise ValueError(energy_mode_error("async_mode"))
 
     # ------------------------------------------------------------------
     def to_dict(self) -> dict:

@@ -63,9 +63,15 @@ class HostEngine(Engine):
             if self.client_mode.needs_h
             else None
         )
+        if self._population is not None:
+            # population mode (DESIGN.md §15): cohort rows come from the
+            # host-side ClientStore — same values the device gather
+            # would produce, so the round is bit-identical
+            xs, ys, mask = self._store.gather(sel)
+        else:
+            xs, ys, mask = self.xs[sel_j], self.ys[sel_j], self.mask[sel_j]
         stacked, local_losses = self._round_train(
-            self.params,
-            self.xs[sel_j], self.ys[sel_j], self.mask[sel_j],
+            self.params, xs, ys, mask,
             jnp.asarray(self.taus[sel]), keys, h_sel,
         )
         return (stacked, h_sel), np.asarray(local_losses)

@@ -71,6 +71,10 @@ class ScaleoutEngine(MaskSelectionMixin, Engine):
                 f"({self.n_pods}) so clients block evenly over pods"
             )
         self._sizes_j = jnp.asarray(self.sizes, jnp.float32)
+        # aggregate() installs host (device_get) params every round; start
+        # from host params too, or the round-0 poll/evaluate compile for a
+        # committed single-device Array and round 1 retraces for numpy
+        self.params = jax.device_get(self.params)
         self._build_scaleout_round()
 
     @staticmethod

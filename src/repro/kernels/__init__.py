@@ -18,12 +18,16 @@ the pjit scale-out path uses the pure-JAX equivalents (Pallas does not
 lower to the XLA CPU backend used by the dry-run).
 """
 
-from repro.kernels.hellinger.ops import hellinger_matrix_pallas
+from repro.kernels.hellinger.ops import (
+    hellinger_matrix_pallas,
+    hellinger_strip_pallas,
+)
 from repro.kernels.flash_attention.ops import flash_attention_pallas
 from repro.kernels.aggregate.ops import masked_weighted_sum_pallas
 
 __all__ = [
     "hellinger_matrix_pallas",
+    "hellinger_strip_pallas",
     "flash_attention_pallas",
     "masked_weighted_sum_pallas",
 ]

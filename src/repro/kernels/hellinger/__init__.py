@@ -1,3 +1,6 @@
-from repro.kernels.hellinger.ops import hellinger_matrix_pallas
+from repro.kernels.hellinger.ops import (
+    hellinger_matrix_pallas,
+    hellinger_strip_pallas,
+)
 
-__all__ = ["hellinger_matrix_pallas"]
+__all__ = ["hellinger_matrix_pallas", "hellinger_strip_pallas"]

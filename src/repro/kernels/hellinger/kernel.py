@@ -32,8 +32,20 @@ def _hellinger_tile(r_i_ref, r_j_ref, out_ref):
 
 def hellinger_kernel(r: jax.Array, interpret: bool = False) -> jax.Array:
     """r: (K, C) sqrt-histograms, K % BK == 0, C % 128 == 0 (ops.py pads)."""
-    k, c = r.shape
-    grid = (k // BK, k // BK)
+    return hellinger_strip_kernel(r, r, interpret=interpret)
+
+
+def hellinger_strip_kernel(
+    rb: jax.Array, r: jax.Array, interpret: bool = False
+) -> jax.Array:
+    """Rectangular strip of the HD matrix: (B, C) query panel against the
+    (K, C) full panel → (B, K).  The square kernel is the B = K special
+    case; the blocked driver (``core.hellinger.hellinger_blocked``) feeds
+    row strips here so only O(B·K) of the matrix exists on device at
+    once.  B, K % BK == 0 and C % 128 == 0 (ops.py pads)."""
+    b, c = rb.shape
+    k = r.shape[0]
+    grid = (b // BK, k // BK)
     return pl.pallas_call(
         _hellinger_tile,
         grid=grid,
@@ -42,6 +54,6 @@ def hellinger_kernel(r: jax.Array, interpret: bool = False) -> jax.Array:
             pl.BlockSpec((BK, c), lambda i, j: (j, 0)),
         ],
         out_specs=pl.BlockSpec((BK, BK), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((k, k), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
         interpret=interpret,
-    )(r, r)
+    )(rb, r)

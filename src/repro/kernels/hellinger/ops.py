@@ -7,9 +7,13 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.hellinger.kernel import BK, hellinger_kernel
+from repro.kernels.hellinger.kernel import (
+    BK,
+    hellinger_kernel,
+    hellinger_strip_kernel,
+)
 
-__all__ = ["hellinger_matrix_pallas"]
+__all__ = ["hellinger_matrix_pallas", "hellinger_strip_pallas"]
 
 
 def _pad_to(x: jax.Array, m: int, axis: int) -> jax.Array:
@@ -36,3 +40,24 @@ def hellinger_matrix_pallas(hists: jax.Array, interpret: bool = False) -> jax.Ar
     r = _pad_to(_pad_to(r, BK, 0), 128, 1)
     d = hellinger_kernel(r, interpret=interpret)[:k, :k]
     return d * (1.0 - jnp.eye(k, dtype=d.dtype))
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def hellinger_strip_pallas(
+    r_block: jax.Array, r: jax.Array, interpret: bool = False
+) -> jax.Array:
+    """(B, C) x (K, C) *sqrt-histogram* panels → (B, K) HD strip.
+
+    Unlike ``hellinger_matrix_pallas`` the inputs arrive pre-normalized
+    and pre-sqrt'd: the blocked driver (``core.hellinger``) prepares the
+    full panel once and reuses it for every strip, so redoing the
+    prologue here would multiply that cost by K/block.  Padded rows are
+    sliced away; padded classes contribute nothing to the inner product.
+    No diagonal fix — strips are off-diagonal in general, the caller
+    assembling a square matrix owns its diagonal."""
+    rb = jnp.asarray(r_block, jnp.float32)
+    rf = jnp.asarray(r, jnp.float32)
+    b, k = rb.shape[0], rf.shape[0]
+    rb = _pad_to(_pad_to(rb, BK, 0), 128, 1)
+    rf = _pad_to(_pad_to(rf, BK, 0), 128, 1)
+    return hellinger_strip_kernel(rb, rf, interpret=interpret)[:b, :k]

@@ -1,0 +1,52 @@
+"""``repro.population`` — population-scale federated learning
+(DESIGN.md §15).
+
+Makes per-round cost *cohort*-proportional instead of
+population-proportional, so the cross-device setting FedLECC is pitched
+at (K up to 10⁶) is actually runnable:
+
+- ``store``     — ``ClientStore`` protocol + ``InMemoryStore`` /
+  ``ShardedStore``: client data lives host-side or is synthesized shard
+  by shard; only polled / dispatched rows are ever device-put.
+- ``hierarchy`` — ``HierarchicalSelector``: the paper's Algorithm 1
+  applied one level up (shards clustered by summary histogram, ranked
+  by mean polled loss) to pick the round's *resident* shards; the
+  registered strategy then selects inside them unchanged.
+- ``config``    — ``PopulationConfig``, the validated JSON-safe slot
+  behind ``FLConfig.population``.
+
+The blocked Hellinger build backing the clustering at scale lives in
+``repro.core.hellinger`` (``hellinger_blocked`` / ``hellinger_rows``).
+"""
+
+from repro.population.config import PopulationConfig
+from repro.population.hierarchy import (
+    POPULATION_SELECT_STREAM,
+    HierarchicalSelector,
+)
+from repro.population.store import (
+    POPULATION_DATA_STREAM,
+    ClientStore,
+    InMemoryStore,
+    ShardData,
+    ShardedStore,
+    ShardLoader,
+    SyntheticShardLoader,
+    materialize_store,
+    shard_layout,
+)
+
+__all__ = [
+    "PopulationConfig",
+    "HierarchicalSelector",
+    "ClientStore",
+    "InMemoryStore",
+    "ShardedStore",
+    "ShardData",
+    "ShardLoader",
+    "SyntheticShardLoader",
+    "materialize_store",
+    "shard_layout",
+    "POPULATION_DATA_STREAM",
+    "POPULATION_SELECT_STREAM",
+]

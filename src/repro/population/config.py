@@ -1,0 +1,69 @@
+"""``PopulationConfig`` — the validated, JSON-safe slot behind
+``FLConfig.population`` (DESIGN.md §15).
+
+Like the systems / async / fault axes, everything here must survive
+``FLConfig.to_dict()`` / ``from_dict`` round-tripping, so the fields are
+plain scalars; the heavyweight runtime objects (the client store, the
+shard hierarchy) are built at engine construction.
+
+The axis makes per-round cost *cohort*-proportional: the population is
+partitioned into ``n_shards`` contiguous shards, each round materializes
+only ``shards_per_round`` of them (the *resident* set, picked by the
+shard-level Algorithm 1 in ``repro.population.hierarchy``), and the
+strategy's usual selection runs inside the resident set.  ``n_shards=1``
+with ``shards_per_round=1`` keeps every client resident every round and
+is bit-identical to the flat engine (the conformance cells pin this).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, fields
+
+__all__ = ["PopulationConfig"]
+
+
+@dataclass
+class PopulationConfig:
+    """The population-scale axis of one federated experiment.
+
+    - ``n_shards`` — contiguous, near-equal shards the K clients are
+      split into (``np.array_split`` layout, owned by the store).
+    - ``shards_per_round`` — shards resident per round; per-round
+      polling, gathering, and training touch only their members.
+    - ``j_shards`` — Algorithm 1's J at the *shard* level: shards are
+      clustered by summary histogram, shard clusters ranked by mean
+      estimated loss, and the resident set drawn from the top
+      ``j_shards`` clusters (backfilling like the client-level rule).
+    - ``min_samples`` — OPTICS ``min_samples`` for the shard-summary
+      clustering (clamped to the shard count).
+    """
+
+    n_shards: int = 1
+    shards_per_round: int = 1
+    j_shards: int = 3
+    min_samples: int = 3
+
+    def __post_init__(self) -> None:
+        if self.n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {self.n_shards}")
+        if not 1 <= self.shards_per_round <= self.n_shards:
+            raise ValueError(
+                f"shards_per_round must be in [1, n_shards="
+                f"{self.n_shards}], got {self.shards_per_round}"
+            )
+        if self.j_shards < 1:
+            raise ValueError(f"j_shards must be >= 1, got {self.j_shards}")
+        if self.min_samples < 1:
+            raise ValueError(
+                f"min_samples must be >= 1, got {self.min_samples}"
+            )
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PopulationConfig":
+        known = {f.name for f in fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(
+                f"unknown PopulationConfig keys: {sorted(unknown)}"
+            )
+        return cls(**d)

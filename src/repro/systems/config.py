@@ -42,6 +42,13 @@ class SystemsConfig:
       drop stragglers and still aggregate ~m updates.
     - ``jitter_sigma`` — lognormal sigma of per-round compute-time
       noise (0 = deterministic device times).
+    - ``track_energy`` — battery accounting (ROADMAP (q)): each
+      dispatched-and-online client spends
+      ``steps · profile.energy_per_step`` mAh per round; a drained
+      battery makes the client unavailable (the same ``-inf`` admission
+      gate availability uses), and ``RoundResult.metrics`` reports the
+      cohort spend.  Off by default — the ledger is extra cross-round
+      state the fused / async execution modes reject.
     """
 
     profile: str = "uniform"
@@ -51,6 +58,7 @@ class SystemsConfig:
     deadline_s: float | None = None
     over_select: float = 1.0
     jitter_sigma: float = 0.0
+    track_energy: bool = False
 
     def __post_init__(self) -> None:
         from repro.systems.profiles import (
@@ -89,6 +97,7 @@ class SystemsConfig:
             )
         if self.deadline_s is not None:
             self.deadline_s = float(self.deadline_s)
+        self.track_energy = bool(self.track_energy)
 
     def m_effective(self, m: int, n_clients: int) -> int:
         """Dispatched cohort size: ``ceil(m · over_select)``, clipped to

@@ -68,24 +68,55 @@ AVAILABILITY_STREAM = 0x5E3D_0002
 JITTER_STREAM = 0x5E3D_0003
 
 
+# Per-tier energy defaults (ROADMAP (q)): mAh drawn per local SGD step,
+# and battery capacity in mAh — flagship tiers are both more efficient
+# per step and carry bigger batteries.  Tiers beyond the table clamp to
+# the last row.
+_TIER_ENERGY_PER_STEP = (0.010, 0.015, 0.025, 0.040)
+_TIER_BATTERY_MAH = (4500.0, 4000.0, 3000.0, 2200.0)
+
+
 @dataclass(frozen=True)
 class DeviceProfile:
-    """Static per-client hardware description (all arrays (K,))."""
+    """Static per-client hardware description (all arrays (K,)).
+
+    ``energy_per_step`` / ``battery_mah`` (ROADMAP (q)) default to
+    tier-derived values (``_TIER_ENERGY_PER_STEP`` / ``_TIER_BATTERY_MAH``)
+    when a preset leaves them ``None`` — so every existing preset gains
+    an energy model without changing its signature.  They are inert
+    until ``SystemsConfig.track_energy`` turns the battery ledger on.
+    """
 
     compute_speed: np.ndarray   # local SGD steps per simulated second
     down_mbps: np.ndarray       # server → client link, Mbit/s
     up_mbps: np.ndarray         # client → server link, Mbit/s
     tier: np.ndarray            # int device class, 0 = fastest tier
+    energy_per_step: np.ndarray | None = None  # mAh per local SGD step
+    battery_mah: np.ndarray | None = None      # battery capacity, mAh
 
     def __post_init__(self) -> None:
         k = self.compute_speed.shape[0]
-        for name in ("compute_speed", "down_mbps", "up_mbps", "tier"):
+        if self.energy_per_step is None:
+            idx = np.clip(self.tier, 0, len(_TIER_ENERGY_PER_STEP) - 1)
+            object.__setattr__(
+                self, "energy_per_step",
+                np.asarray(_TIER_ENERGY_PER_STEP)[idx].astype(np.float64),
+            )
+        if self.battery_mah is None:
+            idx = np.clip(self.tier, 0, len(_TIER_BATTERY_MAH) - 1)
+            object.__setattr__(
+                self, "battery_mah",
+                np.asarray(_TIER_BATTERY_MAH)[idx].astype(np.float64),
+            )
+        for name in ("compute_speed", "down_mbps", "up_mbps", "tier",
+                     "energy_per_step", "battery_mah"):
             arr = getattr(self, name)
             if arr.shape != (k,):
                 raise ValueError(
                     f"DeviceProfile.{name} must be shape ({k},), got {arr.shape}"
                 )
-        for name in ("compute_speed", "down_mbps", "up_mbps"):
+        for name in ("compute_speed", "down_mbps", "up_mbps",
+                     "energy_per_step", "battery_mah"):
             if not (np.asarray(getattr(self, name)) > 0).all():
                 raise ValueError(f"DeviceProfile.{name} must be positive")
 

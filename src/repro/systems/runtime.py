@@ -56,11 +56,27 @@ class SystemsRuntime:
             jitter_sigma=cfg.jitter_sigma,
             seed=seed,
         )
+        # Battery ledger (ROADMAP (q)): per-client remaining charge in
+        # mAh, spent by spend_energy() after each dispatch.  None when
+        # tracking is off — every path below stays bit-identical then.
+        self._steps = np.asarray(steps)
+        self.tracks_energy = bool(cfg.track_energy)
+        self.battery_mah: np.ndarray | None = (
+            np.asarray(self.profile.battery_mah, np.float64).copy()
+            if self.tracks_energy else None
+        )
+        self.energy_total_mah = 0.0
 
     # ------------------------------------------------------------------
     def available(self, t: int) -> np.ndarray:
-        """(K,) bool online states at round ``t``."""
-        return self.availability.mask(t)
+        """(K,) bool online states at round ``t`` — the availability
+        trace, AND a non-drained battery when energy tracking is on (a
+        depleted client is unavailable through the same admission gate,
+        ROADMAP (q))."""
+        mask = self.availability.mask(t)
+        if self.battery_mah is not None:
+            mask = mask & (self.battery_mah > 0.0)
+        return mask
 
     def times(self, t: int) -> np.ndarray:
         """(K,) simulated per-client round durations at round ``t``."""
@@ -90,6 +106,34 @@ class SystemsRuntime:
         """Same, from a (K,) participation mask (the fused scan output)."""
         return self.outcome(t, np.where(np.asarray(sel_mask, bool))[0])
 
+    # -- energy ledger (ROADMAP (q)) -----------------------------------
+    def spend_energy(self, t: int, dispatched: np.ndarray) -> dict:
+        """Charge the round's dispatched-and-online clients their local
+        training energy (``steps · energy_per_step`` mAh, clipped at
+        empty) and return the round's energy metrics.  Spend is gated on
+        the *pre-spend* availability — a client that went offline (or
+        was already drained) before dispatch never ran its steps."""
+        assert self.battery_mah is not None, "spend_energy without track_energy"
+        sel = np.asarray(dispatched, np.int64)
+        online = self.available(t)
+        spenders = sel[online[sel]]
+        draw = (
+            self._steps[spenders]
+            * np.asarray(self.profile.energy_per_step)[spenders]
+        )
+        spent = float(
+            np.minimum(draw, self.battery_mah[spenders]).sum()
+        )
+        self.battery_mah[spenders] = np.maximum(
+            self.battery_mah[spenders] - draw, 0.0
+        )
+        self.energy_total_mah += spent
+        return {
+            "energy_mah": spent,
+            "energy_total_mah": float(self.energy_total_mah),
+            "n_depleted": int((self.battery_mah <= 0.0).sum()),
+        }
+
     # -- checkpoint contract (DESIGN.md §12) ---------------------------
     def state_dict(self) -> dict:
         """The runtime's checkpoint carry — **empty by contract**.
@@ -117,15 +161,39 @@ class SystemsRuntime:
         - the one accumulated scalar, ``engine.sim_clock``, is
           checkpointed by the engine itself in its meta.
 
-        The hooks exist so a future *genuinely* stateful runtime (e.g.
-        trace-driven availability with a file cursor) slots into the
-        same save path.
+        The hooks exist so a *genuinely* stateful runtime slots into the
+        same save path — and the energy ledger (ROADMAP (q)) is exactly
+        that: battery charge accumulates across rounds as a function of
+        the selection history, so with ``track_energy`` on, the carry
+        holds the per-client remaining mAh and the cumulative spend.
+        With it off the contract above is unchanged (still ``{}``).
         """
-        return {}
+        if self.battery_mah is None:
+            return {}
+        return {
+            "battery_mah": [float(b) for b in self.battery_mah],
+            "energy_total_mah": float(self.energy_total_mah),
+        }
 
     def load_state_dict(self, state: dict) -> None:
+        if self.battery_mah is not None:
+            batt = state.get("battery_mah")
+            if batt is None or len(batt) != self.battery_mah.shape[0]:
+                raise ValueError(
+                    f"energy-tracking run but the checkpoint carries "
+                    f"{None if batt is None else len(batt)} battery "
+                    f"entries, expected {self.battery_mah.shape[0]}"
+                )
+            self.battery_mah = np.asarray(batt, np.float64)
+            self.energy_total_mah = float(state.get("energy_total_mah", 0.0))
+            extra = set(state) - {"battery_mah", "energy_total_mah"}
+            if extra:
+                raise ValueError(
+                    f"unknown systems checkpoint keys {sorted(extra)}"
+                )
+            return
         if state:
             raise ValueError(
-                f"SystemsRuntime is stateless but the checkpoint carries "
-                f"systems state keys {sorted(state)}"
+                f"SystemsRuntime carries no state for this config but the "
+                f"checkpoint has systems state keys {sorted(state)}"
             )

@@ -1,0 +1,539 @@
+"""Population axis (DESIGN.md §15) + energy ledger (ROADMAP (q)).
+
+Covers the PR's acceptance cells:
+
+- store determinism per (seed, shard) and ShardedStore ≡ InMemoryStore
+  cohort bit-identity;
+- lazy materialization: only resident shards are ever synthesized;
+- blocked Hellinger ≡ dense (and the dense-budget ResourceWarning);
+- one-shard hierarchical ≡ flat, bit-identical per mask strategy on the
+  host and compiled backends;
+- population config cross-validation and checkpoint carry;
+- battery accounting: per-round metrics, depletion gating availability,
+  and the state_dict round-trip.
+"""
+
+import os
+import sys
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(__file__))
+from conftest import fl_cfg  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# stores
+# ---------------------------------------------------------------------------
+def test_shard_layout_contiguous_near_equal():
+    from repro.population import shard_layout
+
+    shards = shard_layout(103, 7)
+    assert len(shards) == 7
+    flat = np.concatenate(shards)
+    np.testing.assert_array_equal(flat, np.arange(103))  # contiguous blocks
+    sizes = {len(s) for s in shards}
+    assert max(sizes) - min(sizes) <= 1
+    with pytest.raises(ValueError):
+        shard_layout(5, 6)
+    with pytest.raises(ValueError):
+        shard_layout(5, 0)
+
+
+def test_synthetic_loader_deterministic_per_seed_and_shard():
+    from repro.population import SyntheticShardLoader, shard_layout
+
+    loader = SyntheticShardLoader(seed=7, n_classes=6, n_features=8)
+    members = shard_layout(64, 4)[2]
+    a = loader.load(2, members)
+    b = loader.load(2, members)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)  # bit-identical reload
+    # summary replays the label stream only, bit-identical to load's
+    sizes, hists = loader.summary(2, members)
+    np.testing.assert_array_equal(sizes, a.sizes)
+    np.testing.assert_array_equal(hists, a.hists)
+    # a different shard / different seed gives different data
+    c = loader.load(3, members)
+    assert not np.array_equal(a.ys, c.ys)
+    d = SyntheticShardLoader(seed=8, n_classes=6, n_features=8).load(2, members)
+    assert not np.array_equal(a.ys, d.ys)
+
+
+def test_sharded_store_gathers_bitidentical_to_inmemory():
+    from repro.population import (
+        ShardedStore,
+        SyntheticShardLoader,
+        materialize_store,
+    )
+
+    store = ShardedStore(
+        SyntheticShardLoader(seed=3, n_classes=5, n_features=6),
+        n_clients=48, n_shards=6,
+    )
+    flat = materialize_store(store)
+    np.testing.assert_array_equal(store.client_sizes(), flat.client_sizes())
+    np.testing.assert_array_equal(store.client_hists(), flat.client_hists())
+    # scattered, unsorted cohort spanning several shards
+    idx = np.array([45, 3, 17, 30, 4, 44])
+    for a, b in zip(store.gather(idx), flat.gather(idx)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sharded_store_is_lazy_with_lru_bound():
+    from repro.population import ShardedStore, SyntheticShardLoader
+
+    store = ShardedStore(
+        SyntheticShardLoader(seed=1, n_classes=4, n_features=5),
+        n_clients=40, n_shards=8, max_cached_shards=2,
+    )
+    # summaries (sizes / hists / shard_hists) never materialize features
+    store.shard_hists()
+    assert store.materialized_shards() == ()
+    assert store.load_count == 0
+    xs0, _, _ = store.gather(store.shard_members(1))
+    assert store.materialized_shards() == (1,)
+    store.gather(store.shard_members(5))
+    store.gather(store.shard_members(6))  # evicts shard 1 (LRU bound 2)
+    assert store.cached_shards() == (5, 6)
+    assert store.materialized_shards() == (1, 5, 6)
+    # reloading the evicted shard is bit-identical
+    xs1, _, _ = store.gather(store.shard_members(1))
+    np.testing.assert_array_equal(np.asarray(xs0), np.asarray(xs1))
+    assert store.load_count == 4
+
+
+# ---------------------------------------------------------------------------
+# blocked Hellinger
+# ---------------------------------------------------------------------------
+def test_blocked_hellinger_matches_dense():
+    import jax.numpy as jnp
+
+    from repro.core.hellinger import hellinger_blocked, hellinger_matrix
+
+    rng = np.random.default_rng(0)
+    h = rng.random((37, 11)) + 1e-6
+    dense = np.asarray(hellinger_matrix(jnp.asarray(h)))
+    # block smaller than K forces multiple strips (the regression the
+    # strategies.py call sites rely on)
+    for block in (8, 37, 4096):
+        blocked = hellinger_blocked(h, block=block)
+        np.testing.assert_allclose(blocked, dense, atol=2e-6)
+    np.testing.assert_array_equal(np.diag(hellinger_blocked(h)), 0.0)
+
+
+def test_blocked_hellinger_rows_strip():
+    import jax.numpy as jnp
+
+    from repro.core.hellinger import hellinger_matrix, hellinger_rows
+
+    rng = np.random.default_rng(1)
+    h = rng.random((20, 7)) + 1e-6
+    dense = np.asarray(hellinger_matrix(jnp.asarray(h)))
+    strip = hellinger_rows(h[5:9], h)
+    assert strip.shape == (4, 20)
+    off_diag = ~np.eye(20, dtype=bool)[5:9]
+    np.testing.assert_allclose(strip[off_diag], dense[5:9][off_diag], atol=2e-6)
+
+
+def test_dense_budget_warning_configurable():
+    from repro.core.hellinger import (
+        dense_budget_bytes,
+        hellinger_blocked,
+        set_dense_budget_bytes,
+    )
+
+    h = np.random.default_rng(2).random((64, 8)) + 1e-6
+    old = set_dense_budget_bytes(64 * 64 * 4 - 1)  # force the guard
+    try:
+        with pytest.warns(ResourceWarning, match="dense"):
+            hellinger_blocked(h)
+        # raising the budget (or passing one per-call) silences it
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            hellinger_blocked(h, budget_bytes=1 << 30)
+    finally:
+        set_dense_budget_bytes(old)
+    assert dense_budget_bytes() == old
+
+
+def test_strategies_route_through_blocked_build():
+    """The two dense call sites (FedLECC auto-clustering, FedCor's
+    K-matrix) now route through hellinger_blocked — same clusters, same
+    selections as the dense build they replaced."""
+    from repro.core.strategies import FedCor, FedLECC
+
+    rng = np.random.default_rng(3)
+    hists = rng.dirichlet(np.ones(10) * 0.3, size=30)
+    sizes = rng.integers(10, 50, size=30)
+    s = FedLECC(m=6, J=3)
+    s.setup(hists, sizes, seed=0)
+    sel = s.select(0, rng.random(30).astype(np.float32), np.random.default_rng(0))
+    assert len(sel) == 6
+    c = FedCor(m=6)
+    c.setup(hists, sizes, seed=0)
+    sel2 = c.select(0, rng.random(30).astype(np.float32), np.random.default_rng(0))
+    assert len(sel2) == 6
+
+
+# ---------------------------------------------------------------------------
+# hierarchy
+# ---------------------------------------------------------------------------
+def _sharded_store(n_clients=96, n_shards=8, seed=5):
+    from repro.population import ShardedStore, SyntheticShardLoader
+
+    return ShardedStore(
+        SyntheticShardLoader(seed=seed, n_classes=6, n_features=8),
+        n_clients=n_clients, n_shards=n_shards,
+    )
+
+
+def test_hierarchy_explore_first_then_ranks_by_loss():
+    from repro.population import HierarchicalSelector, PopulationConfig
+
+    store = _sharded_store()
+    cfg = PopulationConfig(n_shards=8, shards_per_round=2, j_shards=2)
+    sel = HierarchicalSelector(cfg, store, seed=0, needs_losses=True)
+    assert np.isinf(sel.estimates).all()  # unexplored shards rank first
+    seen = set()
+    for rnd in range(6):
+        shards, members = sel.begin_round(rnd)
+        assert len(shards) == 2
+        np.testing.assert_array_equal(
+            members,
+            np.concatenate([store.shard_members(int(s)) for s in shards]),
+        )
+        seen.update(int(s) for s in shards)
+        losses = np.full(store.n_clients, -np.inf, np.float32)
+        losses[members] = 1.0 + np.asarray(members, np.float32) / 100.0
+        sel.observe(losses)
+    assert len(seen) > 2  # +inf estimates force exploration across shards
+    # estimates of explored shards became finite member means
+    explored = [s for s in range(8) if np.isfinite(sel.estimates[s])]
+    assert set(explored) == seen
+
+
+def test_hierarchy_resident_shards_bound_materialization():
+    """The population-proportionality proof obligation: a ShardedStore
+    driven by hierarchical selection synthesizes exactly the shards the
+    shard-level Algorithm 1 visited — never the full range."""
+    from repro.population import HierarchicalSelector, PopulationConfig
+
+    store = _sharded_store(n_clients=160, n_shards=16)
+    cfg = PopulationConfig(n_shards=16, shards_per_round=2, j_shards=2)
+    sel = HierarchicalSelector(cfg, store, seed=0, needs_losses=True)
+    visited = set()
+    for rnd in range(3):
+        shards, members = sel.begin_round(rnd)
+        visited.update(int(s) for s in shards)
+        store.gather(members)  # what the engine's poll does
+        losses = np.zeros(store.n_clients, np.float32)
+        losses[members] = 1.0
+        sel.observe(losses)
+    assert set(store.materialized_shards()) == visited
+    assert len(store.materialized_shards()) <= 6 < store.n_shards
+
+
+def test_hierarchy_select_cohort_matches_loss_rank():
+    from repro.population import HierarchicalSelector, PopulationConfig
+
+    store = _sharded_store()
+    cfg = PopulationConfig(n_shards=8, shards_per_round=3, j_shards=2)
+    sel = HierarchicalSelector(cfg, store, seed=0, needs_losses=True)
+    _, members = sel.begin_round(0)
+    rng = np.random.default_rng(0)
+    member_losses = rng.random(len(members)).astype(np.float32)
+    cohort = sel.select_cohort(member_losses, m=5)
+    # reference: top-m by loss over the resident members
+    ref = np.sort(members[np.argsort(-member_losses)[:5]])
+    np.testing.assert_array_equal(cohort, ref)
+
+
+def test_hierarchy_state_roundtrip():
+    from repro.population import HierarchicalSelector, PopulationConfig
+
+    store = _sharded_store()
+    cfg = PopulationConfig(n_shards=8, shards_per_round=2, j_shards=2)
+    a = HierarchicalSelector(cfg, store, seed=0)
+    a.estimates[3] = 1.25
+    b = HierarchicalSelector(cfg, store, seed=0)
+    b.load_state_dict(a.state_dict())
+    np.testing.assert_array_equal(a.estimates, b.estimates)
+    with pytest.raises(ValueError):
+        b.load_state_dict({"estimates": [1.0]})
+
+
+def test_one_shard_hierarchy_is_all_resident_no_rng():
+    from repro.population import (
+        HierarchicalSelector,
+        InMemoryStore,
+        PopulationConfig,
+    )
+
+    rng = np.random.default_rng(0)
+    store = InMemoryStore(
+        xs=rng.random((12, 4, 3), dtype=np.float32),
+        ys=rng.integers(0, 5, (12, 4)),
+        mask=np.ones((12, 4), np.float32),
+        sizes=np.full(12, 4),
+        hists=rng.dirichlet(np.ones(5), size=12),
+        n_shards=1,
+    )
+    sel = HierarchicalSelector(
+        PopulationConfig(n_shards=1), store, seed=0, needs_losses=False
+    )
+    shards, members = sel.begin_round(0)
+    np.testing.assert_array_equal(shards, [0])
+    np.testing.assert_array_equal(members, np.arange(12))
+    assert sel.resident_mask().all()
+
+
+# ---------------------------------------------------------------------------
+# config validation
+# ---------------------------------------------------------------------------
+def test_population_config_validation():
+    from repro.population import PopulationConfig
+
+    with pytest.raises(ValueError):
+        PopulationConfig(n_shards=0)
+    with pytest.raises(ValueError):
+        PopulationConfig(n_shards=4, shards_per_round=5)
+    with pytest.raises(ValueError):
+        PopulationConfig.from_dict({"n_shards": 2, "bogus": 1})
+    cfg = PopulationConfig.from_dict({"n_shards": 4, "shards_per_round": 2})
+    assert cfg.n_shards == 4 and cfg.shards_per_round == 2
+
+
+def test_flconfig_population_cross_validation():
+    with pytest.raises(ValueError, match="population"):
+        fl_cfg(backend="scaleout", population={"n_shards": 2})
+    with pytest.raises(ValueError, match="population"):
+        fl_cfg(backend="compiled", fuse_rounds=2, population={"n_shards": 2})
+    with pytest.raises(ValueError, match="population"):
+        fl_cfg(async_mode={"buffer_k": 2}, systems={},
+               population={"n_shards": 2})
+    with pytest.raises(ValueError, match="population"):
+        fl_cfg(client_mode="fedprox", population={"n_shards": 2})
+    with pytest.raises(ValueError, match="n_shards"):
+        fl_cfg(population={"n_shards": 99})
+    # dict form normalizes and round-trips through to_dict/from_dict
+    from repro.engine import FLConfig
+    from repro.population import PopulationConfig
+
+    cfg = fl_cfg(population={"n_shards": 3, "shards_per_round": 2})
+    assert isinstance(cfg.population, PopulationConfig)
+    cfg2 = FLConfig.from_dict(cfg.to_dict())
+    assert cfg2.population == cfg.population
+
+
+def test_flconfig_energy_cross_validation():
+    with pytest.raises(ValueError, match="track_energy"):
+        fl_cfg(backend="compiled", fuse_rounds=2,
+               systems={"track_energy": True})
+    with pytest.raises(ValueError, match="track_energy"):
+        fl_cfg(async_mode={"buffer_k": 2}, systems={"track_energy": True})
+
+
+def test_engine_rejects_undersized_resident_shards(data):
+    from repro.engine import make_engine
+
+    train, test = data
+    cfg = fl_cfg(m=8, population={"n_shards": 6, "shards_per_round": 1})
+    with pytest.raises(ValueError, match="m_eff"):
+        make_engine(cfg, train, test, n_classes=10)
+
+
+# ---------------------------------------------------------------------------
+# engine conformance: one shard ≡ flat, bit-identical
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["host", "compiled"])
+@pytest.mark.parametrize("strategy", ["fedlecc", "random", "lossonly"])
+def test_one_shard_population_bitidentical_to_flat(strategy, backend, data):
+    from repro.engine import make_engine
+
+    train, test = data
+    kw = {"strategy_kwargs": {"J": 3}} if strategy == "fedlecc" else {}
+    flat = make_engine(
+        fl_cfg(strategy=strategy, backend=backend, rounds=2, **kw),
+        train, test, n_classes=10,
+    )
+    pop = make_engine(
+        fl_cfg(strategy=strategy, backend=backend, rounds=2,
+               population={"n_shards": 1}, **kw),
+        train, test, n_classes=10,
+    )
+    for a, b in zip(flat.rounds(), pop.rounds()):
+        assert a.selected == b.selected
+        assert a.mean_selected_loss == b.mean_selected_loss
+        assert a.test_loss == b.test_loss and a.test_acc == b.test_acc
+        assert a.comm_mb == b.comm_mb
+    for x, y in zip(jax.tree.leaves(flat.params), jax.tree.leaves(pop.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("backend", ["host", "compiled"])
+def test_population_cohort_stays_inside_resident_shards(backend, data):
+    from repro.engine import make_engine
+
+    train, test = data
+    cfg = fl_cfg(backend=backend, rounds=3,
+                 population={"n_shards": 4, "shards_per_round": 2,
+                             "j_shards": 2})
+    eng = make_engine(cfg, train, test, n_classes=10)
+    for r in eng.rounds():
+        members = set(int(i) for i in eng._pop_members)
+        assert set(r.selected) <= members
+        assert len(members) < cfg.n_clients  # genuinely partial residency
+
+
+def test_population_comm_counts_resident_polls_only(data):
+    from repro.engine import make_engine
+
+    train, test = data
+    flat = make_engine(fl_cfg(rounds=2), train, test, n_classes=10)
+    pop = make_engine(
+        fl_cfg(rounds=2, population={"n_shards": 4, "shards_per_round": 2,
+                                     "j_shards": 2}),
+        train, test, n_classes=10,
+    )
+    fr = [r.comm_mb for r in flat.rounds()]
+    pr = [r.comm_mb for r in pop.rounds()]
+    # same model traffic, strictly fewer loss-poll bytes each round
+    assert all(p < f for p, f in zip(pr, fr))
+    expected_gap = 2 * (12 - 6) * 4 / (1024.0 * 1024.0)  # 2 rounds × 6 clients
+    np.testing.assert_allclose(fr[-1] - pr[-1], expected_gap, rtol=1e-6)
+
+
+def test_population_checkpoint_roundtrip(tmp_path, data):
+    from repro.engine import make_engine
+
+    train, test = data
+    cfg = fl_cfg(rounds=4, population={"n_shards": 3, "shards_per_round": 2,
+                                       "j_shards": 2})
+    eng = make_engine(cfg, train, test, n_classes=10)
+    it = eng.rounds()
+    next(it); next(it)
+    path = str(tmp_path / "pop.ckpt")
+    eng.save(path)
+    tail = list(it)
+    resumed = make_engine(cfg, train, test, n_classes=10, resume=path)
+    np.testing.assert_array_equal(
+        resumed._population.estimates, eng._population.estimates
+    ) if len(tail) == 0 else None
+    tail2 = list(resumed.rounds())
+    assert [r.selected for r in tail] == [r.selected for r in tail2]
+    assert [r.test_acc for r in tail] == [r.test_acc for r in tail2]
+
+
+# ---------------------------------------------------------------------------
+# energy ledger (ROADMAP (q))
+# ---------------------------------------------------------------------------
+def test_device_profile_energy_defaults_tier_derived():
+    from repro.systems.profiles import make_profile
+
+    p = make_profile("mobile_mix", 32, seed=0)
+    assert p.energy_per_step.shape == (32,) and (p.energy_per_step > 0).all()
+    assert p.battery_mah.shape == (32,) and (p.battery_mah > 0).all()
+    # weaker tiers burn more per step and carry smaller batteries
+    lo, hi = p.tier.min(), p.tier.max()
+    if lo != hi:
+        assert (p.energy_per_step[p.tier == hi].mean()
+                > p.energy_per_step[p.tier == lo].mean())
+        assert (p.battery_mah[p.tier == hi].mean()
+                < p.battery_mah[p.tier == lo].mean())
+
+
+def test_energy_metrics_reported_every_round(data):
+    from repro.engine import make_engine
+
+    train, test = data
+    cfg = fl_cfg(rounds=3, eval_every=2,
+                 systems={"profile": "mobile_mix", "track_energy": True})
+    eng = make_engine(cfg, train, test, n_classes=10)
+    total = 0.0
+    for r in eng.rounds():
+        assert r.metrics is not None
+        assert r.metrics["energy_mah"] >= 0.0
+        assert r.metrics["energy_total_mah"] >= total
+        total = r.metrics["energy_total_mah"]
+    assert total > 0.0
+    assert eng._systems.energy_total_mah == pytest.approx(total)
+
+
+def test_energy_depletion_gates_availability(data):
+    from repro.engine import make_engine
+
+    train, test = data
+    cfg = fl_cfg(rounds=4, systems={"track_energy": True})
+    eng = make_engine(cfg, train, test, n_classes=10)
+    # drain three clients up front: they must never be selected
+    eng._systems.battery_mah[[0, 1, 2]] = 0.0
+    assert not eng._systems.available(0)[:3].any()
+    for r in eng.rounds():
+        assert not ({0, 1, 2} & set(r.selected))
+        assert r.metrics["n_depleted"] >= 3
+
+
+def test_energy_spend_clips_at_empty():
+    from repro.systems.config import SystemsConfig
+    from repro.systems.runtime import SystemsRuntime
+
+    rt = SystemsRuntime(
+        SystemsConfig(track_energy=True), n_clients=4,
+        steps=np.array([5, 5, 5, 5]), n_params=10,
+    )
+    rt.battery_mah[:] = 0.01  # less than one round's draw
+    out = rt.spend_energy(0, np.array([0, 1]))
+    assert out["energy_mah"] == pytest.approx(0.02)
+    assert (rt.battery_mah[:2] == 0.0).all()
+    assert out["n_depleted"] == 2
+    # a drained client is offline at the next round's gate
+    assert not rt.available(1)[:2].any()
+
+
+def test_energy_state_dict_roundtrip_and_off_contract():
+    from repro.systems.config import SystemsConfig
+    from repro.systems.runtime import SystemsRuntime
+
+    def mk(track):
+        return SystemsRuntime(
+            SystemsConfig(track_energy=track), n_clients=3,
+            steps=np.array([2, 2, 2]), n_params=10,
+        )
+    off = mk(False)
+    assert off.state_dict() == {}  # stateless contract unchanged
+    with pytest.raises(ValueError):
+        off.load_state_dict({"battery_mah": [1.0, 1.0, 1.0]})
+    on = mk(True)
+    on.spend_energy(0, np.array([0]))
+    st = on.state_dict()
+    assert set(st) == {"battery_mah", "energy_total_mah"}
+    on2 = mk(True)
+    on2.load_state_dict(st)
+    np.testing.assert_array_equal(on2.battery_mah, on.battery_mah)
+    assert on2.energy_total_mah == on.energy_total_mah
+    with pytest.raises(ValueError):
+        mk(True).load_state_dict({})
+
+
+def test_energy_checkpoint_resume_bitidentical(tmp_path, data):
+    from repro.engine import make_engine
+
+    train, test = data
+    cfg = fl_cfg(rounds=4, systems={"profile": "mobile_mix",
+                                    "track_energy": True})
+    eng = make_engine(cfg, train, test, n_classes=10)
+    it = eng.rounds()
+    next(it); next(it)
+    path = str(tmp_path / "energy.ckpt")
+    eng.save(path)
+    tail = list(it)
+    resumed = make_engine(cfg, train, test, n_classes=10, resume=path)
+    tail2 = list(resumed.rounds())
+    for a, b in zip(tail, tail2):
+        assert a.selected == b.selected
+        assert a.metrics["energy_total_mah"] == b.metrics["energy_total_mah"]
+        assert a.metrics["n_depleted"] == b.metrics["n_depleted"]
